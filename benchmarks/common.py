@@ -1,0 +1,107 @@
+"""Shared benchmark substrate: datasets at the paper's operating points
+(scaled for the CPU container), trained estimators (cached), timing.
+
+Paper datasets -> seeded vMF stand-ins (DESIGN.md §6):
+    NYT-150k   (256-d, bag-of-words)   -> nyt:   d=256, looser clusters
+    Glove-150k (200-d, word embeds)    -> glove: d=200
+    MS-150k    (768-d, passage embeds) -> ms:    d=768, hardest (curse of dim)
+Scale factor: --profile quick|standard|large (1/50, 1/10, 1/5 of 150k).
+All methods run on the SAME test split with the SAME (ε, τ), mirroring
+§3.1: estimator trains on the 80% split, evaluation on the 20% split.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dbscan import DBSCANResult, dbscan_parallel
+from repro.core.metrics import adjusted_mutual_info, adjusted_rand_index
+from repro.core.pipeline import LAFPipeline
+from repro.data.synthetic import make_angular_clusters, train_test_split
+
+ART = Path("artifacts/benchmarks")
+
+PROFILES = {
+    "quick": dict(n=3000, epochs=3, eps_grid=(0.3, 0.4, 0.5, 0.6)),
+    "standard": dict(n=15000, epochs=6, eps_grid=(0.2, 0.3, 0.4, 0.5, 0.6, 0.7)),
+    "large": dict(n=30000, epochs=8, eps_grid=(0.2, 0.3, 0.4, 0.5, 0.6, 0.7)),
+}
+
+# operating points chosen (via the Table-2-style grid in table2_noise.py)
+# to land in the paper's regime: low-to-mid noise ratio, >20 clusters.
+# vMF concentration: within-cluster cosine distance concentrates near
+# (d-1)/kappa, so kappa = (d-1)/0.30 puts typical same-cluster pairs at
+# d_cos ~ 0.3 — inside the paper's eps range (0.5-0.6) with headroom,
+# while inter-cluster/noise pairs sit near 1.0 (orthogonality in high d).
+DATASETS = {
+    "nyt": dict(d=256, n_clusters=80, kappa=850.0, noise_frac=0.35, seed=11),
+    "glove": dict(d=200, n_clusters=80, kappa=660.0, noise_frac=0.35, seed=12),
+    "ms": dict(d=768, n_clusters=80, kappa=2560.0, noise_frac=0.40, seed=13),
+}
+
+# paper Table 1 α values (ad-hoc per dataset); ours are re-tuned per
+# dataset at benchmark scale by the same grid-search procedure (§3.2)
+ALPHAS = {"nyt": 1.15, "glove": 2.0, "ms": 1.5}
+
+EPS_TAU = [(0.5, 3), (0.55, 5), (0.6, 5)]
+
+
+@dataclass
+class Prepared:
+    name: str
+    train: np.ndarray
+    test: np.ndarray
+    pipeline: LAFPipeline
+    alpha: float
+
+
+_CACHE: Dict[str, Prepared] = {}
+
+
+def prepare(name: str, profile: str = "standard", scale: float = 1.0) -> Prepared:
+    key = f"{name}:{profile}:{scale}"
+    if key in _CACHE:
+        return _CACHE[key]
+    prof = PROFILES[profile]
+    spec = DATASETS[name]
+    n = int(prof["n"] * scale)
+    data, _ = make_angular_clusters(
+        n, spec["d"], spec["n_clusters"], kappa=spec["kappa"],
+        noise_frac=spec["noise_frac"], seed=spec["seed"],
+    )
+    train, test = train_test_split(data, 0.8, seed=0)
+    pipe = LAFPipeline(eps_grid=prof["eps_grid"], epochs=prof["epochs"], seed=0)
+    pipe.fit(train)
+    prep = Prepared(name, train, test, pipe, ALPHAS[name])
+    _CACHE[key] = prep
+    return prep
+
+
+def ground_truth(prep: Prepared, eps: float, tau: int) -> DBSCANResult:
+    return dbscan_parallel(prep.test, eps, tau)
+
+
+def quality(labels, gt_labels) -> Dict[str, float]:
+    return {
+        "ARI": adjusted_rand_index(labels, gt_labels),
+        "AMI": adjusted_mutual_info(labels, gt_labels),
+    }
+
+
+def timed(fn: Callable, *args, **kw) -> Tuple[float, object]:
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return time.time() - t0, out
+
+
+def save_json(name: str, obj) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    p = ART / f"{name}.json"
+    p.write_text(json.dumps(obj, indent=2, default=float))
+    return p

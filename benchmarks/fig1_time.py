@@ -1,0 +1,51 @@
+"""Figure 1: clustering time of all methods (incl. exact DBSCAN) on the
+three datasets — the headline speedup claim (C1: LAF-DBSCAN up to 2.9x
+over DBSCAN; faster than the approximate baselines)."""
+
+from __future__ import annotations
+
+from .common import EPS_TAU, prepare, save_json
+from .methods import APPROX_METHODS, run_method
+
+
+def run(profile: str = "standard", datasets=("nyt", "glove", "ms")):
+    rows = []
+    for ds in datasets:
+        prep = prepare(ds, profile)
+        for eps, tau in EPS_TAU:
+            for method in ["DBSCAN"] + APPROX_METHODS:
+                t, res = run_method(method, prep, eps, tau)
+                rows.append({
+                    "dataset": ds, "eps": eps, "tau": tau, "method": method,
+                    "time_s": t, "queries": res.n_range_queries,
+                    "n": len(prep.test),
+                })
+    save_json("fig1_time", rows)
+    return rows
+
+
+def summarize(rows):
+    lines = ["fig1: clustering time (s) + executed range queries"]
+    speedups = []
+    for ds in sorted({r["dataset"] for r in rows}):
+        for eps, tau in sorted({(r["eps"], r["tau"]) for r in rows}):
+            sub = {r["method"]: r for r in rows
+                   if r["dataset"] == ds and r["eps"] == eps and r["tau"] == tau}
+            if "DBSCAN" not in sub:
+                continue
+            base = sub["DBSCAN"]["time_s"]
+            lines.append(f"  {ds} (eps={eps}, tau={tau}): DBSCAN={base:.2f}s")
+            for m, r in sub.items():
+                if m == "DBSCAN":
+                    continue
+                sp = base / max(r["time_s"], 1e-9)
+                lines.append(
+                    f"    {m:13s} {r['time_s']:.2f}s  speedup x{sp:.2f}  "
+                    f"queries {r['queries']}/{sub['DBSCAN']['queries']}"
+                )
+                if m == "LAF-DBSCAN":
+                    speedups.append(sp)
+    if speedups:
+        lines.append(f"  LAF-DBSCAN speedup over DBSCAN: max x{max(speedups):.2f}, "
+                     f"median x{sorted(speedups)[len(speedups)//2]:.2f}")
+    return "\n".join(lines)

@@ -1,0 +1,74 @@
+"""Figures 2 & 3: speed-quality trade-off curves (claim C3).
+
+LAF-DBSCAN sweeps α (1.1 .. 15 per the paper); DBSCAN++/LAF-DBSCAN++
+sweep the sample-fraction offset δ (0.1 .. 0.9); KNN-BLOCK sweeps the
+candidate window.  eps=0.5, tau=3 as in §3.4."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import knn_block_dbscan
+from repro.core.dbscan_pp import auto_sample_fraction, dbscan_pp, laf_dbscan_pp
+from repro.core.laf_dbscan import laf_dbscan
+
+from .common import ground_truth, prepare, quality, save_json, timed
+
+ALPHA_SWEEP = (1.1, 1.5, 2.0, 3.0, 5.0, 8.0, 15.0)
+DELTA_SWEEP = (0.1, 0.3, 0.5, 0.7, 0.9)
+WINDOW_FRACS = (0.02, 0.05, 0.1, 0.2, 0.3)
+
+
+def run(profile: str = "standard", datasets=("ms", "glove")):
+    eps, tau = 0.5, 3
+    rows = []
+    for ds in datasets:
+        prep = prepare(ds, profile)
+        gt = ground_truth(prep, eps, tau)
+        if gt.n_clusters < 2:
+            continue
+        pred = prep.pipeline.predict_counts(prep.test, eps)
+        for a in ALPHA_SWEEP:
+            t, res = timed(laf_dbscan, prep.test, eps, tau, a, pred, seed=0)
+            rows.append({"dataset": ds, "method": "LAF-DBSCAN", "knob": f"alpha={a}",
+                         "time_s": t, **quality(res.labels, gt.labels)})
+        for dlt in DELTA_SWEEP:
+            p = auto_sample_fraction(pred, tau, prep.alpha, dlt)
+            t, res = timed(dbscan_pp, prep.test, eps, tau, p, seed=0)
+            rows.append({"dataset": ds, "method": "DBSCAN++", "knob": f"delta={dlt}",
+                         "time_s": t, **quality(res.labels, gt.labels)})
+            n = len(prep.test)
+            rng = np.random.default_rng(0)
+            m = max(1, int(round(p * n)))
+            sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+            t, res = timed(
+                laf_dbscan_pp, prep.test, eps, tau, p, pred[sample_idx],
+                alpha=1.0, sample_idx=sample_idx, seed=0,
+            )
+            rows.append({"dataset": ds, "method": "LAF-DBSCAN++", "knob": f"delta={dlt}",
+                         "time_s": t, **quality(res.labels, gt.labels)})
+        for wf in WINDOW_FRACS:
+            w = max(tau, int(wf * len(prep.test)))
+            t, res = timed(knn_block_dbscan, prep.test, eps, tau, n_proj=6, window=w, seed=0)
+            rows.append({"dataset": ds, "method": "KNN-BLOCK", "knob": f"window={w}",
+                         "time_s": t, **quality(res.labels, gt.labels)})
+    save_json("fig23_tradeoff", rows)
+    return rows
+
+
+def summarize(rows):
+    lines = ["fig2/3: speed-quality trade-off (eps=0.5, tau=3)"]
+    for ds in sorted({r["dataset"] for r in rows}):
+        lines.append(f"  {ds}:")
+        for m in ("LAF-DBSCAN", "LAF-DBSCAN++", "DBSCAN++", "KNN-BLOCK"):
+            pts = [r for r in rows if r["dataset"] == ds and r["method"] == m]
+            if not pts:
+                continue
+            curve = "  ".join(f"({r['time_s']:.1f}s,{r['AMI']:.2f})" for r in pts)
+            lines.append(f"    {m:13s} {curve}")
+        # claim C3: in the high-quality regime (AMI > 0.4) LAF methods are fastest
+        hq = [r for r in rows if r["dataset"] == ds and r["AMI"] > 0.4]
+        if hq:
+            best = min(hq, key=lambda r: r["time_s"])
+            lines.append(f"    fastest at AMI>0.4: {best['method']} ({best['time_s']:.1f}s)")
+    return "\n".join(lines)

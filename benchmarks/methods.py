@@ -1,0 +1,60 @@
+"""The method roster every benchmark table shares — one entry per method
+in the paper's evaluation (DBSCAN is the ground truth, not in tables)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.baselines import block_dbscan, knn_block_dbscan
+from repro.core.dbscan import dbscan_parallel
+from repro.core.dbscan_pp import auto_sample_fraction, dbscan_pp, laf_dbscan_pp
+from repro.core.laf_dbscan import laf_dbscan
+
+from .common import Prepared, timed
+
+
+def run_method(
+    method: str, prep: Prepared, eps: float, tau: int, *, alpha=None, delta=0.2
+):
+    """-> (elapsed_s, DBSCANResult)."""
+    test = prep.test
+    alpha = prep.alpha if alpha is None else alpha
+    if method == "DBSCAN":
+        return timed(dbscan_parallel, test, eps, tau)
+    if method == "LAF-DBSCAN":
+        def run():
+            pred = prep.pipeline.predict_counts(test, eps)
+            return laf_dbscan(test, eps, tau, alpha, pred, seed=0)
+        return timed(run)
+    if method == "DBSCAN++":
+        def run():
+            pred = prep.pipeline.predict_counts(test, eps)
+            p = auto_sample_fraction(pred, tau, alpha, delta)
+            return dbscan_pp(test, eps, tau, p, seed=0)
+        return timed(run)
+    if method == "LAF-DBSCAN++":
+        def run():
+            pred = prep.pipeline.predict_counts(test, eps)
+            p = auto_sample_fraction(pred, tau, alpha, delta)
+            n = len(test)
+            rng = np.random.default_rng(0)
+            m = max(1, int(round(p * n)))
+            sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+            return laf_dbscan_pp(
+                test, eps, tau, p, pred[sample_idx], alpha=1.0,
+                sample_idx=sample_idx, seed=0,
+            )
+        return timed(run)
+    if method == "KNN-BLOCK":
+        return timed(
+            knn_block_dbscan, test, eps, tau, n_proj=6,
+            window=max(tau, int(0.3 * len(test) / 2)), seed=0,
+        )
+    if method == "BLOCK-DBSCAN":
+        return timed(block_dbscan, test, eps, tau, rnt=10, seed=0)
+    raise KeyError(method)
+
+
+APPROX_METHODS = ["KNN-BLOCK", "BLOCK-DBSCAN", "DBSCAN++", "LAF-DBSCAN", "LAF-DBSCAN++"]

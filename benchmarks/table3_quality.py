@@ -1,0 +1,45 @@
+"""Table 3: ARI/AMI of the approximate methods on the three datasets at
+the paper's (ε, τ) settings, vs exact-DBSCAN ground truth."""
+
+from __future__ import annotations
+
+from .common import EPS_TAU, ground_truth, prepare, quality, save_json
+from .methods import APPROX_METHODS, run_method
+
+
+def run(profile: str = "standard", datasets=("nyt", "glove", "ms")):
+    rows = []
+    for ds in datasets:
+        prep = prepare(ds, profile)
+        for eps, tau in EPS_TAU:
+            gt = ground_truth(prep, eps, tau)
+            if gt.n_clusters < 2:
+                continue
+            for method in APPROX_METHODS:
+                t, res = run_method(method, prep, eps, tau)
+                q = quality(res.labels, gt.labels)
+                rows.append({
+                    "dataset": ds, "eps": eps, "tau": tau, "method": method,
+                    "ARI": q["ARI"], "AMI": q["AMI"], "time_s": t,
+                    "n_clusters": res.n_clusters,
+                    "gt_clusters": gt.n_clusters,
+                    "queries": res.n_range_queries,
+                })
+    save_json("table3_quality", rows)
+    return rows
+
+
+def summarize(rows):
+    lines = ["table3: method quality (ARI / AMI), higher is better"]
+    for ds in sorted({r["dataset"] for r in rows}):
+        for eps, tau in sorted({(r["eps"], r["tau"]) for r in rows}):
+            sub = [r for r in rows if r["dataset"] == ds and r["eps"] == eps and r["tau"] == tau]
+            if not sub:
+                continue
+            lines.append(f"  {ds} (eps={eps}, tau={tau}):")
+            for r in sorted(sub, key=lambda r: -r["ARI"]):
+                lines.append(
+                    f"    {r['method']:13s} ARI={r['ARI']:.4f} AMI={r['AMI']:.4f} "
+                    f"t={r['time_s']:.2f}s"
+                )
+    return "\n".join(lines)

@@ -1,0 +1,45 @@
+"""Table 5 + Figure 4: quality and time across dataset scales
+(MS-50k/100k/150k analogue at 1/3, 2/3, 1x of the benchmark scale),
+ε=0.55, τ=5 — claim C2/scalability: LAF methods' time grows slowest."""
+
+from __future__ import annotations
+
+from .common import ground_truth, prepare, quality, save_json
+from .methods import APPROX_METHODS, run_method
+
+
+def run(profile: str = "standard", scales=(1 / 3, 2 / 3, 1.0)):
+    eps, tau = 0.55, 5
+    rows = []
+    for scale in scales:
+        prep = prepare("ms", profile, scale=scale)
+        gt = ground_truth(prep, eps, tau)
+        _, base = run_method("DBSCAN", prep, eps, tau)
+        t_db, _ = run_method("DBSCAN", prep, eps, tau)
+        rows.append({"scale": scale, "n": len(prep.test), "method": "DBSCAN",
+                     "time_s": t_db, "ARI": 1.0, "AMI": 1.0})
+        for method in APPROX_METHODS:
+            t, res = run_method(method, prep, eps, tau)
+            q = quality(res.labels, gt.labels)
+            rows.append({"scale": scale, "n": len(prep.test), "method": method,
+                         "time_s": t, **q})
+    save_json("table5_scalability", rows)
+    return rows
+
+
+def summarize(rows):
+    lines = ["table5/fig4: scalability (eps=0.55, tau=5)"]
+    scales = sorted({r["scale"] for r in rows})
+    methods = ["DBSCAN"] + APPROX_METHODS
+    for m in methods:
+        sub = {r["scale"]: r for r in rows if r["method"] == m}
+        if not sub:
+            continue
+        times = " -> ".join(f"{sub[s]['time_s']:.2f}s" for s in scales if s in sub)
+        growth = (
+            sub[scales[-1]]["time_s"] / max(sub[scales[0]]["time_s"], 1e-9)
+            if scales[0] in sub and scales[-1] in sub else float("nan")
+        )
+        aris = " / ".join(f"{sub[s]['ARI']:.3f}" for s in scales if s in sub)
+        lines.append(f"  {m:13s} time {times}  (x{growth:.1f} at 3x data)  ARI {aris}")
+    return "\n".join(lines)

@@ -1,0 +1,1 @@
+from .registry import ArchSpec, ShapeSpec, get_arch, list_archs  # noqa: F401

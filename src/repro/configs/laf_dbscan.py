@@ -1,0 +1,55 @@
+"""laf_dbscan: the paper's own workload as a first-class config — the
+distributed clustering step (sharded range counting + RMI estimation)
+lowered on the production mesh alongside the assigned architectures.
+
+Dataset operating points follow the paper's Table 1 (n, d); the dry-run
+lowers ``cluster_step`` = one frontier round: batched RMI prediction for
+the frontier + fused range counting of predicted-core queries against
+the device-sharded database + one label-propagation round.
+"""
+
+from dataclasses import dataclass
+from typing import Mapping
+
+import jax.numpy as jnp
+
+from .registry import ArchSpec, ShapeSpec, register
+
+
+@dataclass(frozen=True)
+class LAFClusterConfig:
+    n_points: int
+    dim: int
+    eps: float = 0.55
+    tau: int = 5
+    alpha: float = 1.5
+    frontier: int = 4096      # queries per frontier round
+    dtype: object = jnp.float32
+
+
+def make_config():
+    # MS-150k operating point (paper Table 1: 152,185 x 768)
+    return LAFClusterConfig(n_points=152185, dim=768)
+
+
+def make_reduced_config():
+    return LAFClusterConfig(n_points=2048, dim=64, frontier=256)
+
+
+LAF_SHAPES: Mapping[str, ShapeSpec] = {
+    "nyt_150k": ShapeSpec("nyt_150k", "cluster", {"n_points": 150000, "dim": 256}),
+    "glove_150k": ShapeSpec("glove_150k", "cluster", {"n_points": 150000, "dim": 200}),
+    "ms_150k": ShapeSpec("ms_150k", "cluster", {"n_points": 152185, "dim": 768}),
+    "web_1b": ShapeSpec("web_1b", "cluster", {"n_points": 1_073_741_824, "dim": 768}),
+}
+
+SPEC = register(
+    ArchSpec(
+        name="laf_dbscan",
+        family="cluster",
+        make_config=make_config,
+        make_reduced_config=make_reduced_config,
+        shapes=LAF_SHAPES,
+        notes="the paper's technique itself; web_1b is the 1000+-node scale target",
+    )
+)

@@ -1,0 +1,3 @@
+from .dbscan import DBSCANResult, dbscan_parallel, dbscan_sequential, NOISE, UNDEFINED  # noqa: F401
+from .laf_dbscan import laf_dbscan, laf_dbscan_sequential  # noqa: F401
+from .metrics import adjusted_mutual_info, adjusted_rand_index  # noqa: F401

@@ -1,0 +1,3 @@
+from .rmi import RMIConfig, init_rmi, rmi_predict, rmi_predict_counts, mlp_apply  # noqa: F401
+from .features import featurize, build_training_set  # noqa: F401
+from .training import train_rmi, TrainedEstimator  # noqa: F401

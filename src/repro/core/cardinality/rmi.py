@@ -1,0 +1,118 @@
+"""Recursive Model Index (RMI) cardinality estimator.
+
+Per the paper §3.1: an RMI with three stages of 1 / 2 / 4 fully-connected
+neural networks (top to bottom); every net has 4 hidden layers of widths
+512, 512, 256, 128.  Input = (query vector ⊕ distance threshold), output
+= predicted cardinality (we regress z = log2(1 + count), the standard
+monotone stabilizing transform; inverted at prediction time).
+
+Routing (Kraska et al. 2018): the stage-k prediction, scaled by the
+training-set maximum target, picks which stage-(k+1) expert refines it.
+On TPU we evaluate *all* experts of a stage in one batched matmul and
+select by one-hot — branchless, MXU-friendly (experts-as-batch).  The
+fused single-kernel version lives in ``repro.kernels.rmi_mlp``.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "RMIConfig",
+    "init_mlp",
+    "mlp_apply",
+    "init_rmi",
+    "rmi_route",
+    "rmi_predict",
+    "rmi_predict_counts",
+    "stack_stage",
+]
+
+HIDDEN = (512, 512, 256, 128)  # paper: 4 hidden layers, widths 512,512,256,128
+STAGE_SIZES = (1, 2, 4)        # paper: 3 stages with 1, 2, 4 nets
+
+
+@dataclass(frozen=True)
+class RMIConfig:
+    input_dim: int                      # d + 1 (query ⊕ eps)
+    hidden: Sequence[int] = HIDDEN
+    stage_sizes: Sequence[int] = STAGE_SIZES
+    target_max: float = 16.0            # max of z = log2(1+count) on train set
+    dtype: Any = jnp.float32
+
+
+def init_mlp(key: jax.Array, input_dim: int, hidden: Sequence[int], dtype=jnp.float32):
+    """He-initialized MLP params: list of (W, b), final layer -> scalar."""
+    dims = [input_dim, *hidden, 1]
+    params = []
+    for i in range(len(dims) - 1):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (dims[i], dims[i + 1]), dtype) * jnp.sqrt(
+            2.0 / dims[i]
+        ).astype(dtype)
+        b = jnp.zeros((dims[i + 1],), dtype)
+        params.append((w, b))
+    return params
+
+
+def mlp_apply(params, x: jax.Array) -> jax.Array:
+    """(batch, input_dim) -> (batch,) regression output; ReLU hidden layers."""
+    h = x
+    for w, b in params[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = params[-1]
+    return (h @ w + b)[:, 0]
+
+
+def stack_stage(nets: List[Any]):
+    """Stack per-expert param pytrees along a leading expert axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *nets)
+
+
+def init_rmi(key: jax.Array, cfg: RMIConfig) -> Dict[str, Any]:
+    """Params: {"stage0": mlp, "stage1": stacked(2), "stage2": stacked(4)}."""
+    keys = jax.random.split(key, sum(cfg.stage_sizes))
+    ki = iter(keys)
+    stages = {}
+    for s, size in enumerate(cfg.stage_sizes):
+        nets = [init_mlp(next(ki), cfg.input_dim, cfg.hidden, cfg.dtype) for _ in range(size)]
+        stages[f"stage{s}"] = stack_stage(nets) if size > 1 else nets[0]
+    return stages
+
+
+def rmi_route(pred: jax.Array, n_next: int, target_max: float) -> jax.Array:
+    """Map a stage prediction to the next-stage expert index."""
+    idx = jnp.floor(pred / target_max * n_next).astype(jnp.int32)
+    return jnp.clip(idx, 0, n_next - 1)
+
+
+def _stage_apply_all(stacked_params, x: jax.Array) -> jax.Array:
+    """Evaluate all E experts of a stage: (batch, dim) -> (E, batch)."""
+    return jax.vmap(lambda p: mlp_apply(p, x))(stacked_params)
+
+
+@functools.partial(jax.jit, static_argnames=("stage_sizes",))
+def _rmi_predict_impl(params, x, target_max, stage_sizes: Tuple[int, ...]):
+    pred = mlp_apply(params["stage0"], x)
+    for s in range(1, len(stage_sizes)):
+        n = stage_sizes[s]
+        idx = rmi_route(pred, n, target_max)
+        all_preds = _stage_apply_all(params[f"stage{s}"], x)  # (n, batch)
+        pred = jnp.take_along_axis(all_preds, idx[None, :], axis=0)[0]
+    return pred
+
+
+def rmi_predict(params, x: jax.Array, cfg: RMIConfig) -> jax.Array:
+    """Predict z = log2(1 + count) for featurized inputs (batch, d+1)."""
+    return _rmi_predict_impl(params, x, cfg.target_max, tuple(cfg.stage_sizes))
+
+
+def rmi_predict_counts(params, x: jax.Array, cfg: RMIConfig) -> jax.Array:
+    """Predict raw cardinalities (>= 0)."""
+    z = rmi_predict(params, x, cfg)
+    return jnp.maximum(jnp.exp2(z) - 1.0, 0.0)

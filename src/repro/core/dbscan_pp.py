@@ -1,0 +1,199 @@
+"""DBSCAN++ (Jang & Jiang 2019) and its LAF-enhanced variant.
+
+DBSCAN++ samples a subset S (uniform or greedy k-center), detects core
+points *within S but w.r.t. the entire dataset*, grows clusters over the
+sampled cores, and assigns every remaining point to the cluster of its
+closest sampled core within eps (else noise).
+
+LAF-DBSCAN++ (paper §3.1, α fixed at 1.0): the cardinality estimator
+runs before each *sampled* point's range query; predicted-stop samples
+are skipped and registered in 𝓔; partial neighbors accumulate from the
+executed sample queries (which scan the full dataset); Algorithm 3
+rescues false negatives exactly as in LAF-DBSCAN.
+
+The paper's automatic sample fraction: p = δ + R_c, with R_c the ratio
+of points the estimator predicts core and δ ∈ [0.1, 0.3].
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .dbscan import NOISE, DBSCANResult
+from .postprocess import PartialNeighborMap, post_processing
+from .union_find import compact_labels_from_parent, union_star
+
+__all__ = ["auto_sample_fraction", "kcenter_sample", "dbscan_pp", "laf_dbscan_pp"]
+
+
+def auto_sample_fraction(
+    predicted_counts: np.ndarray, tau: int, alpha: float, delta: float = 0.2
+) -> float:
+    """Paper §3.1 parameter rule: p = δ + R_c (clipped to (0, 1])."""
+    r_c = float(np.mean(np.asarray(predicted_counts) >= alpha * tau))
+    return float(np.clip(delta + r_c, 0.01, 1.0))
+
+
+def kcenter_sample(data: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
+    """Greedy k-center (farthest-first) sample of m indices — the
+    initialization DBSCAN++ reports best results with."""
+    rng = np.random.default_rng(seed)
+    n = data.shape[0]
+    m = min(m, n)
+    first = int(rng.integers(n))
+    chosen = [first]
+    # max cosine similarity to any chosen center (=> min distance)
+    best_sim = data @ data[first]
+    for _ in range(m - 1):
+        nxt = int(np.argmin(best_sim))
+        chosen.append(nxt)
+        best_sim = np.maximum(best_sim, data @ data[nxt])
+    return np.asarray(sorted(chosen))
+
+
+def _cluster_from_sampled_cores(
+    data: np.ndarray,
+    sample_idx: np.ndarray,
+    core_in_sample: np.ndarray,
+    eps: float,
+    block_size: int,
+) -> np.ndarray:
+    """Connected components over sampled cores + nearest-core assignment."""
+    n = data.shape[0]
+    thresh = 1.0 - eps
+    core_idx = sample_idx[core_in_sample]
+    labels = np.full(n, NOISE, dtype=np.int64)
+    if len(core_idx) == 0:
+        return labels
+    core_data = data[core_idx]
+    parent = np.arange(len(core_idx), dtype=np.int64)
+    # core-core unions within the sample
+    for start in range(0, len(core_idx), block_size):
+        hit = (core_data[start : start + block_size] @ core_data.T) > thresh
+        for bi in range(hit.shape[0]):
+            union_star(parent, np.nonzero(hit[bi])[0])
+    comp = compact_labels_from_parent(parent, np.ones(len(core_idx), bool))
+    # assign every point to its closest sampled core within eps
+    for start in range(0, n, block_size):
+        dots = data[start : start + block_size] @ core_data.T  # (b, m_core)
+        best = dots.argmax(axis=1)
+        ok = dots[np.arange(dots.shape[0]), best] > thresh
+        rows = np.arange(start, start + dots.shape[0])
+        labels[rows[ok]] = comp[best[ok]]
+    return labels
+
+
+def dbscan_pp(
+    data: np.ndarray,
+    eps: float,
+    tau: int,
+    p: float,
+    *,
+    init: str = "uniform",
+    block_size: int = 2048,
+    seed: int = 0,
+) -> DBSCANResult:
+    """DBSCAN++ with sample fraction p."""
+    data = np.asarray(data, dtype=np.float32)
+    n = data.shape[0]
+    m = max(1, int(round(p * n)))
+    rng = np.random.default_rng(seed)
+    if init == "kcenter":
+        sample_idx = kcenter_sample(data, m, seed)
+    else:
+        sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+    thresh = 1.0 - eps
+
+    # core detection: sampled queries against the ENTIRE dataset
+    counts = np.zeros(m, dtype=np.int64)
+    for start in range(0, m, block_size):
+        rows = sample_idx[start : start + block_size]
+        counts[start : start + len(rows)] = ((data[rows] @ data.T) > thresh).sum(axis=1)
+    core_in_sample = counts >= tau
+
+    labels = _cluster_from_sampled_cores(data, sample_idx, core_in_sample, eps, block_size)
+    core = np.zeros(n, dtype=bool)
+    core[sample_idx[core_in_sample]] = True
+    n_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
+    return DBSCANResult(
+        labels, core, n_clusters, int(m), {"sample_fraction": p, "m": m}
+    )
+
+
+def laf_dbscan_pp(
+    data: np.ndarray,
+    eps: float,
+    tau: int,
+    p: float,
+    predicted_counts_sample: np.ndarray,
+    *,
+    alpha: float = 1.0,
+    init: str = "uniform",
+    block_size: int = 2048,
+    seed: int = 0,
+    sample_idx: Optional[np.ndarray] = None,
+) -> DBSCANResult:
+    """LAF-DBSCAN++: skip sampled range queries for predicted-stop samples.
+
+    ``predicted_counts_sample`` aligns with the sample (either the given
+    ``sample_idx`` or the one this function draws with ``seed`` — drawn
+    identically to :func:`dbscan_pp` so the two share samples in
+    benchmarks).
+    """
+    data = np.asarray(data, dtype=np.float32)
+    n = data.shape[0]
+    m = max(1, int(round(p * n)))
+    rng = np.random.default_rng(seed)
+    if sample_idx is None:
+        if init == "kcenter":
+            sample_idx = kcenter_sample(data, m, seed)
+        else:
+            sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+    m = len(sample_idx)
+    thresh = 1.0 - eps
+
+    predicted_core = np.asarray(predicted_counts_sample) >= alpha * tau
+    exec_rows = sample_idx[predicted_core]
+
+    counts = np.zeros(m, dtype=np.int64)
+    partial_counts = np.zeros(n, dtype=np.int64)
+    for start in range(0, len(exec_rows), block_size):
+        rows = exec_rows[start : start + block_size]
+        hit = (data[rows] @ data.T) > thresh
+        # map back to sample positions
+        pos = np.searchsorted(sample_idx, rows)
+        counts[pos] = hit.sum(axis=1)
+        partial_counts += hit.sum(axis=0)
+    core_in_sample = predicted_core & (counts >= tau)
+
+    labels = _cluster_from_sampled_cores(data, sample_idx, core_in_sample, eps, block_size)
+
+    # ---- post-processing (Algorithm 3) over predicted-stop samples -----
+    in_sample_stop = np.zeros(n, dtype=bool)
+    in_sample_stop[sample_idx[~predicted_core]] = True
+    rescue_mask = in_sample_stop & (partial_counts >= tau)
+    rescue_idx = np.nonzero(rescue_mask)[0]
+    emap = PartialNeighborMap()
+    if len(rescue_idx) > 0:
+        rescue_data = data[rescue_idx]
+        for start in range(0, len(exec_rows), block_size):
+            rows = exec_rows[start : start + block_size]
+            hit = (data[rows] @ rescue_data.T) > thresh
+            for ri in np.nonzero(hit.any(axis=0))[0]:
+                r = int(rescue_idx[ri])
+                emap.register(r)
+                emap[r].update(int(f) for f in rows[hit[:, ri]])
+    labels = post_processing(labels, emap, tau, rng=np.random.default_rng(seed))
+
+    core = np.zeros(n, dtype=bool)
+    core[sample_idx[core_in_sample]] = True
+    n_clusters = len(np.unique(labels[labels >= 0]))
+    extras = {
+        "sample_fraction": p,
+        "m": int(m),
+        "n_skipped": int(m - len(exec_rows)),
+        "n_rescued": int(len(rescue_idx)),
+    }
+    return DBSCANResult(labels, core, n_clusters, int(len(exec_rows)), extras)

@@ -1,0 +1,59 @@
+"""Distance primitives for angular-distance clustering.
+
+The paper (LAF, §1) targets *angular* metrics — cosine distance on
+L2-normalized neural embeddings — because the bounded range (0..2) makes
+the learned cardinality estimator trainable.  Equation 1 of the paper
+converts cosine thresholds to Euclidean ones for Euclidean-only
+baselines:  d_euc = sqrt(2 * d_cos)  when |u| = |v| = 1.
+
+All batch distance computation is expressed as matmul so the TPU MXU is
+the execution engine; the Pallas kernel in ``repro.kernels.range_count``
+fuses the threshold/count step into the same VMEM tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "l2_normalize",
+    "cosine_distance",
+    "pairwise_cosine_distance",
+    "cos_to_euclidean",
+    "euclidean_to_cos",
+]
+
+
+def l2_normalize(x: jax.Array, axis: int = -1, eps: float = 1e-12) -> jax.Array:
+    """L2-normalize vectors along ``axis`` (paper §3.1: all data normalized)."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(x), axis=axis, keepdims=True))
+    return x / jnp.maximum(norm, eps)
+
+
+def cosine_distance(u: jax.Array, v: jax.Array) -> jax.Array:
+    """Cosine distance 1 - <u,v> for *normalized* u, v (elementwise batched)."""
+    return 1.0 - jnp.sum(u * v, axis=-1)
+
+
+def pairwise_cosine_distance(q: jax.Array, db: jax.Array) -> jax.Array:
+    """All-pairs cosine distance: (nq, d) x (nd, d) -> (nq, nd).
+
+    Inputs must be L2-normalized.  This is the matmul form used by the
+    range-query engine: one MXU pass, distance = 1 - Q @ D^T.
+    """
+    return 1.0 - q @ db.T
+
+
+def cos_to_euclidean(d_cos):
+    """Paper Eq. 1: d_euc = sqrt(2 * d_cos) for unit vectors."""
+    return np.sqrt(2.0 * np.asarray(d_cos))
+
+
+def euclidean_to_cos(d_euc):
+    """Inverse of Eq. 1: d_cos = d_euc^2 / 2."""
+    d = np.asarray(d_euc)
+    return d * d / 2.0

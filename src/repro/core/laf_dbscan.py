@@ -1,0 +1,198 @@
+"""LAF-DBSCAN — Algorithm 1 of the paper.
+
+Two interchangeable engines:
+
+* ``laf_dbscan_sequential`` — a line-by-line transcription of the
+  pseudocode (black + red text), used for validation.  The red-text LAF
+  insertions are marked ``# LAF:`` inline.
+
+* ``laf_dbscan`` — the batch-parallel TPU-shaped engine (DESIGN.md §2).
+  Identical skip/execute decisions (every predicted-core point executes
+  exactly one range query in both engines — see DESIGN.md §2), identical
+  executed-core cluster structure, and a partial-neighbor map 𝓔 that is
+  a superset of the sequential one (post-processing can only rescue
+  *more* false negatives).  Range queries for the whole predicted-core
+  set are blocked matmuls; cluster formation is vectorized star-unions
+  over the executed-core graph.
+
+Both report ``n_range_queries`` — the paper's unit of saved work.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from .dbscan import NOISE, UNDEFINED, DBSCANResult
+from .postprocess import PartialNeighborMap, post_processing, update_partial_neighbors
+from .union_find import compact_labels_from_parent, union_star
+
+__all__ = ["laf_dbscan_sequential", "laf_dbscan"]
+
+
+def laf_dbscan_sequential(
+    data: np.ndarray,
+    eps: float,
+    tau: int,
+    alpha: float,
+    card_est: Callable[[int], float],
+    *,
+    seed: int = 0,
+) -> DBSCANResult:
+    """Algorithm 1, faithful transcription.
+
+    ``card_est(i)`` returns the predicted cardinality of point i (the
+    RMI estimator, or an oracle in tests).
+    """
+    data = np.asarray(data, dtype=np.float32)
+    n = data.shape[0]
+    labels = np.full(n, UNDEFINED, dtype=np.int64)
+    core = np.zeros(n, dtype=bool)
+    queries = 0
+    emap = PartialNeighborMap()                        # LAF: map 𝓔 (line 2)
+    thresh = 1.0 - eps
+
+    def range_query(i: int) -> np.ndarray:
+        nonlocal queries
+        queries += 1
+        return np.nonzero(data[i] @ data.T > thresh)[0]
+
+    c = 0
+    for p in range(n):
+        if labels[p] != UNDEFINED:                     # line 5
+            continue
+        if card_est(p) < alpha * tau:                  # LAF: line 6
+            labels[p] = NOISE                          # line 7
+            emap.register(p)                           # LAF: line 8
+            continue                                   # line 9
+        nbrs = range_query(p)                          # line 10
+        update_partial_neighbors(p, nbrs, emap)        # LAF: line 11
+        if len(nbrs) < tau:                            # line 12
+            labels[p] = NOISE                          # line 13
+            continue                                   # line 14
+        core[p] = True
+        labels[p] = c                                  # line 15
+        seeds = deque(int(q) for q in nbrs if q != p)  # line 16: S := N - {P}
+        while seeds:                                   # line 17
+            q = seeds.popleft()
+            if labels[q] == NOISE:                     # line 18
+                labels[q] = c
+            if labels[q] != UNDEFINED:                 # line 19
+                continue
+            labels[q] = c                              # line 21
+            if card_est(q) >= alpha * tau:             # LAF: line 22
+                qn = range_query(q)                    # line 23
+                update_partial_neighbors(q, qn, emap)  # LAF: line 24
+                if len(qn) >= tau:                     # line 25
+                    core[q] = True
+                    seeds.extend(int(x) for x in qn)
+            else:
+                emap.register(q)                       # LAF: line 26-27
+        c += 1
+    labels = post_processing(                          # LAF: line 28
+        labels, emap, tau, rng=np.random.default_rng(seed)
+    )
+    labels = _compact(labels)
+    n_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
+    return DBSCANResult(labels, core, n_clusters, queries, {"n_registered": len(emap)})
+
+
+def _compact(labels: np.ndarray) -> np.ndarray:
+    out = labels.copy()
+    ids = np.unique(labels[labels >= 0])
+    for i, c in enumerate(ids):
+        out[labels == c] = i
+    return out
+
+
+def laf_dbscan(
+    data: np.ndarray,
+    eps: float,
+    tau: int,
+    alpha: float,
+    predicted_counts: np.ndarray,
+    *,
+    block_size: int = 2048,
+    seed: int = 0,
+) -> DBSCANResult:
+    """Batch-parallel LAF-DBSCAN engine.
+
+    Args:
+      predicted_counts: (n,) estimator predictions for every point at
+        this eps (one batched RMI pass by the caller — kept as an input
+        so engines and estimators compose freely; tests pass oracles).
+    """
+    data = np.asarray(data, dtype=np.float32)
+    n = data.shape[0]
+    thresh = 1.0 - eps
+    predicted_core = np.asarray(predicted_counts) >= alpha * tau  # LAF skip rule
+    exec_idx = np.nonzero(predicted_core)[0]
+    n_exec = len(exec_idx)
+
+    exact_counts = np.zeros(n, dtype=np.int64)
+    partial_counts = np.zeros(n, dtype=np.int64)  # |𝓔(q)| for predicted-stop q
+
+    # ---- pass 1 (the only matmul pass): execute predicted-core queries --
+    packed_blocks: list[tuple[np.ndarray, np.ndarray]] = []
+    for start in range(0, n_exec, block_size):
+        rows = exec_idx[start : start + block_size]
+        hit = (data[rows] @ data.T) > thresh  # (b, n)
+        exact_counts[rows] = hit.sum(axis=1)
+        # Alg.2 superset: every predicted-stop neighbor of an executed
+        # query gains one partial neighbor.
+        partial_counts += hit.sum(axis=0)
+        packed_blocks.append((rows, np.packbits(hit, axis=1)))
+    partial_counts[predicted_core] = 0  # 𝓔 keys are predicted-stop points only
+
+    core = np.zeros(n, dtype=bool)
+    core[exec_idx] = exact_counts[exec_idx] >= tau
+
+    # ---- pass 2 (no matmul): core-core unions + border ownership -------
+    parent = np.arange(n, dtype=np.int64)
+    owner = np.full(n, -1, dtype=np.int64)
+    for rows, packed in packed_blocks:
+        hit = np.unpackbits(packed, axis=1, count=n).astype(bool)
+        row_is_core = core[rows]
+        hit_core = hit & core[None, :]
+        for bi in np.nonzero(row_is_core)[0]:
+            union_star(parent, np.nonzero(hit_core[bi])[0])
+        if row_is_core.any():
+            sub = hit[row_is_core]
+            subrows = rows[row_is_core]
+            claimed = sub.any(axis=0)
+            todo = claimed & (owner < 0) & ~core
+            if todo.any():
+                first = sub[:, todo].argmax(axis=0)
+                owner[todo] = subrows[first]
+
+    labels = compact_labels_from_parent(parent, core)
+    borders = np.nonzero(~core & (owner >= 0))[0]
+    labels[borders] = labels[owner[borders]]
+    n_pre_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
+
+    # ---- post-processing: rescue false negatives (Algorithm 3) ---------
+    rescue_idx = np.nonzero(~predicted_core & (partial_counts >= tau))[0]
+    emap = PartialNeighborMap()
+    if len(rescue_idx) > 0:
+        rescue_data = data[rescue_idx]
+        for start in range(0, n_exec, block_size):
+            rows = exec_idx[start : start + block_size]
+            hit = (data[rows] @ rescue_data.T) > thresh  # (b, n_rescue)
+            for ri in np.nonzero(hit.any(axis=0))[0]:
+                r = int(rescue_idx[ri])
+                emap.register(r)
+                emap[r].update(int(f) for f in rows[hit[:, ri]])
+    labels = post_processing(labels, emap, tau, rng=np.random.default_rng(seed))
+    labels = _compact(labels)
+
+    extras = {
+        "n_predicted_core": int(n_exec),
+        "n_skipped": int(n - n_exec),
+        "n_rescued": int(len(rescue_idx)),
+        "n_pre_merge_clusters": n_pre_clusters,
+        "false_negative_core": int(np.sum(~predicted_core & (partial_counts >= tau))),
+    }
+    n_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
+    return DBSCANResult(labels, core, n_clusters, n_exec, extras)

@@ -1,0 +1,121 @@
+"""End-to-end LAF pipeline: train estimator on the 80% split, cluster the
+20% split, with the paper's timing discipline (prediction time counts,
+training time does not — §3.1 Metrics).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..data.synthetic import train_test_split
+from .cardinality import TrainedEstimator, train_rmi
+from .dbscan import DBSCANResult, dbscan_parallel
+from .dbscan_pp import auto_sample_fraction, dbscan_pp, laf_dbscan_pp
+from .laf_dbscan import laf_dbscan
+
+__all__ = ["LAFPipeline", "ClusterOutcome"]
+
+
+@dataclass
+class ClusterOutcome:
+    result: DBSCANResult
+    elapsed_s: float               # clustering time incl. estimator predict
+    predict_s: float = 0.0         # estimator prediction share
+    method: str = ""
+    params: Dict = field(default_factory=dict)
+
+
+class LAFPipeline:
+    """Owns a trained cardinality estimator + the LAF-enhanced engines."""
+
+    def __init__(
+        self,
+        *,
+        eps_grid=None,
+        epochs: int = 200,
+        batch_size: int = 512,
+        lr: float = 1e-3,
+        seed: int = 0,
+    ):
+        self.eps_grid = eps_grid
+        self.epochs = epochs
+        self.batch_size = batch_size
+        self.lr = lr
+        self.seed = seed
+        self.estimator: Optional[TrainedEstimator] = None
+
+    # -- estimator ---------------------------------------------------------
+    def fit(self, train_vectors: np.ndarray) -> "LAFPipeline":
+        self.estimator = train_rmi(
+            train_vectors,
+            eps_grid=self.eps_grid,
+            epochs=self.epochs,
+            batch_size=self.batch_size,
+            lr=self.lr,
+            seed=self.seed,
+        )
+        return self
+
+    def fit_split(self, data: np.ndarray, frac_train: float = 0.8):
+        """Paper protocol: 8:2 split; returns the test split to cluster."""
+        train, test = train_test_split(data, frac_train, self.seed)
+        self.fit(train)
+        return test
+
+    def predict_counts(self, vectors: np.ndarray, eps: float) -> np.ndarray:
+        assert self.estimator is not None, "call fit() first"
+        return self.estimator.predict_counts(vectors, eps)
+
+    # -- engines -----------------------------------------------------------
+    def cluster_laf_dbscan(
+        self, vectors: np.ndarray, eps: float, tau: int, alpha: float, **kw
+    ) -> ClusterOutcome:
+        t0 = time.time()
+        pred = self.predict_counts(vectors, eps)
+        t1 = time.time()
+        res = laf_dbscan(vectors, eps, tau, alpha, pred, seed=self.seed, **kw)
+        t2 = time.time()
+        return ClusterOutcome(res, t2 - t0, t1 - t0, "LAF-DBSCAN",
+                              {"eps": eps, "tau": tau, "alpha": alpha})
+
+    def cluster_dbscan(self, vectors: np.ndarray, eps: float, tau: int, **kw) -> ClusterOutcome:
+        t0 = time.time()
+        res = dbscan_parallel(vectors, eps, tau, **kw)
+        return ClusterOutcome(res, time.time() - t0, 0.0, "DBSCAN", {"eps": eps, "tau": tau})
+
+    def cluster_dbscan_pp(
+        self, vectors: np.ndarray, eps: float, tau: int,
+        *, delta: float = 0.2, alpha: float = 1.0, p: Optional[float] = None, **kw
+    ) -> ClusterOutcome:
+        t0 = time.time()
+        if p is None:
+            pred = self.predict_counts(vectors, eps)
+            p = auto_sample_fraction(pred, tau, alpha, delta)
+        res = dbscan_pp(vectors, eps, tau, p, seed=self.seed, **kw)
+        return ClusterOutcome(res, time.time() - t0, 0.0, "DBSCAN++",
+                              {"eps": eps, "tau": tau, "p": p})
+
+    def cluster_laf_dbscan_pp(
+        self, vectors: np.ndarray, eps: float, tau: int,
+        *, delta: float = 0.2, alpha: float = 1.0, p: Optional[float] = None, **kw
+    ) -> ClusterOutcome:
+        t0 = time.time()
+        pred_all = self.predict_counts(vectors, eps)
+        if p is None:
+            p = auto_sample_fraction(pred_all, tau, alpha, delta)
+        n = vectors.shape[0]
+        m = max(1, int(round(p * n)))
+        rng = np.random.default_rng(self.seed)
+        sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+        t1 = time.time()
+        res = laf_dbscan_pp(
+            vectors, eps, tau, p, pred_all[sample_idx],
+            alpha=alpha, seed=self.seed, sample_idx=sample_idx, **kw
+        )
+        t2 = time.time()
+        return ClusterOutcome(res, t2 - t0, t1 - t0, "LAF-DBSCAN++",
+                              {"eps": eps, "tau": tau, "p": p, "alpha": alpha})

@@ -1,0 +1,5 @@
+from .synthetic import (  # noqa: F401
+    sample_vmf,
+    make_angular_clusters,
+    train_test_split,
+)

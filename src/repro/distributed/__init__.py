@@ -1,0 +1,6 @@
+from .sharding import (  # noqa: F401
+    param_sharding_rule,
+    tree_param_shardings,
+    replicated,
+    named,
+)

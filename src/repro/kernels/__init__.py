@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel lives in its own subpackage:
+  kernel.py -- pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    -- jit'd public wrapper (padding, dtype policy, interpret switch)
+  ref.py    -- pure-jnp oracle the kernel is validated against
+
+On this CPU-only container the kernels execute via ``interpret=True``;
+the BlockSpecs and grids are written for TPU v5e VMEM budgets.
+"""

@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the EmbeddingBag kernel (padding + combiner)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BATCH_TILE, embedding_bag_pallas
+
+__all__ = ["embedding_bag"]
+
+
+@functools.partial(jax.jit, static_argnames=("combiner", "batch_tile", "interpret"))
+def embedding_bag(
+    table: jax.Array,
+    ids: jax.Array,
+    *,
+    combiner: str = "sum",
+    batch_tile: int = DEFAULT_BATCH_TILE,
+    interpret: bool = True,
+):
+    """EmbeddingBag: (V, D) table, (B, L) ids (-1 padded) -> (B, D)."""
+    b, l = ids.shape
+    pad = (-b) % batch_tile
+    idp = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1) if pad else ids
+    out = embedding_bag_pallas(
+        table, idp, batch_tile=batch_tile, interpret=interpret
+    )[:b]
+    if combiner == "mean":
+        denom = jnp.maximum((ids >= 0).sum(axis=1, keepdims=True), 1)
+        out = out / denom
+    return out

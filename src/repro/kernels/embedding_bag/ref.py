@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for EmbeddingBag (sum/mean over multi-hot bags).
+
+JAX has no native nn.EmbeddingBag; the canonical formulation is
+gather + masked segment reduction.  ids are padded with -1.
+"""
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, *, combiner: str = "sum"):
+    """table (V, D); ids (B, L) int32 with -1 padding -> (B, D)."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    gathered = table[safe]                      # (B, L, D)
+    gathered = jnp.where(valid[:, :, None], gathered, 0.0)
+    out = gathered.sum(axis=1)
+    if combiner == "mean":
+        denom = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / denom
+    return out

@@ -1,0 +1,52 @@
+"""Jit'd wrapper: (B, H, S, D) layout, GQA head expansion, padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_KV_BLOCK, DEFAULT_Q_BLOCK, flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_block", "kv_block", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window=None,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    interpret: bool = True,
+):
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if hkv != hq:  # GQA: expand kv heads
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qb = min(q_block, sq) if sq % q_block else q_block
+    while sq % qb:
+        qb //= 2
+    kb = min(kv_block, sk) if sk % kv_block else kv_block
+    while sk % kb:
+        kb //= 2
+    out = flash_attention_pallas(
+        q.reshape(b * hq, sq, d),
+        k.reshape(b * hq, sk, d),
+        v.reshape(b * hq, sk, d),
+        causal=causal,
+        window=window,
+        q_block=qb,
+        kv_block=kb,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: exact softmax attention (optionally causal/windowed)."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=False, window=None, scale=None):
+    """q (B, H, Sq, D); k/v (B, H, Sk, D) -> (B, H, Sq, D) fp32."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    sq, sk = q.shape[2], k.shape[2]
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # right-aligned for decode
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = jnp.where(mask[None, None], probs, 0.0)
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, vf)

@@ -1,0 +1,1 @@
+from .ops import label_prop_round, label_propagation_pallas  # noqa: F401

@@ -1,0 +1,80 @@
+"""Driver: pad, iterate kernel rounds with pointer jumping to fixpoint."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_ROW_TILE, DEFAULT_WORD_TILE, label_prop_round_pallas
+
+__all__ = ["label_prop_round", "label_propagation_pallas"]
+
+BIG = jnp.iinfo(jnp.int32).max
+
+
+def _pad(labels, bitmap, row_tile, word_tile):
+    n = labels.shape[0]
+    w = bitmap.shape[1]
+    n_pad = (-n) % row_tile
+    w_req = max(w, -(-(n + n_pad) // 32))
+    w_pad = (-w_req) % word_tile + (w_req - w)
+    labels_p = jnp.pad(labels, (0, n_pad), constant_values=BIG)
+    bitmap_p = jnp.pad(bitmap, ((0, n_pad), (0, w_pad)))
+    return labels_p, bitmap_p, n
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "word_tile", "interpret"))
+def label_prop_round(
+    labels: jax.Array,
+    bitmap: jax.Array,
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret: bool = True,
+):
+    """One masked min-propagation round (arbitrary N, W)."""
+    labels = labels.astype(jnp.int32)
+    labels_p, bitmap_p, n = _pad(labels, bitmap, row_tile, word_tile)
+    out = label_prop_round_pallas(
+        labels_p, bitmap_p, row_tile=row_tile, word_tile=word_tile, interpret=interpret
+    )
+    return out[:n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "row_tile", "word_tile", "interpret")
+)
+def label_propagation_pallas(
+    bitmap: jax.Array,
+    active: jax.Array,
+    *,
+    max_iters: int = 64,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret: bool = True,
+):
+    """Connected components over a packed symmetric adjacency: same
+    contract as ``repro.core.union_find.label_propagation`` (inactive
+    nodes -> sentinel n)."""
+    n = active.shape[0]
+    init = jnp.where(active, jnp.arange(n, dtype=jnp.int32), jnp.int32(n))
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        masked = jnp.where(active, labels, BIG)
+        neigh = label_prop_round(
+            masked, bitmap, row_tile=row_tile, word_tile=word_tile, interpret=interpret
+        )
+        new = jnp.where(active, jnp.minimum(labels, neigh), jnp.int32(n))
+        jump = jnp.where(new < n, new, 0)
+        new = jnp.where(new < n, jnp.minimum(new, new[jump]), new)
+        return new, jnp.any(new != labels), it + 1
+
+    labels, _, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True), 0))
+    return labels

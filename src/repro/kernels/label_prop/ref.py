@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for one min-label-propagation round over a packed
+uint32 adjacency bitmap."""
+
+import jax.numpy as jnp
+
+
+def label_prop_round_ref(labels, bitmap, big):
+    """new_labels[i] = min(labels[i], min_{j: bit ij set} labels[j])."""
+    n = labels.shape[0]
+    nw = bitmap.shape[1]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((bitmap[:, :, None] >> shifts[None, None, :]) & 1).astype(bool)
+    bits = bits.reshape(n, nw * 32)[:, :n]
+    neigh = jnp.min(jnp.where(bits, labels[None, :], big), axis=1)
+    return jnp.minimum(labels, neigh)

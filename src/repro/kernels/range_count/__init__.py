@@ -1,0 +1,1 @@
+from .ops import range_count, range_count_bitmap  # noqa: F401

@@ -1,0 +1,88 @@
+"""Public jit'd wrappers for the range-count kernel: padding to tile
+alignment, validity masking, dtype policy, interpret switch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_DB_TILE, DEFAULT_Q_TILE, range_count_pallas
+
+__all__ = ["range_count", "range_count_bitmap"]
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+@functools.partial(
+    jax.jit, static_argnames=("q_tile", "db_tile", "interpret")
+)
+def range_count(
+    q: jax.Array,
+    db: jax.Array,
+    eps,
+    *,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: bool = True,
+):
+    """Fused neighbor counts.  Pads to tiles; padded db rows are zero
+    vectors whose dot is 0 — they can false-hit when eps > 1, so counts
+    subtract the padded-hit correction exactly."""
+    nq, nd = q.shape[0], db.shape[0]
+    qp = _pad_rows(q, q_tile)
+    dbp = _pad_rows(db, db_tile)
+    counts = range_count_pallas(
+        qp, dbp, eps, q_tile=q_tile, db_tile=db_tile, interpret=interpret
+    )[:nq]
+    n_pad = dbp.shape[0] - nd
+    if n_pad:
+        # zero-vector rows hit iff 0 > 1 - eps  <=>  eps > 1
+        pad_hits = jnp.where(jnp.asarray(eps, jnp.float32) > 1.0, n_pad, 0)
+        counts = counts - pad_hits.astype(jnp.int32)
+    return counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("q_tile", "db_tile", "interpret")
+)
+def range_count_bitmap(
+    q: jax.Array,
+    db: jax.Array,
+    eps,
+    *,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: bool = True,
+):
+    """(counts, packed adjacency) with the same padding corrections; the
+    returned bitmap covers ceil(nd/32) words with padded bits cleared."""
+    nq, nd = q.shape[0], db.shape[0]
+    qp = _pad_rows(q, q_tile)
+    dbp = _pad_rows(db, db_tile)
+    counts, bitmap = range_count_pallas(
+        qp, dbp, eps, q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+        with_bitmap=True,
+    )
+    counts = counts[:nq]
+    bitmap = bitmap[:nq]
+    n_pad = dbp.shape[0] - nd
+    if n_pad:
+        pad_hits = jnp.where(jnp.asarray(eps, jnp.float32) > 1.0, n_pad, 0)
+        counts = counts - pad_hits.astype(jnp.int32)
+        # clear padded bits: build a validity mask over words
+        nw = bitmap.shape[1]
+        bit_idx = jnp.arange(nw * 32) < nd
+        word_mask = jnp.sum(
+            bit_idx.reshape(nw, 32).astype(jnp.uint32)
+            << jnp.arange(32, dtype=jnp.uint32)[None, :],
+            axis=1,
+            dtype=jnp.uint32,
+        )
+        bitmap = bitmap & word_mask[None, :]
+    words_needed = -(-nd // 32)
+    return counts, bitmap[:, :words_needed]

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused range-count kernel."""
+
+import jax.numpy as jnp
+
+
+def range_count_ref(q, db, eps):
+    """Counts: |{j : 1 - <q_i, db_j> < eps}| per query (int32)."""
+    dots = q.astype(jnp.float32) @ db.astype(jnp.float32).T
+    return jnp.sum(dots > 1.0 - eps, axis=1, dtype=jnp.int32)
+
+
+def range_count_bitmap_ref(q, db, eps):
+    """(counts, packed uint32 adjacency rows)."""
+    dots = q.astype(jnp.float32) @ db.astype(jnp.float32).T
+    hit = dots > 1.0 - eps
+    counts = jnp.sum(hit, axis=1, dtype=jnp.int32)
+    nq, nd = hit.shape
+    pad = (-nd) % 32
+    hitp = jnp.pad(hit, ((0, 0), (0, pad)))
+    words = hitp.reshape(nq, -1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    packed = jnp.sum(words << shifts[None, None, :], axis=2, dtype=jnp.uint32)
+    return counts, packed

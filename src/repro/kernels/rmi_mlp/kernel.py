@@ -1,0 +1,76 @@
+"""Fused RMI-MLP inference Pallas kernel.
+
+The paper's estimator nets are tiny (4 hidden layers 512·512·256·128 ≈
+0.5 M params ≈ 1.9 MiB fp32): the entire net fits in VMEM, so the whole
+4-layer forward runs on one batch tile without any HBM round-trip
+between layers.  Unfused, each layer writes + reads a (B, width)
+activation to HBM; fused, HBM traffic is x-in + scalar-out only, turning
+a memory-bound chain into one MXU-resident pass.
+
+Grid: (batch_tiles,).  Weights use no grid indexing (same block every
+step — Pallas keeps them resident).  Dims are padded to lane multiples
+(128) in ops.py; hidden widths 512/512/256/128 are already aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BATCH_TILE = 256
+
+
+def _mlp_kernel(x_ref, w1, b1, w2, b2, w3, b3, w4, b4, w5, b5, out_ref):
+    h = x_ref[...].astype(jnp.float32)
+
+    def layer(h, w_ref, b_ref, relu=True):
+        o = (
+            jax.lax.dot_general(
+                h, w_ref[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+            )
+            + b_ref[...].astype(jnp.float32)[None, :]
+        )
+        return jax.nn.relu(o) if relu else o
+
+    h = layer(h, w1, b1)
+    h = layer(h, w2, b2)
+    h = layer(h, w3, b3)
+    h = layer(h, w4, b4)
+    out = layer(h, w5, b5, relu=False)  # (B, head_pad) — col 0 is the output
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def rmi_mlp_pallas(
+    x: jax.Array,
+    weights,
+    biases,
+    *,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+    interpret: bool = False,
+):
+    """x (B, Din) + 5 (W, b) pairs -> (B, head) fp32.  B % batch_tile == 0."""
+    n = x.shape[0]
+    assert n % batch_tile == 0
+    grid = (n // batch_tile,)
+    x_spec = pl.BlockSpec((batch_tile, x.shape[1]), lambda i: (i, 0))
+    w_specs = []
+    args = []
+    for w, b in zip(weights, biases):
+        w_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        w_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+        args.extend([w, b])
+    head = weights[-1].shape[1]
+    out_spec = pl.BlockSpec((batch_tile, head), lambda i: (i, 0))
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[x_spec, *w_specs],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, head), jnp.float32),
+        interpret=interpret,
+    )(x, *args)

@@ -1,0 +1,73 @@
+"""Jit'd wrappers for the fused RMI-MLP kernel: pad input dim to lane
+multiples, pad batch to tiles, run all experts of a stage, and expose a
+drop-in replacement for ``repro.core.cardinality.rmi.mlp_apply``."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BATCH_TILE, rmi_mlp_pallas
+
+__all__ = ["rmi_mlp_forward", "rmi_stage_forward"]
+
+LANE = 128
+
+
+def _pad_cols(x, mult=LANE):
+    pad = (-x.shape[-1]) % mult
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]) if pad else x
+
+
+def _prep_params(params):
+    """params: list[(W,b)] from core.cardinality.rmi.  Pads the input dim
+    of W1 (rows) and the scalar head (cols) to lane multiples."""
+    weights, biases = [], []
+    for li, (w, b) in enumerate(params):
+        if li == 0:
+            pad = (-w.shape[0]) % LANE
+            if pad:
+                w = jnp.pad(w, ((0, pad), (0, 0)))
+        if li == len(params) - 1:
+            w = _pad_cols(w)
+            b = _pad_cols(b[None, :])[0]
+        weights.append(w)
+        biases.append(b)
+    return weights, biases
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def rmi_mlp_forward(
+    params,
+    x: jax.Array,
+    *,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """(batch, d_in) -> (batch,) — fused equivalent of ``mlp_apply``."""
+    n, d = x.shape
+    weights, biases = _prep_params(params)
+    xp = _pad_cols(x)
+    pad_rows = (-n) % batch_tile
+    if pad_rows:
+        xp = jnp.pad(xp, ((0, pad_rows), (0, 0)))
+    out = rmi_mlp_pallas(
+        xp, weights, biases, batch_tile=batch_tile, interpret=interpret
+    )
+    return out[:n, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "interpret"))
+def rmi_stage_forward(
+    stacked_params,
+    x: jax.Array,
+    *,
+    batch_tile: int = DEFAULT_BATCH_TILE,
+    interpret: bool = True,
+) -> jax.Array:
+    """All E experts of one stacked RMI stage -> (E, batch)."""
+    return jax.vmap(
+        lambda p: rmi_mlp_forward(p, x, batch_tile=batch_tile, interpret=interpret)
+    )(stacked_params)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused RMI-MLP kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_forward_ref(x, weights, biases):
+    """4 ReLU hidden layers + linear head -> (batch,) fp32."""
+    h = x.astype(jnp.float32)
+    for w, b in zip(weights[:-1], biases[:-1]):
+        h = jax.nn.relu(h @ w.astype(jnp.float32) + b.astype(jnp.float32))
+    return (h @ weights[-1].astype(jnp.float32) + biases[-1].astype(jnp.float32))[:, 0]
+
+
+def stage_forward_ref(x, stacked_weights, stacked_biases):
+    """All E experts of one RMI stage: -> (E, batch) fp32."""
+    def one(ws, bs):
+        return mlp_forward_ref(x, [w for w in ws], [b for b in bs])
+
+    return jax.vmap(
+        lambda ws, bs: mlp_forward_ref(x, list(ws), list(bs))
+    )(stacked_weights, stacked_biases)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (arch × shape × mesh) cell.
+
+The two lines above run before any other import (jax locks device count
+on first init).  For each cell we record memory_analysis (proves it
+fits), cost_analysis (FLOPs/bytes for §Roofline) and the collective
+operand bytes parsed from the optimized HLO, written incrementally to
+``artifacts/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --all
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from .hlo_analysis import analyze_hlo
+from ..configs.registry import get_arch, list_archs
+from .mesh import make_production_mesh
+from .steps import build_cell
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' occurrence."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return int(n * _DTYPE_BYTES.get(dt, 4))
+
+
+def collective_bytes_from_hlo(hlo_text: str):
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Returns {op_name: {"count": int, "bytes": int}} plus "total".
+    Operand shapes are read from the op's result type (for all-reduce the
+    result equals the operand; for all-gather the result is the gathered
+    size — we take the op's *output* bytes, the wire-realistic proxy).
+    """
+    per_op = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '%name = TYPE all-gather(...)' or fusion-inlined variants
+        for op in COLLECTIVE_OPS:
+            if f"= {op}" in s or f" {op}(" in s and "=" in s:
+                # find the result shape: first 'dtype[...]' after '='
+                after_eq = s.split("=", 1)[1] if "=" in s else s
+                shapes = _SHAPE_RE.findall(after_eq.split(op)[0])
+                total = 0
+                for dt, dims in shapes:
+                    n = 1
+                    if dims:
+                        for d in dims.split(","):
+                            n *= int(d)
+                    total += int(n * _DTYPE_BYTES.get(dt, 4))
+                if total == 0:
+                    # tuple results: sum every shape on the line before the op
+                    total = sum(
+                        _shape_bytes(f"{dt}[{dims}]")
+                        for dt, dims in _SHAPE_RE.findall(after_eq)
+                    )
+                ent = per_op.setdefault(op, {"count": 0, "bytes": 0})
+                ent["count"] += 1
+                ent["bytes"] += total
+                break
+    per_op["total"] = {
+        "count": sum(v["count"] for v in per_op.values()),
+        "bytes": sum(v["bytes"] for v in per_op.values()),
+    }
+    return per_op
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             verbose: bool = True, variant: str = "baseline"):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = "" if variant == "baseline" else f"__{variant}"
+    out_path = out_dir / mesh_name / f"{arch_name}__{shape_name}{suffix}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    t0 = time.time()
+    record = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": 512 if multi_pod else 256,
+    }
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch_name, shape_name, mesh, variant=variant)
+        with mesh:
+            jitted = jax.jit(
+                cell.step_fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=tuple(cell.meta.get("donate", ())),
+            )
+            t_build = time.time()
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        record.update(
+            status="ok",
+            meta=cell.meta,
+            lower_s=round(t_lower - t_build, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            memory_analysis={
+                "bytes_per_device": {
+                    "argument": int(mem.argument_size_in_bytes),
+                    "output": int(mem.output_size_in_bytes),
+                    "temp": int(mem.temp_size_in_bytes),
+                    "alias": int(mem.alias_size_in_bytes),
+                    "generated_code": int(mem.generated_code_size_in_bytes),
+                    # donated outputs alias their argument buffers
+                    "total": int(
+                        mem.argument_size_in_bytes
+                        + mem.output_size_in_bytes
+                        + mem.temp_size_in_bytes
+                        - mem.alias_size_in_bytes
+                    ),
+                },
+            },
+            cost_analysis={
+                # raw XLA numbers: while bodies counted ONCE (kept for
+                # reference; the loop-corrected values below are the
+                # roofline inputs — see hlo_analysis.py)
+                "flops_loop_once": float(cost.get("flops", 0.0)),
+                "bytes_accessed_loop_once": float(cost.get("bytes accessed", 0.0)),
+                "transcendentals_loop_once": float(cost.get("transcendentals", 0.0)),
+            },
+            hlo_analysis=analyze_hlo(hlo).to_dict(),
+            collectives_loop_once=collective_bytes_from_hlo(hlo),
+            hlo_bytes=len(hlo),
+        )
+        if verbose:
+            bpd = record["memory_analysis"]["bytes_per_device"]["total"] / 2**30
+            print(
+                f"[ok] {arch_name}:{shape_name} @ {mesh_name}  "
+                f"compile={record['compile_s']}s  mem/dev={bpd:.2f}GiB  "
+                f"flops={record['hlo_analysis']['flops']:.3e}  "
+                f"coll={record['hlo_analysis']['collectives'].get('total',{}).get('bytes',0)/2**30:.3f}GiB"
+            )
+    except Exception as exc:  # record failures; the dry-run table must be complete
+        record.update(status="error", error=f"{type(exc).__name__}: {exc}",
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[FAIL] {arch_name}:{shape_name} @ {mesh_name}: {record['error']}")
+    record["wall_s"] = round(time.time() - t0, 2)
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def iter_cells(include_laf: bool = True):
+    for arch_name in list_archs():
+        arch = get_arch(arch_name)
+        if arch.family == "cluster" and not include_laf:
+            continue
+        for shape_name in arch.shapes:
+            if shape_name in arch.skips:
+                yield arch_name, shape_name, True
+            else:
+                yield arch_name, shape_name, False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--multi-pod", action="store_true", help="alias for --mesh multi")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        "multi" if args.multi_pod else args.mesh
+    ]
+
+    cells = []
+    if args.all:
+        for arch_name, shape_name, skipped in iter_cells():
+            if skipped:
+                arch = get_arch(arch_name)
+                for mp in meshes:
+                    mesh_name = "pod2x16x16" if mp else "pod16x16"
+                    p = out_dir / mesh_name / f"{arch_name}__{shape_name}.json"
+                    p.parent.mkdir(parents=True, exist_ok=True)
+                    p.write_text(json.dumps({
+                        "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                        "status": "skip", "reason": arch.skips[shape_name],
+                    }, indent=2))
+                print(f"[skip] {arch_name}:{shape_name} — documented skip")
+                continue
+            cells.append((arch_name, shape_name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            p = out_dir / mesh_name / f"{arch_name}__{shape_name}.json"
+            if args.skip_existing and p.exists():
+                rec = json.loads(p.read_text())
+                if rec.get("status") == "ok":
+                    print(f"[cached] {arch_name}:{shape_name} @ {mesh_name}")
+                    continue
+            rec = run_cell(arch_name, shape_name, mp, out_dir, variant=args.variant)
+            n_fail += rec["status"] == "error"
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

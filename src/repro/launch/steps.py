@@ -1,0 +1,829 @@
+"""Step builders: for every (arch × shape) cell, produce
+
+    (step_fn, abstract_args, in_shardings, out_shardings)
+
+ready for ``jax.jit(step_fn, ...).lower(*abstract_args)``.  Abstract
+params come from ``jax.eval_shape`` over the pure init functions — a
+236B model never materializes.  Train steps are REAL steps: loss, grads,
+AdamW update with fp32 m/v (so memory_analysis covers optimizer state).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ArchSpec, ShapeSpec, get_arch
+from ..distributed.sharding import (
+    axis_size,
+    named,
+    param_sharding_rule,
+    replicated,
+    tree_param_shardings,
+    tree_replicated,
+)
+from ..models import gnn as gnn_mod
+from ..models import recsys as rec_mod
+from ..models.layers import cross_entropy_loss
+from ..models.transformer import (
+    TransformerConfig,
+    make_cache,
+    make_cache_windowed,
+    transformer_decode_step_windowed,
+    transformer_decode_step,
+    transformer_forward,
+    transformer_init,
+    transformer_loss,
+    transformer_prefill,
+)
+from ..train.optimizer import adamw, adamw_update_params, apply_updates, clip_by_global_norm
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclass
+class LoweredCell:
+    name: str
+    step_fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _dp(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _adamw_abstract_state(abstract_params, dtype=F32):
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, dtype), abstract_params
+        ),
+        "v": jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, dtype), abstract_params
+        ),
+        "step": jax.ShapeDtypeStruct((), I32),
+    }
+
+
+def _opt_shardings(mesh, param_shardings):
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": replicated(mesh),
+    }
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_shard_act(mesh: Mesh):
+    dp = _dp(mesh)
+
+    def shard(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, named(mesh, dp, "model", None))
+        return x
+
+    return shard
+
+
+def _lm_leaf_spec(mesh: Mesh, pstr: str, shape) -> NamedSharding:
+    """Shared FSDP×TP leaf rule (used for both full stacks and the
+    per-layer slices re-pinned inside the scan body — they MUST agree,
+    or the scan-interior constraint overrides the EP/TP MoE layout)."""
+    model = axis_size(mesh, "model")
+    dp = _dp(mesh)
+    dp_size = axis_size(mesh, dp)
+    ndim = len(shape)
+    if "moe" in pstr and ndim >= 3 and "router" not in pstr:
+        # stacked expert weights: (L, E, d, f) or sliced (E, d, f)
+        e_ax = ndim - 3
+        spec = [None] * ndim
+        if shape[e_ax] % model == 0:
+            spec[e_ax] = "model"                          # expert parallel
+            if shape[-2] % dp_size == 0:
+                spec[-2] = dp
+        else:
+            # TP regime (E < model): canonical Megatron pair — wi
+            # column-parallel (f over model), wo row-parallel (f over
+            # model, partial-sum outputs).  A dp-sharded wo f-dim
+            # mismatches the f/model hidden and forces a full all-gather
+            # of the (E, C, f) activation (measured 10 GiB on grok).
+            if "wo" in pstr:
+                if shape[-2] % model == 0:
+                    spec[-2] = "model"
+                if shape[-1] % dp_size == 0:
+                    spec[-1] = dp
+            else:
+                if shape[-2] % dp_size == 0:
+                    spec[-2] = dp
+                if shape[-1] % model == 0:
+                    spec[-1] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return param_sharding_rule(mesh, shape)
+
+
+def _lm_param_shardings(mesh: Mesh, abstract_params):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _lm_leaf_spec(mesh, jax.tree_util.keystr(path), leaf.shape),
+        abstract_params,
+    )
+
+
+def _moe_group_config(cfg: TransformerConfig, mesh: Mesh) -> TransformerConfig:
+    """Rebuild cfg with data-shard-aligned MoE dispatch groups + hooks."""
+    if cfg.moe is None:
+        return cfg
+    import dataclasses
+
+    model = axis_size(mesh, "model")
+    dp = _dp(mesh)
+    dp_size = axis_size(mesh, dp)
+
+    # two regimes:
+    #  * EP (E % model == 0, deepseek 160/16): experts sharded over the
+    #    model axis; dispatch scatters partition on (G, d); the
+    #    d-sharded -> E-sharded layout switch is the canonical all-to-all.
+    #  * TP (E < model, grok 8 experts): buffers stay G-sharded only;
+    #    tensor parallelism lives in the experts' f dim (weights
+    #    P(None, dp, model)) — sharding C or d on the buffers just forces
+    #    layout thrash (measured 42 GiB/dev + 58 TiB collectives).
+    ep = cfg.moe.n_experts % model == 0
+
+    def shard_buf(b):
+        g, e, c, d = b.shape
+        spec = P(dp, "model", None, None) if ep else P(dp, None, None, None)
+        return jax.lax.with_sharding_constraint(b, NamedSharding(mesh, spec))
+
+    def shard_tok(x):  # (G, Tg, d)
+        g, tg, d = x.shape
+        spec = P(dp, None, "model") if (ep and d % model == 0) else P(dp, None, None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def shard_ent(x):  # (G, T*k, d)
+        g, tk, d = x.shape
+        spec = P(dp, None, "model") if (ep and d % model == 0) else P(dp, None, None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def shard_disp(b):  # scatter/gather layout: (G, E, C, d)
+        g, e, c, d = b.shape
+        spec = (
+            P(dp, None, None, "model")
+            if (ep and d % model == 0)
+            else P(dp, None, None, None)
+        )
+        return jax.lax.with_sharding_constraint(b, NamedSharding(mesh, spec))
+
+    moe = dataclasses.replace(
+        cfg.moe, groups=dp_size, shard_buffers=shard_buf, shard_tokens=shard_tok,
+        shard_entries=shard_ent, shard_dispatch=shard_disp,
+    )
+    return dataclasses.replace(cfg, moe=moe)
+
+
+def _lm_shard_layer_params(mesh: Mesh):
+    """Pin per-layer param slices inside the scan body (the stacked
+    leading L axis is gone, so the slice takes the 2D FSDP×TP rule).
+    Keeps reverse-scan grad accumulators sharded — see
+    transformer_forward docstring."""
+
+    def shard(layer_p):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, l: jax.lax.with_sharding_constraint(
+                l, _lm_leaf_spec(mesh, jax.tree_util.keystr(path), l.shape)
+            )
+            if l.ndim >= 2
+            else l,
+            layer_p,
+        )
+
+    return shard
+
+
+def _lm_microbatches(cfg: TransformerConfig, batch: int, mesh: Mesh) -> int:
+    """Gradient-accumulation factor: 100B+ models on a single 256-chip pod
+    cannot hold a full global batch's activations — the production answer
+    is microbatching.  Must divide the per-dp-shard batch."""
+    n = cfg.param_count()
+    dp_size = axis_size(mesh, _dp(mesh))
+    per_shard = batch // dp_size
+    want = 16 if n > 1e11 else (2 if n > 3e10 else 1)
+    while per_shard % want:
+        want //= 2
+    return max(want, 1)
+
+
+def build_lm_train(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    cfg: TransformerConfig = _moe_group_config(arch.make_config(), mesh)
+    b, s = shape.meta["global_batch"], shape.meta["seq_len"]
+    abstract_params = jax.eval_shape(
+        lambda: transformer_init(jax.random.PRNGKey(0), cfg)
+    )
+    p_shard = _lm_param_shardings(mesh, abstract_params)
+    huge = cfg.param_count() > 1e11
+    opt_state_dtype = jnp.bfloat16 if huge else F32
+    shard_act = _lm_shard_act(mesh)
+    dp = _dp(mesh)
+    n_mb = _lm_microbatches(cfg, b, mesh)
+
+    shard_layer = _lm_shard_layer_params(mesh)
+
+    def shard_logits(x):  # (B, chunk, V): batch over dp, vocab over model
+        return jax.lax.with_sharding_constraint(x, named(mesh, dp, None, "model"))
+
+    model_size = axis_size(mesh, "model")
+
+    def shard_qkv(x):  # (B, H, S, D): heads over model (Ulysses layout);
+        # GQA kv heads that don't divide the axis stay replicated (one
+        # gather per layer instead of one per kv block)
+        h_ax = "model" if x.shape[1] % model_size == 0 else None
+        return jax.lax.with_sharding_constraint(
+            x, named(mesh, dp, h_ax, None, None)
+        )
+
+    def shard_grads(grads):
+        return jax.tree_util.tree_map(
+            lambda g, sh: jax.lax.with_sharding_constraint(g, sh), grads, p_shard
+        )
+
+    def loss_fn(p, tokens, labels):
+        return transformer_loss(
+            p, cfg, tokens, labels, shard_act=shard_act,
+            shard_layer_params=shard_layer, ce_chunk=256 if huge else 512,
+            shard_logits=shard_logits, shard_qkv=shard_qkv,
+        )
+
+    def train_step(params, opt_state, batch):
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(
+                params, batch["tokens"], batch["labels"]
+            )
+        else:
+            # microbatch split preserves the dp sharding of the batch dim
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(x.shape[0] // n_mb, n_mb, *x.shape[1:])
+                .swapaxes(0, 1),
+                batch,
+            )
+
+            # bf16 accumulation for 100B+ models: the fp32 accumulator
+            # alone is 3.7 GiB/device (x2 while double-buffering) on
+            # deepseek-236b @ 256 chips; bf16 costs ~3 mantissa bits over
+            # 16 microbatches — the standard trade at this scale.
+            acc_dtype = jnp.bfloat16 if huge else F32
+
+            def acc_body(carry, mb_i):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, mb_i["tokens"], mb_i["labels"]
+                )
+                grad_acc = shard_grads(
+                    jax.tree_util.tree_map(
+                        lambda a, g: (a.astype(F32) + g.astype(F32)).astype(acc_dtype),
+                        grad_acc, grads,
+                    )
+                )
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = shard_grads(
+                jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype), params
+                )
+            )
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), F32), zeros), mb
+            )
+            loss = loss / n_mb
+            grads = jax.tree_util.tree_map(lambda g: g / n_mb, grads)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        opt = adamw(lr=3e-4, state_dtype=opt_state_dtype)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    batch_spec = {
+        "tokens": jax.ShapeDtypeStruct((b, s), I32),
+        "labels": jax.ShapeDtypeStruct((b, s), I32),
+    }
+    abstract_opt = _adamw_abstract_state(abstract_params, opt_state_dtype)
+    batch_shard = {
+        "tokens": named(mesh, dp, None),
+        "labels": named(mesh, dp, None),
+    }
+    in_sh = (p_shard, _opt_shardings(mesh, p_shard), batch_shard)
+    out_sh = (p_shard, _opt_shardings(mesh, p_shard),
+              {"loss": replicated(mesh), "grad_norm": replicated(mesh)})
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", train_step,
+        (abstract_params, abstract_opt, batch_spec), in_sh, out_sh,
+        {"tokens_per_step": b * s, "param_count": cfg.param_count(),
+         "active_param_count": cfg.active_param_count(), "kind": "train",
+         "microbatches": n_mb, "opt_state_dtype": "bf16" if huge else "f32",
+         "donate": (0, 1)},
+    )
+
+
+def build_lm_prefill(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    cfg: TransformerConfig = _moe_group_config(arch.make_config(), mesh)
+    b, s = shape.meta["global_batch"], shape.meta["seq_len"]
+    abstract_params = jax.eval_shape(lambda: transformer_init(jax.random.PRNGKey(0), cfg))
+    p_shard = _lm_param_shardings(mesh, abstract_params)
+    shard_act = _lm_shard_act(mesh)
+    dp = _dp(mesh)
+
+    shard_layer = _lm_shard_layer_params(mesh)
+    n_chunks = _lm_microbatches(cfg, b, mesh)
+
+    def prefill_step(params, tokens):
+        if n_chunks == 1:
+            return transformer_prefill(
+                params, cfg, tokens, shard_act=shard_act, shard_layer_params=shard_layer
+            )
+        # 100B+ models: chunk the prefill batch (sequential lax.map) so
+        # full-seq activations for only batch/n_chunks rows are live.
+        chunks = tokens.reshape(n_chunks, b // n_chunks, s)
+
+        def one(chunk):
+            return transformer_prefill(
+                params, cfg, chunk, shard_act=shard_act,
+                shard_layer_params=shard_layer,
+            )
+
+        out = jax.lax.map(one, chunks)
+        return out.reshape(b, -1)
+
+    args = (abstract_params, jax.ShapeDtypeStruct((b, s), I32))
+    in_sh = (p_shard, named(mesh, dp, None))
+    out_sh = named(mesh, dp, "model")
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", prefill_step, args, in_sh, out_sh,
+        {"tokens_per_step": b * s, "param_count": cfg.param_count(),
+         "active_param_count": cfg.active_param_count(), "kind": "prefill"},
+    )
+
+
+def _cache_shardings(cfg: TransformerConfig, mesh: Mesh, batch: int):
+    """Shard KV cache: batch over dp when divisible; heads over model when
+    divisible, else sequence over model."""
+    dp = _dp(mesh)
+    dp_size = axis_size(mesh, dp)
+    b_ax = dp if batch % dp_size == 0 else None
+    if cfg.attention == "mla":
+        # (L, B, S, r): latent has no head axis -> shard S over model
+        spec = P(None, b_ax, "model", None)
+        return {
+            k: NamedSharding(mesh, spec)
+            for k in ("ckv", "krope", "prefix_ckv", "prefix_krope")
+        }
+    if cfg.kv_heads % axis_size(mesh, "model") == 0:
+        spec = P(None, b_ax, "model", None, None)     # heads over model
+    else:
+        spec = P(None, b_ax, None, "model", None)     # seq over model
+    return {k: NamedSharding(mesh, spec) for k in ("k", "v", "prefix_k", "prefix_v")}
+
+
+def build_lm_decode(
+    arch: ArchSpec, shape: ShapeSpec, mesh: Mesh, variant: str = "baseline"
+) -> LoweredCell:
+    cfg: TransformerConfig = arch.make_config()
+    b, s = shape.meta["global_batch"], shape.meta["seq_len"]
+    abstract_params = jax.eval_shape(lambda: transformer_init(jax.random.PRNGKey(0), cfg))
+    if variant == "windowed":
+        # §Perf hillclimb: ring-buffer caches for local layers +
+        # TP-resident weights.  FSDP re-gathers the whole parameter set
+        # per decoded token (measured 38 GiB collectives/token at B=1);
+        # serving wants weights sharded over EVERY mesh axis and kept
+        # resident — zero per-step weight traffic.
+        assert cfg.window is not None and cfg.global_every > 0
+        abstract_cache = jax.eval_shape(lambda: make_cache_windowed(cfg, b, s))
+        all_axes = tuple(mesh.axis_names)
+        total = axis_size(mesh, all_axes)
+
+        def serve_param_spec(leaf):
+            if leaf.ndim < 2:
+                return replicated(mesh)
+            spec = [None] * leaf.ndim
+            if leaf.shape[-1] % total == 0:
+                spec[-1] = all_axes
+            elif leaf.shape[-2] % total == 0:
+                spec[-2] = all_axes
+            elif leaf.shape[-1] % axis_size(mesh, "model") == 0:
+                spec[-1] = "model"
+            return NamedSharding(mesh, P(*spec))
+
+        p_shard = jax.tree_util.tree_map(serve_param_spec, abstract_params)
+        dp = _dp(mesh)
+        dp_size = axis_size(mesh, dp)
+        b_ax = dp if b % dp_size == 0 else None
+
+        def cache_sh_one(leaf):
+            # leading block axes, then (B, H, S_or_W, D)
+            lead = [None] * (leaf.ndim - 4)
+            model_ok = cfg.kv_heads % axis_size(mesh, "model") == 0
+            if b_ax is None and model_ok and leaf.shape[-2] % dp_size == 0:
+                # B unshardable: heads over model AND seq over dp
+                return NamedSharding(mesh, P(*lead, None, "model", dp, None))
+            if model_ok:
+                return NamedSharding(mesh, P(*lead, b_ax, "model", None, None))
+            return NamedSharding(mesh, P(*lead, b_ax, None, "model", None))
+
+        cache_sh = jax.tree_util.tree_map(cache_sh_one, abstract_cache)
+
+        def decode_step(params, token, cache, cur_len):
+            # no residual constraint: (B=1, 1, D) activations are
+            # unshardable, and the training-oriented seq constraint only
+            # forces gathers at serve time
+            return transformer_decode_step_windowed(
+                params, cfg, token, cache, cur_len
+            )
+
+        args = (
+            abstract_params,
+            jax.ShapeDtypeStruct((b, 1), I32),
+            abstract_cache,
+            jax.ShapeDtypeStruct((), I32),
+        )
+        in_sh = (p_shard, named(mesh, b_ax, None), cache_sh, replicated(mesh))
+        out_sh = (named(mesh, b_ax, "model"), cache_sh)
+        return LoweredCell(
+            f"{arch.name}:{shape.name}", decode_step, args, in_sh, out_sh,
+            {"tokens_per_step": b, "param_count": cfg.param_count(),
+             "active_param_count": cfg.active_param_count(), "kind": "decode",
+             "kv_len": s, "donate": (2,), "variant": "windowed"},
+        )
+    abstract_cache = jax.eval_shape(lambda: make_cache(cfg, b, s))
+    p_shard = _lm_param_shardings(mesh, abstract_params)
+    cache_sh_all = _cache_shardings(cfg, mesh, b)
+    cache_sh = {k: cache_sh_all[k] for k in abstract_cache}
+    dp = _dp(mesh)
+    dp_size = axis_size(mesh, dp)
+    b_ax = dp if b % dp_size == 0 else None
+
+    def decode_step(params, token, cache, cur_len):
+        return transformer_decode_step(params, cfg, token, cache, cur_len)
+
+    args = (
+        abstract_params,
+        jax.ShapeDtypeStruct((b, 1), I32),
+        abstract_cache,
+        jax.ShapeDtypeStruct((), I32),
+    )
+    in_sh = (p_shard, named(mesh, b_ax, None), cache_sh, replicated(mesh))
+    out_sh = (named(mesh, b_ax, "model"), cache_sh)
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", decode_step, args, in_sh, out_sh,
+        {"tokens_per_step": b, "param_count": cfg.param_count(),
+         "active_param_count": cfg.active_param_count(), "kind": "decode",
+         "kv_len": s, "donate": (2,)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def build_gnn_train(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    from ..configs.gat_cora import config_for_shape
+
+    cfg = config_for_shape(shape.name)
+    abstract_params = jax.eval_shape(lambda: gnn_mod.gat_init(jax.random.PRNGKey(0), cfg))
+    p_shard = tree_replicated(mesh, abstract_params)  # tiny params: replicate
+    opt = adamw(lr=1e-3)
+    dp = _dp(mesh)
+    edge_axes = ("pod", "data", "model") if "pod" in mesh.axis_names else ("data", "model")
+
+    if shape.name == "molecule":
+        b = shape.meta["batch"]
+        n, e, d = shape.meta["n_nodes"], shape.meta["n_edges"], shape.meta["d_feat"]
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                logits = gnn_mod.gat_forward_batched(p, cfg, batch["feats"], batch["src"], batch["dst"])
+                return jnp.mean(jnp.square(logits.sum(-1) - batch["y"]))
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, {"loss": loss}
+
+        batch_spec = {
+            "feats": jax.ShapeDtypeStruct((b, n, d), F32),
+            "src": jax.ShapeDtypeStruct((b, e), I32),
+            "dst": jax.ShapeDtypeStruct((b, e), I32),
+            "y": jax.ShapeDtypeStruct((b,), F32),
+        }
+        batch_sh = {
+            "feats": named(mesh, dp, None, None),
+            "src": named(mesh, dp, None),
+            "dst": named(mesh, dp, None),
+            "y": named(mesh, dp),
+        }
+        n_edges_total = b * e
+    else:
+        if shape.name == "minibatch_lg":
+            bn, f1, f2 = shape.meta["batch_nodes"], shape.meta["fanout1"], shape.meta["fanout2"]
+            n = bn + bn * f1 + bn * f1 * f2
+            e = bn * f1 + bn * f1 * f2
+            n_labeled = bn
+        else:
+            n, e = shape.meta["n_nodes"], shape.meta["n_edges"]
+            n_labeled = n
+        d = shape.meta["d_feat"]
+        # pad the edge axis to a device multiple (edge_mask covers pads)
+        n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        e = -(-e // n_dev) * n_dev
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                return gnn_mod.gat_loss(
+                    p, cfg, batch["feats"], batch["src"], batch["dst"],
+                    batch["labels"], label_mask=batch["label_mask"],
+                    edge_mask=batch["edge_mask"],
+                )
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, {"loss": loss}
+
+        batch_spec = {
+            "feats": jax.ShapeDtypeStruct((n, d), F32),
+            "src": jax.ShapeDtypeStruct((e,), I32),
+            "dst": jax.ShapeDtypeStruct((e,), I32),
+            "labels": jax.ShapeDtypeStruct((n,), I32),
+            "label_mask": jax.ShapeDtypeStruct((n,), F32),
+            "edge_mask": jax.ShapeDtypeStruct((e,), jnp.bool_),
+        }
+        # edges sharded over ALL mesh axes; node arrays replicated
+        e_sh = named(mesh, edge_axes)
+        batch_sh = {
+            "feats": replicated(mesh),
+            "src": e_sh,
+            "dst": e_sh,
+            "labels": replicated(mesh),
+            "label_mask": replicated(mesh),
+            "edge_mask": e_sh,
+        }
+        n_edges_total = e
+
+    abstract_opt = _adamw_abstract_state(abstract_params)
+    in_sh = (p_shard, _opt_shardings(mesh, p_shard), batch_sh)
+    out_sh = (p_shard, _opt_shardings(mesh, p_shard), {"loss": replicated(mesh)})
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", train_step,
+        (abstract_params, abstract_opt, batch_spec), in_sh, out_sh,
+        {"kind": "train", "donate": (0, 1), "n_edges": n_edges_total,
+         "param_count": sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params))},
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys family
+# ---------------------------------------------------------------------------
+
+
+def _recsys_model_fns(arch: ArchSpec):
+    name = arch.name
+    cfg = arch.make_config()
+    if name == "deepfm":
+        init = lambda: rec_mod.deepfm_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda p, b: rec_mod.deepfm_forward(p, cfg, b["ids"])
+        user = lambda p, b: rec_mod.deepfm_user_embedding(p, cfg, b["ids"])
+        emb_dim, inputs = cfg.embed_dim, "fields"
+    elif name == "autoint":
+        init = lambda: rec_mod.autoint_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda p, b: rec_mod.autoint_forward(p, cfg, b["ids"])
+        user = lambda p, b: rec_mod.autoint_user_embedding(p, cfg, b["ids"])
+        emb_dim, inputs = cfg.embed_dim, "fields"
+    elif name == "dien":
+        init = lambda: rec_mod.dien_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda p, b: rec_mod.dien_forward(p, cfg, b["hist"], b["target"])
+        user = lambda p, b: rec_mod.dien_user_embedding(p, cfg, b["hist"])
+        emb_dim, inputs = cfg.embed_dim, "seq"
+    elif name == "bst":
+        init = lambda: rec_mod.bst_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda p, b: rec_mod.bst_forward(p, cfg, b["hist"], b["target"])
+        user = lambda p, b: rec_mod.bst_user_embedding(p, cfg, b["hist"])
+        emb_dim, inputs = cfg.embed_dim, "seq"
+    else:
+        raise KeyError(name)
+    return cfg, init, fwd, user, emb_dim, inputs
+
+
+def _recsys_batch_spec(arch: ArchSpec, cfg, batch: int, mesh: Mesh, with_label: bool):
+    dp = _dp(mesh)
+    dp_size = axis_size(mesh, dp)
+    b_ax = dp if batch % dp_size == 0 else None
+    name = arch.name
+    if name in ("deepfm", "autoint"):
+        spec = {"ids": jax.ShapeDtypeStruct((batch, cfg.n_fields), I32)}
+        sh = {"ids": named(mesh, b_ax, None)}
+    else:
+        spec = {
+            "hist": jax.ShapeDtypeStruct((batch, cfg.seq_len), I32),
+            "target": jax.ShapeDtypeStruct((batch,), I32),
+        }
+        sh = {"hist": named(mesh, b_ax, None), "target": named(mesh, b_ax)}
+    if with_label:
+        spec["label"] = jax.ShapeDtypeStruct((batch,), F32)
+        sh["label"] = named(mesh, b_ax)
+    return spec, sh
+
+
+def _recsys_param_shardings(mesh: Mesh, abstract_params):
+    """Embedding tables row-sharded over every mesh axis; towers replicated."""
+    all_axes = tuple(mesh.axis_names)
+
+    def rule(leaf):
+        if leaf.ndim == 2 and leaf.shape[0] >= 4096:  # big table
+            if leaf.shape[0] % axis_size(mesh, all_axes) == 0:
+                return NamedSharding(mesh, P(all_axes, None))
+        return param_sharding_rule(mesh, leaf.shape) if leaf.ndim >= 2 else replicated(mesh)
+
+    return jax.tree_util.tree_map(rule, abstract_params)
+
+
+def build_recsys_train(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    cfg, init, fwd, _user, _d, _inp = _recsys_model_fns(arch)
+    b = shape.meta["batch"]
+    abstract_params = jax.eval_shape(init)
+    p_shard = _recsys_param_shardings(mesh, abstract_params)
+    opt = adamw(lr=1e-3)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return rec_mod.bce_loss(fwd(p, batch), batch["label"])
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, {"loss": loss}
+
+    batch_spec, batch_sh = _recsys_batch_spec(arch, cfg, b, mesh, with_label=True)
+    abstract_opt = _adamw_abstract_state(abstract_params)
+    in_sh = (p_shard, _opt_shardings(mesh, p_shard), batch_sh)
+    out_sh = (p_shard, _opt_shardings(mesh, p_shard), {"loss": replicated(mesh)})
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", train_step,
+        (abstract_params, abstract_opt, batch_spec), in_sh, out_sh,
+        {"kind": "train", "donate": (0, 1), "batch": b,
+         "param_count": sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params))},
+    )
+
+
+def build_recsys_forward(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    cfg, init, fwd, _user, _d, _inp = _recsys_model_fns(arch)
+    b = shape.meta["batch"]
+    abstract_params = jax.eval_shape(init)
+    p_shard = _recsys_param_shardings(mesh, abstract_params)
+
+    def serve_step(params, batch):
+        return jax.nn.sigmoid(fwd(params, batch))
+
+    batch_spec, batch_sh = _recsys_batch_spec(arch, cfg, b, mesh, with_label=False)
+    dp = _dp(mesh)
+    b_ax = dp if b % axis_size(mesh, dp) == 0 else None
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", serve_step,
+        (abstract_params, batch_spec), (p_shard, batch_sh), named(mesh, b_ax),
+        {"kind": "forward", "batch": b,
+         "param_count": sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params))},
+    )
+
+
+def build_recsys_retrieval(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    cfg, init, _fwd, user, emb_dim, _inp = _recsys_model_fns(arch)
+    b, nc = shape.meta["batch"], shape.meta["n_candidates"]
+    abstract_params = jax.eval_shape(init)
+    p_shard = _recsys_param_shardings(mesh, abstract_params)
+
+    def retrieval_step(params, batch, candidates):
+        q = user(params, batch)                      # (B, emb_dim)
+        return rec_mod.retrieval_scores(q, candidates)
+
+    batch_spec, batch_sh = _recsys_batch_spec(arch, cfg, b, mesh, with_label=False)
+    cand_spec = jax.ShapeDtypeStruct((nc, emb_dim), F32)
+    cand_sh = named(mesh, "model", None)            # candidates row-sharded
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", retrieval_step,
+        (abstract_params, batch_spec, cand_spec),
+        (p_shard, batch_sh, cand_sh), named(mesh, None, "model"),
+        {"kind": "retrieval", "batch": b, "n_candidates": nc,
+         "param_count": sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params))},
+    )
+
+
+# ---------------------------------------------------------------------------
+# LAF clustering family (the paper's workload)
+# ---------------------------------------------------------------------------
+
+
+def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    from ..configs.laf_dbscan import LAFClusterConfig
+    from ..core.cardinality.rmi import RMIConfig, init_rmi, rmi_predict_counts
+
+    base: LAFClusterConfig = arch.make_config()
+    n, d = shape.meta["n_points"], shape.meta["dim"]
+    # pad the database to a device multiple (zero rows never pass the
+    # eps threshold for eps < 1, and counts subtract exactly otherwise)
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    n = -(-n // n_dev) * n_dev
+    dtype = jnp.bfloat16 if n > 10_000_000 else F32
+    frontier = base.frontier
+    rmi_cfg = RMIConfig(input_dim=d + 1)
+    abstract_rmi = jax.eval_shape(lambda: init_rmi(jax.random.PRNGKey(0), rmi_cfg))
+    all_axes = tuple(mesh.axis_names)
+    thresh = 1.0 - base.eps
+
+    def cluster_step(rmi_params, db, queries):
+        """One frontier round: RMI predicts frontier cardinalities; the
+        whole frontier's range counts + partial-neighbor increments are
+        computed against the device-sharded database."""
+        feats = jnp.concatenate(
+            [queries, jnp.full((queries.shape[0], 1), base.eps, queries.dtype)], axis=1
+        )
+        pred = rmi_predict_counts(rmi_params, feats.astype(F32), rmi_cfg)
+        gate = (pred >= base.alpha * base.tau).astype(F32)  # skip decisions
+
+        def chunk_counts(qc):
+            # native-dtype MXU dot with fp32 accumulation: upcasting the
+            # database to f32 first doubles HBM traffic and halves the
+            # bf16 MXU rate (§Perf iteration on web_1b)
+            dots = jax.lax.dot_general(
+                qc, db, (((1,), (1,)), ((), ())),
+                preferred_element_type=F32,
+            )                                                  # (C, n)
+            hit = dots > thresh
+            return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
+
+        # bound the live (chunk, n_local) fp32 score tile to ~0.5 GiB
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        rows_budget = max(32, int(1.25e8 / max(n // n_dev, 1)))
+        n_chunks = 1
+        while frontier // n_chunks > rows_budget and n_chunks < frontier:
+            n_chunks *= 2
+        qs = queries.reshape(n_chunks, frontier // n_chunks, d)
+        counts, partials = jax.lax.map(chunk_counts, qs)
+        counts = counts.reshape(frontier)
+        partial_counts = partials.sum(axis=0)
+        # masked by skip decisions (skipped queries contribute nothing)
+        counts = (counts.astype(F32) * gate).astype(I32)
+        return counts, partial_counts, pred
+
+    args = (
+        abstract_rmi,
+        jax.ShapeDtypeStruct((n, d), dtype),
+        jax.ShapeDtypeStruct((frontier, d), dtype),
+    )
+    in_sh = (
+        tree_replicated(mesh, abstract_rmi),
+        named(mesh, all_axes, None),   # db row-sharded over every device
+        replicated(mesh),
+    )
+    out_sh = (replicated(mesh), named(mesh, all_axes), replicated(mesh))
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh,
+        {"kind": "cluster", "n_points": n, "dim": d, "frontier": frontier},
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def build_cell(
+    arch_name: str, shape_name: str, mesh: Mesh, variant: str = "baseline"
+) -> LoweredCell:
+    arch = get_arch(arch_name)
+    shape = arch.shapes[shape_name]
+    if shape_name in arch.skips:
+        raise ValueError(f"{arch_name}:{shape_name} is a documented skip: {arch.skips[shape_name]}")
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return build_lm_train(arch, shape, mesh)
+        if shape.kind == "prefill":
+            return build_lm_prefill(arch, shape, mesh)
+        if shape.kind == "decode":
+            return build_lm_decode(arch, shape, mesh, variant=variant)
+    if arch.family == "gnn":
+        return build_gnn_train(arch, shape, mesh)
+    if arch.family == "recsys":
+        if shape.kind == "train":
+            return build_recsys_train(arch, shape, mesh)
+        if shape.kind == "forward":
+            return build_recsys_forward(arch, shape, mesh)
+        if shape.kind == "retrieval":
+            return build_recsys_retrieval(arch, shape, mesh)
+    if arch.family == "cluster":
+        return build_laf_cluster(arch, shape, mesh)
+    raise KeyError(f"no builder for {arch.family}/{shape.kind}")

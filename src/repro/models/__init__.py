@@ -1,0 +1,6 @@
+"""Architecture zoo: pure-pytree JAX modules (init_fn + apply_fn pairs).
+
+No flax/haiku in the environment — params are nested dicts, every init
+is a pure function of a PRNG key (so ``jax.eval_shape`` builds abstract
+params for the multi-pod dry-run without materializing 100B+ weights).
+"""

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded
+scatter dispatch (the TPU-idiomatic GShard formulation).
+
+Tokens are organized into **groups** (one per data-parallel shard at
+production scale): routing, slot assignment and the capacity bound are
+group-local, so the one-hot/cumsum bookkeeping never crosses shards.
+The (G, E, C, d) dispatch buffers shard G over the data axis and E over
+the model axis (expert parallelism) — under pjit the group->expert
+exchange lowers to the canonical all-to-all.  Without grouping, XLA is
+forced to materialize global dispatch state: measured 226 GiB/device
+(vs 8 GiB grouped) on deepseek-v2-236b/train_4k @ 256 devices.
+
+Tokens beyond capacity are dropped (standard GShard/Switch semantics,
+droppage reported as an aux stat).  Shared experts (DeepSeek-V2) run
+densely beside the routed path.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, swiglu, swiglu_init
+
+Identity = lambda x: x
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    n_shared: int = 0         # always-on shared experts (DeepSeek-V2)
+    capacity_factor: float = 1.25
+    groups: int = 1           # dispatch groups (= data shards at scale)
+    shard_buffers: Optional[Callable] = None   # hook: (G,E,C,d) expert-compute layout
+    shard_dispatch: Optional[Callable] = None  # hook: (G,E,C,d) scatter/gather layout
+    shard_tokens: Optional[Callable] = None    # hook: (G,T,d) constraint
+    shard_entries: Optional[Callable] = None   # hook: (G,T*k,d) constraint
+    dtype: object = jnp.float32
+
+
+def moe_init(key, cfg: MoEConfig):
+    ks = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / math.sqrt(d)
+    params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router in fp32
+        "wi_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(cfg.dtype),
+        "wi_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(cfg.dtype),
+        "wo": (jax.random.normal(ks[3], (e, f, d), jnp.float32) / math.sqrt(f)).astype(cfg.dtype),
+    }
+    if cfg.n_shared:
+        key, sub = jax.random.split(key)
+        params["shared"] = swiglu_init(sub, d, f * cfg.n_shared, cfg.dtype)
+    return params
+
+
+def _capacity(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(cfg.capacity_factor * cfg.top_k * tokens_per_group / cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for lane friendliness
+
+
+def moe_apply(params, cfg: MoEConfig, x: jax.Array):
+    """x (T, d) -> (T, d), aux dict.  Callers flatten (B, S) -> T.
+    T must divide by cfg.groups (groups=1 for single-host use).
+
+    No vmap: everything carries an explicit leading G axis so the
+    sharding hooks can pin the (G, T·k, d) entry matrices — inside vmap,
+    with_sharding_constraint cannot express the batched spec, and the
+    gathers end up replicated over the model axis (measured 7.5 GiB
+    fp32 buffers on deepseek-v2-236b/train_4k)."""
+    t, d = x.shape
+    g = cfg.groups
+    e, k = cfg.n_experts, cfg.top_k
+    assert t % g == 0, (t, g)
+    tg = t // g
+    cap = _capacity(tg, cfg)
+    shard_tok = cfg.shard_tokens or Identity
+    shard_buf = cfg.shard_buffers or Identity
+    shard_disp = cfg.shard_dispatch or Identity
+    shard_ent = cfg.shard_entries or Identity
+
+    xg = shard_tok(x.reshape(g, tg, d))
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                        # (G, Tg, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = expert_idx.reshape(g, tg * k)                    # (G, TK)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)       # (G, TK, E)
+    ranks = jnp.cumsum(onehot, axis=1) - onehot                    # entries before me, per group
+    slot = jnp.take_along_axis(ranks, flat_expert[..., None], axis=2)[..., 0]
+    keep = slot < cap
+    safe_slot = jnp.where(keep, slot, cap - 1)                     # (G, TK)
+    token_of_entry = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tg), k)[None], (g, tg * k)
+    )
+
+    entries = jnp.take_along_axis(xg, token_of_entry[..., None], axis=1)  # (G, TK, d)
+    entries = shard_ent(jnp.where(keep[..., None], entries, 0).astype(x.dtype))
+    # per-group 2-index scatter (batched via vmap — GSPMD partitions the
+    # G and d dims; a flat 3-index scatter defeats partitioning entirely:
+    # measured 519 GiB/dev + 70 TiB collectives on deepseek train_4k)
+    buf = jax.vmap(
+        lambda ent, fe, ss: jnp.zeros((e, cap, d), x.dtype).at[fe, ss].add(ent, mode="drop")
+    )(entries, flat_expert, safe_slot)
+    # scatter partitions on (G, d); the expert einsum wants (G, E) — the
+    # layout switch below is the canonical MoE all-to-all.
+    buf = shard_disp(buf)
+    buf = shard_buf(buf)                                           # (G, E, C, d)
+
+    bf = buf.astype(jnp.float32)
+    gate = jax.nn.silu(jnp.einsum("gecd,edf->gecf", bf, params["wi_gate"].astype(jnp.float32)))
+    up = jnp.einsum("gecd,edf->gecf", bf, params["wi_up"].astype(jnp.float32))
+    y = jnp.einsum("gecf,efd->gecd", gate * up, params["wo"].astype(jnp.float32))
+    y = shard_buf(y.astype(x.dtype))
+    y = shard_disp(y)                                              # all-to-all back
+
+    gathered = jax.vmap(lambda yy, fe, ss: yy[fe, ss])(y, flat_expert, safe_slot)
+    gathered = shard_ent(jnp.where(keep[..., None], gathered, 0))
+    weighted = shard_ent(
+        gathered.astype(jnp.float32) * gate_vals.reshape(g, tg * k)[..., None]
+    )
+    out = jax.vmap(
+        lambda w, toe: jnp.zeros((tg, d), jnp.float32).at[toe].add(w)
+    )(weighted, token_of_entry)
+    # cast BEFORE the layout transition back to the residual sharding:
+    # the (G·Tg, d) boundary tensor (and its cotangent) then moves as
+    # bf16, halving the seq<->feature all-to-all bytes.
+    out = shard_tok(out.astype(x.dtype))
+    out = out.reshape(t, d)
+
+    aux = {
+        "drop_fraction": 1.0 - keep.mean(),
+        "router_entropy": -(probs * jnp.log(probs + 1e-9)).sum(-1).mean(),
+        "lb_loss": e * jnp.mean(
+            probs.mean((0, 1)) * onehot.sum((0, 1)) / max(t * k, 1)
+        ),
+    }
+
+    if cfg.n_shared:
+        out = out + swiglu(params["shared"], x)
+    return out.astype(x.dtype), aux

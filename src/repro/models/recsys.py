@@ -1,0 +1,337 @@
+"""RecSys ranking models: DeepFM, AutoInt, DIEN (GRU+AUGRU), BST.
+
+Common substrate: per-field embedding lookup over huge row-sharded
+tables (``jnp.take`` — JAX has no nn.EmbeddingBag; the multi-hot variant
+lives in ``repro.kernels.embedding_bag``), feature-interaction ops (FM /
+self-attention / attention-GRU / transformer block), small MLP towers,
+sigmoid CTR head.  ``retrieval_cand`` scoring is one batched dot against
+10^6 candidate embeddings — matmul, not a loop.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, layernorm, layernorm_init, mlp_apply, mlp_init
+
+
+# ---------------------------------------------------------------------------
+# embedding substrate
+# ---------------------------------------------------------------------------
+
+
+def embedding_tables_init(key, vocab_sizes: Sequence[int], dim: int, dtype=jnp.float32):
+    """One (V_f, dim) table per sparse field."""
+    tables = []
+    for v in vocab_sizes:
+        key, sub = jax.random.split(key)
+        tables.append((jax.random.normal(sub, (v, dim), jnp.float32) * 0.01).astype(dtype))
+    return tables
+
+
+def lookup_fields(tables, ids: jax.Array) -> jax.Array:
+    """ids (B, F) -> (B, F, dim)."""
+    cols = [jnp.take(t, ids[:, f], axis=0) for f, t in enumerate(tables)]
+    return jnp.stack(cols, axis=1)
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * labels + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# ---------------------------------------------------------------------------
+# DeepFM (Guo et al. 2017): FM interaction + deep tower, shared embeddings
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DeepFMConfig:
+    vocab_sizes: Tuple[int, ...]
+    embed_dim: int = 10
+    mlp_dims: Tuple[int, ...] = (400, 400, 400)
+    dtype: object = jnp.float32
+
+    @property
+    def n_fields(self):
+        return len(self.vocab_sizes)
+
+
+def deepfm_init(key, cfg: DeepFMConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    first_order = []
+    for v in cfg.vocab_sizes:
+        k2, sub = jax.random.split(k2)
+        first_order.append((jax.random.normal(sub, (v, 1), jnp.float32) * 0.01).astype(cfg.dtype))
+    return {
+        "tables": embedding_tables_init(k1, cfg.vocab_sizes, cfg.embed_dim, cfg.dtype),
+        "first_order": first_order,
+        "mlp": mlp_init(k3, [cfg.n_fields * cfg.embed_dim, *cfg.mlp_dims, 1], cfg.dtype),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def deepfm_forward(params, cfg: DeepFMConfig, ids: jax.Array) -> jax.Array:
+    """ids (B, F) -> CTR logits (B,)."""
+    emb = lookup_fields(params["tables"], ids)                     # (B, F, D)
+    # FM second order: 0.5 * ((sum_f v)^2 - sum_f v^2)
+    s = emb.sum(axis=1)
+    fm2 = 0.5 * (jnp.square(s) - jnp.square(emb).sum(axis=1)).sum(axis=-1)
+    fm1 = jnp.concatenate(
+        [jnp.take(t, ids[:, f], axis=0) for f, t in enumerate(params["first_order"])],
+        axis=1,
+    ).sum(axis=1)
+    deep = mlp_apply(params["mlp"], emb.reshape(emb.shape[0], -1))[:, 0]
+    return (fm1 + fm2 + deep).astype(jnp.float32) + params["bias"]
+
+
+# ---------------------------------------------------------------------------
+# AutoInt (Song et al. 2019): multi-head self-attention over field embeds
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AutoIntConfig:
+    vocab_sizes: Tuple[int, ...]
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    dtype: object = jnp.float32
+
+    @property
+    def n_fields(self):
+        return len(self.vocab_sizes)
+
+
+def autoint_init(key, cfg: AutoIntConfig):
+    k1, key = jax.random.split(key)
+    layers = []
+    d = cfg.embed_dim
+    for _ in range(cfg.n_attn_layers):
+        key, kq, kk, kv, kr = jax.random.split(key, 5)
+        layers.append(
+            {
+                "wq": dense_init(kq, d, cfg.n_heads * cfg.d_attn, cfg.dtype),
+                "wk": dense_init(kk, d, cfg.n_heads * cfg.d_attn, cfg.dtype),
+                "wv": dense_init(kv, d, cfg.n_heads * cfg.d_attn, cfg.dtype),
+                "wres": dense_init(kr, d, cfg.n_heads * cfg.d_attn, cfg.dtype),
+            }
+        )
+        d = cfg.n_heads * cfg.d_attn
+    key, kh = jax.random.split(key)
+    return {
+        "tables": embedding_tables_init(k1, cfg.vocab_sizes, cfg.embed_dim, cfg.dtype),
+        "attn_layers": layers,
+        "head": dense_init(kh, cfg.n_fields * d, 1, cfg.dtype),
+    }
+
+
+def autoint_forward(params, cfg: AutoIntConfig, ids: jax.Array) -> jax.Array:
+    x = lookup_fields(params["tables"], ids)                        # (B, F, D)
+    b, f, _ = x.shape
+    for p in params["attn_layers"]:
+        q = dense(p["wq"], x).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        k = dense(p["wk"], x).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        v = dense(p["wv"], x).reshape(b, f, cfg.n_heads, cfg.d_attn)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        attn = jax.nn.softmax(logits / math.sqrt(cfg.d_attn), axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v.astype(jnp.float32))
+        o = o.reshape(b, f, cfg.n_heads * cfg.d_attn).astype(x.dtype)
+        x = jax.nn.relu(o + dense(p["wres"], x))
+    return dense(params["head"], x.reshape(b, -1))[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DIEN (Zhou et al. 2018): interest extraction GRU + AUGRU evolution
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DIENConfig:
+    item_vocab: int
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: Tuple[int, ...] = (200, 80)
+    dtype: object = jnp.float32
+
+
+def _gru_init(key, d_in, d_h, dtype):
+    ks = jax.random.split(key, 3)
+    def gate(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "wx": dense_init(k1, d_in, d_h, dtype),
+            "wh": dense_init(k2, d_h, d_h, dtype),
+            "b": jnp.zeros((d_h,), dtype),
+        }
+    return {"update": gate(ks[0]), "reset": gate(ks[1]), "cand": gate(ks[2])}
+
+
+def _gru_cell(p, h, x, att=None):
+    def gate(g, hh):
+        return x @ g["wx"].astype(x.dtype) + hh @ g["wh"].astype(x.dtype) + g["b"].astype(x.dtype)
+
+    z = jax.nn.sigmoid(gate(p["update"], h).astype(jnp.float32))
+    r = jax.nn.sigmoid(gate(p["reset"], h).astype(jnp.float32))
+    hc = jnp.tanh(gate(p["cand"], (r.astype(h.dtype) * h)).astype(jnp.float32))
+    if att is not None:  # AUGRU: attention scales the update gate
+        z = z * att[:, None]
+    out = (1 - z) * h.astype(jnp.float32) + z * hc
+    return out.astype(h.dtype)
+
+
+def dien_init(key, cfg: DIENConfig):
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_concat = cfg.gru_dim + cfg.embed_dim  # final interest + target embed
+    return {
+        "item_table": (jax.random.normal(k1, (cfg.item_vocab, cfg.embed_dim), jnp.float32) * 0.01).astype(cfg.dtype),
+        "gru1": _gru_init(k2, cfg.embed_dim, cfg.gru_dim, cfg.dtype),
+        "augru": _gru_init(k3, cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att_w": dense_init(k4, cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "mlp": mlp_init(k5, [d_concat, *cfg.mlp_dims, 1], cfg.dtype),
+    }
+
+
+def dien_forward(params, cfg: DIENConfig, hist: jax.Array, target: jax.Array) -> jax.Array:
+    """hist (B, L) item ids; target (B,) item ids -> CTR logits (B,)."""
+    b, l = hist.shape
+    emb = jnp.take(params["item_table"], hist, axis=0)               # (B, L, D)
+    tgt = jnp.take(params["item_table"], target, axis=0)             # (B, D)
+
+    # interest extraction GRU over the behavior sequence
+    def step1(h, x_t):
+        h = _gru_cell(params["gru1"], h, x_t)
+        return h, h
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    _, interests = jax.lax.scan(step1, h0, emb.transpose(1, 0, 2))   # (L, B, G)
+
+    # attention of target on each interest state (for AUGRU update gates)
+    tgt_proj = jnp.pad(tgt, ((0, 0), (0, cfg.gru_dim - cfg.embed_dim)))
+    att_logits = jnp.einsum(
+        "lbg,bg->lb",
+        dense(params["att_w"], interests).astype(jnp.float32),
+        tgt_proj.astype(jnp.float32),
+    ) / math.sqrt(cfg.gru_dim)
+    att = jax.nn.softmax(att_logits, axis=0)                          # (L, B)
+
+    # interest evolution AUGRU
+    def step2(h, xs):
+        x_t, a_t = xs
+        h = _gru_cell(params["augru"], h, x_t, att=a_t)
+        return h, None
+
+    h_final, _ = jax.lax.scan(step2, h0, (interests, att))            # (B, G)
+    feat = jnp.concatenate([h_final, tgt], axis=-1)
+    return mlp_apply(params["mlp"], feat)[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# BST (Chen et al. 2019): transformer block over the behavior sequence
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BSTConfig:
+    item_vocab: int
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    mlp_dims: Tuple[int, ...] = (1024, 512, 256)
+    dtype: object = jnp.float32
+
+
+def bst_init(key, cfg: BSTConfig):
+    k1, k2, key = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        key, kq, kk, kv, ko, kf1, kf2 = jax.random.split(key, 7)
+        blocks.append(
+            {
+                "wq": dense_init(kq, d, d, cfg.dtype),
+                "wk": dense_init(kk, d, d, cfg.dtype),
+                "wv": dense_init(kv, d, d, cfg.dtype),
+                "wo": dense_init(ko, d, d, cfg.dtype),
+                "ln1": layernorm_init(d, cfg.dtype),
+                "ln2": layernorm_init(d, cfg.dtype),
+                "ff1": dense_init(kf1, d, 4 * d, cfg.dtype),
+                "ff2": dense_init(kf2, 4 * d, d, cfg.dtype),
+            }
+        )
+    key, kh = jax.random.split(key)
+    seq_total = cfg.seq_len + 1  # behavior seq + target item
+    return {
+        "item_table": (jax.random.normal(k1, (cfg.item_vocab, d), jnp.float32) * 0.01).astype(cfg.dtype),
+        "pos_table": (jax.random.normal(k2, (seq_total, d), jnp.float32) * 0.01).astype(cfg.dtype),
+        "blocks": blocks,
+        "mlp": mlp_init(kh, [seq_total * d, *cfg.mlp_dims, 1], cfg.dtype),
+    }
+
+
+def bst_forward(params, cfg: BSTConfig, hist: jax.Array, target: jax.Array) -> jax.Array:
+    b, l = hist.shape
+    seq = jnp.concatenate([hist, target[:, None]], axis=1)           # (B, L+1)
+    x = jnp.take(params["item_table"], seq, axis=0) + params["pos_table"][None]
+    d, h = cfg.embed_dim, cfg.n_heads
+    dh = d // h
+    for p in params["blocks"]:
+        xn = layernorm(p["ln1"], x)
+        q = dense(p["wq"], xn).reshape(b, l + 1, h, dh)
+        k = dense(p["wk"], xn).reshape(b, l + 1, h, dh)
+        v = dense(p["wv"], xn).reshape(b, l + 1, h, dh)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        attn = jax.nn.softmax(logits / math.sqrt(dh), axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v.astype(jnp.float32)).reshape(b, l + 1, d)
+        x = x + dense(p["wo"], o.astype(x.dtype))
+        xn = layernorm(p["ln2"], x)
+        x = x + dense(p["ff2"], jax.nn.leaky_relu(dense(p["ff1"], xn).astype(jnp.float32)).astype(x.dtype))
+    return mlp_apply(params["mlp"], x.reshape(b, -1))[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# retrieval scoring (shared): one query tower output vs 1M candidates
+# ---------------------------------------------------------------------------
+
+
+def retrieval_scores(query_emb: jax.Array, candidates: jax.Array) -> jax.Array:
+    """(B, D) x (N, D) -> (B, N) dot scores — batched matmul, not a loop."""
+    return query_emb.astype(jnp.float32) @ candidates.astype(jnp.float32).T
+
+
+def deepfm_user_embedding(params, cfg: DeepFMConfig, ids: jax.Array) -> jax.Array:
+    """User tower for retrieval: pooled field embeddings (B, embed_dim)."""
+    return lookup_fields(params["tables"], ids).sum(axis=1)
+
+
+def autoint_user_embedding(params, cfg: AutoIntConfig, ids: jax.Array) -> jax.Array:
+    emb = lookup_fields(params["tables"], ids)
+    return emb.mean(axis=1)
+
+
+def dien_user_embedding(params, cfg: DIENConfig, hist: jax.Array) -> jax.Array:
+    """Final interest state truncated to embed_dim (item-embedding space)."""
+    b, l = hist.shape
+    emb = jnp.take(params["item_table"], hist, axis=0)
+
+    def step(h, x_t):
+        h = _gru_cell(params["gru1"], h, x_t)
+        return h, None
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    h_final, _ = jax.lax.scan(step, h0, emb.transpose(1, 0, 2))
+    return h_final[:, : cfg.embed_dim]
+
+
+def bst_user_embedding(params, cfg: BSTConfig, hist: jax.Array) -> jax.Array:
+    """Mean-pooled behavior-sequence embedding (B, embed_dim)."""
+    x = jnp.take(params["item_table"], hist, axis=0)
+    return x.mean(axis=1)

@@ -1,0 +1,1 @@
+from . import optimizer, schedule  # noqa: F401

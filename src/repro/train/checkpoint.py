@@ -1,0 +1,176 @@
+"""Sharded, atomic, async checkpointing with elastic resharding.
+
+Layout (one directory per step):
+    <root>/step_<N>.tmp/            written first
+        manifest.json               pytree structure + per-leaf metadata
+        shard_<i>.npz               leaf arrays (flat index -> array)
+    <root>/step_<N>/                atomic rename on completion
+
+Fault-tolerance properties:
+  * atomic: readers never see partial checkpoints (rename-commit);
+    an interrupted writer leaves only a .tmp dir that GC removes.
+  * keep-k GC with never-delete-newest-complete.
+  * async: ``AsyncCheckpointer`` snapshots device arrays to host, then
+    writes on a background thread — the train loop blocks only on the
+    previous write (single in-flight, bounded memory).
+  * elastic: ``restore`` takes the *current* mesh/shardings and lays the
+    saved arrays out for it — a checkpoint written on 256 chips restores
+    onto 512 or 64 (values are saved unsharded per leaf here since hosts
+    in this container see every shard; on a real multi-host fleet each
+    host writes its addressable shards and the manifest carries the
+    global shape — the reshard path is identical).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer", "gc_checkpoints"]
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [
+        jax.tree_util.keystr(p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+    return flat, paths, treedef
+
+
+def save_checkpoint(root: str | Path, step: int, tree: Any, *, shard_size: int = 64) -> Path:
+    """Write one checkpoint atomically.  Returns the final directory."""
+    root = Path(root)
+    root.mkdir(parents=True, exist_ok=True)
+    tmp = root / f"step_{step:012d}.tmp"
+    final = root / f"step_{step:012d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    flat, paths, treedef = _flatten_with_paths(tree)
+    arrays = [np.asarray(x) for x in flat]
+    manifest = {
+        "step": step,
+        "n_leaves": len(flat),
+        "paths": paths,
+        "dtypes": [str(a.dtype) for a in arrays],
+        "shapes": [list(a.shape) for a in arrays],
+        "shards": [],
+        "written_at": time.time(),
+    }
+    for start in range(0, len(arrays), shard_size):
+        idx = list(range(start, min(start + shard_size, len(arrays))))
+        fname = f"shard_{start // shard_size:06d}.npz"
+        np.savez(tmp / fname, **{f"leaf_{i}": arrays[i] for i in idx})
+        manifest["shards"].append({"file": fname, "leaves": idx})
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
+def latest_step(root: str | Path) -> Optional[int]:
+    root = Path(root)
+    if not root.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in root.iterdir()
+        if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
+        and (p / "manifest.json").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    root: str | Path,
+    step: Optional[int] = None,
+    *,
+    template: Any = None,
+    shardings: Any = None,
+):
+    """Restore a checkpoint; lays arrays out for ``shardings`` if given
+    (elastic restore onto a different mesh)."""
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {root}")
+    d = root / f"step_{step:012d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves: List[Optional[np.ndarray]] = [None] * manifest["n_leaves"]
+    for shard in manifest["shards"]:
+        with np.load(d / shard["file"]) as z:
+            for i in shard["leaves"]:
+                leaves[i] = z[f"leaf_{i}"]
+    if template is not None:
+        treedef = jax.tree_util.tree_structure(template)
+    else:
+        raise ValueError("restore requires a template pytree for structure")
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda arr, sh: jax.device_put(arr, sh), tree, shardings
+        )
+    return tree, step
+
+
+def gc_checkpoints(root: str | Path, keep: int = 3) -> List[Path]:
+    """Delete all but the newest ``keep`` complete checkpoints + any
+    orphaned .tmp dirs.  Returns deleted paths."""
+    root = Path(root)
+    if not root.exists():
+        return []
+    deleted = []
+    for p in root.glob("step_*.tmp"):
+        shutil.rmtree(p)
+        deleted.append(p)
+    complete = sorted(
+        (p for p in root.iterdir() if p.is_dir() and not p.name.endswith(".tmp")
+         and (p / "manifest.json").exists()),
+        key=lambda p: p.name,
+    )
+    for p in complete[:-keep] if keep else complete:
+        shutil.rmtree(p)
+        deleted.append(p)
+    return deleted
+
+
+class AsyncCheckpointer:
+    """Single-in-flight async writer: snapshot to host sync, write async."""
+
+    def __init__(self, root: str | Path, keep: int = 3):
+        self.root = Path(root)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[Exception] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def save(self, step: int, tree: Any):
+        self.wait()  # one in flight
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.root, step, host_tree)
+                gc_checkpoints(self.root, self.keep)
+            except Exception as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

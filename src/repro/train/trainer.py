@@ -1,0 +1,90 @@
+"""Training loop: ties steps, data pipeline, checkpointing, fault
+tolerance, straggler policy and metrics together.
+
+Used by examples/train_lm.py (CPU, reduced configs) and by
+launch/train.py (production mesh).  The loop is deliberately dumb and
+observable: every component it calls is separately tested.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from .checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from .fault_tolerance import GuardedStep, StragglerPolicy
+
+__all__ = ["TrainLoopConfig", "train_loop"]
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 200
+    keep_ckpts: int = 3
+    log_every: int = 10
+    max_retries: int = 2
+    resume: bool = True
+
+
+def train_loop(
+    cfg: TrainLoopConfig,
+    step_fn: Callable,                    # (params, opt_state, batch) -> (params, opt_state, metrics)
+    params: Any,
+    opt_state: Any,
+    make_batch: Callable[[int], Any],     # step -> host batch
+    *,
+    to_device: Callable[[Any], Any] = lambda x: x,
+    log: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    start = 0
+    ckpt = AsyncCheckpointer(cfg.ckpt_dir, cfg.keep_ckpts) if cfg.ckpt_dir else None
+    if ckpt and cfg.resume and latest_step(cfg.ckpt_dir) is not None:
+        (params, opt_state), start = restore_checkpoint(
+            cfg.ckpt_dir, template=(params, opt_state)
+        )
+        start += 1
+        log(f"resumed from step {start - 1}")
+
+    state = {"params": params, "opt_state": opt_state}
+
+    def restore():
+        if not ckpt:
+            raise RuntimeError("unrecoverable failure without checkpointing")
+        (state["params"], state["opt_state"]), s = restore_checkpoint(
+            cfg.ckpt_dir, template=(state["params"], state["opt_state"])
+        )
+        log(f"restored from checkpoint step {s} after repeated failures")
+
+    guarded = GuardedStep(step_fn, max_retries=cfg.max_retries, on_restore=restore)
+    straggler = StragglerPolicy()
+    history: List[Dict[str, float]] = []
+
+    for step in range(start, cfg.total_steps):
+        batch = to_device(make_batch(step))
+        res = guarded(state["params"], state["opt_state"], batch)
+        state["params"], state["opt_state"], metrics = res.value
+        verdict = straggler.observe(res.elapsed_s)
+        row = {
+            "step": step,
+            "loss": float(metrics.get("loss", np.nan)),
+            "step_s": res.elapsed_s,
+            "slow": bool(verdict["slow"]),
+        }
+        history.append(row)
+        if step % cfg.log_every == 0:
+            log(f"step {step}: loss={row['loss']:.4f} ({res.elapsed_s:.2f}s)"
+                + (" [straggler]" if verdict["slow"] else ""))
+        if verdict["recommend_eject"]:
+            log("straggler policy: recommend ejecting slow host / re-mesh")
+        if ckpt and (step + 1) % cfg.ckpt_every == 0:
+            ckpt.save(step, (state["params"], state["opt_state"]))
+    if ckpt:
+        ckpt.save(cfg.total_steps - 1, (state["params"], state["opt_state"]))
+        ckpt.wait()
+    return {"params": state["params"], "opt_state": state["opt_state"], "history": history}

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_angular_clusters
+
+
+@pytest.fixture(scope="session")
+def small_clustered():
+    """2k points, 32-d, 12 vMF clusters + 30% noise (seeded)."""
+    data, truth = make_angular_clusters(2000, 32, 12, kappa=80, noise_frac=0.3, seed=1)
+    return data, truth
+
+
+@pytest.fixture(scope="session")
+def tiny_clustered():
+    data, truth = make_angular_clusters(400, 16, 5, kappa=60, noise_frac=0.25, seed=3)
+    return data, truth

@@ -1,0 +1,107 @@
+import numpy as np
+import pytest
+
+from repro.core.baselines import block_dbscan, knn_block_dbscan, rho_approx_dbscan
+from repro.core.dbscan import dbscan_parallel
+from repro.core.dbscan_pp import auto_sample_fraction, dbscan_pp, kcenter_sample, laf_dbscan_pp
+from repro.core.metrics import adjusted_rand_index
+from repro.core.range_query import range_counts
+
+
+@pytest.fixture(scope="module")
+def gt(small_clustered):
+    data, _ = small_clustered
+    return dbscan_parallel(data, 0.25, 5)
+
+
+class TestDBSCANpp:
+    def test_full_sample_equals_dbscan(self, small_clustered, gt):
+        data, _ = small_clustered
+        res = dbscan_pp(data, 0.25, 5, p=1.0)
+        assert adjusted_rand_index(res.labels, gt.labels) > 0.99
+
+    def test_partial_sample_quality(self, small_clustered, gt):
+        data, _ = small_clustered
+        res = dbscan_pp(data, 0.25, 5, p=0.4, seed=0)
+        assert adjusted_rand_index(res.labels, gt.labels) > 0.7
+        assert res.n_range_queries == int(round(0.4 * len(data)))
+
+    def test_kcenter_sample(self, small_clustered):
+        data, _ = small_clustered
+        idx = kcenter_sample(data, 50, seed=0)
+        assert len(np.unique(idx)) == 50
+
+    def test_auto_sample_fraction(self):
+        pred = np.array([10.0, 0.0, 0.0, 20.0])  # 50% predicted core at tau=5
+        p = auto_sample_fraction(pred, 5, 1.0, delta=0.2)
+        assert p == pytest.approx(0.7)
+
+    def test_laf_pp_skips_and_matches(self, small_clustered, gt):
+        data, _ = small_clustered
+        n = len(data)
+        rng = np.random.default_rng(0)
+        p = 0.5
+        m = int(round(p * n))
+        sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+        counts = np.asarray(range_counts(data[sample_idx], data, 0.25)).astype(float)
+        res = laf_dbscan_pp(
+            data, 0.25, 5, p, counts, alpha=1.0, sample_idx=sample_idx, seed=0
+        )
+        # oracle estimator: executed = exactly the true-core samples
+        assert res.n_range_queries == int((counts >= 5).sum())
+        base = dbscan_pp(data, 0.25, 5, p, seed=0)
+        assert adjusted_rand_index(res.labels, base.labels) > 0.95
+
+
+class TestKNNBlock:
+    def test_exact_window_matches_dbscan(self, small_clustered, gt):
+        data, _ = small_clustered
+        res = knn_block_dbscan(data, 0.25, 5, window=len(data))
+        np.testing.assert_array_equal(res.core, gt.core)
+        assert adjusted_rand_index(res.labels, gt.labels) > 0.999
+
+    def test_approx_window_reasonable(self, small_clustered, gt):
+        data, _ = small_clustered
+        res = knn_block_dbscan(data, 0.25, 5, n_proj=6, window=300)
+        assert adjusted_rand_index(res.labels, gt.labels) > 0.6
+        # approximate core detection only misses, never invents
+        assert not np.any(res.core & ~gt.core)
+
+
+class TestBlockDBSCAN:
+    def test_quality(self, small_clustered, gt):
+        data, _ = small_clustered
+        res = block_dbscan(data, 0.25, 5, rnt=10)
+        assert adjusted_rand_index(res.labels, gt.labels) > 0.7
+        # inner-core-block certification: every certified core is a true core
+        assert res.extras["n_blocks"] > 0
+
+    def test_core_certification_sound(self, tiny_clustered):
+        """Inner-block members certified core must truly be core."""
+        data, _ = tiny_clustered
+        eps, tau = 0.3, 4
+        res = block_dbscan(data, eps, tau)
+        counts = np.asarray(range_counts(data, data, eps))
+        true_core = counts >= tau
+        assert not np.any(res.core & ~true_core)
+
+
+class TestRhoApprox:
+    def test_rho_zero_is_exact(self, small_clustered, gt):
+        data, _ = small_clustered
+        res = rho_approx_dbscan(data, 0.25, 5, rho=0.0, engine="direct")
+        np.testing.assert_array_equal(res.core, gt.core)
+        assert adjusted_rand_index(res.labels, gt.labels) > 0.999
+
+    def test_rho_relaxation_merges(self, small_clustered):
+        data, _ = small_clustered
+        exact = rho_approx_dbscan(data, 0.25, 5, rho=0.0, engine="direct")
+        relax = rho_approx_dbscan(data, 0.25, 5, rho=1.0, engine="direct")
+        assert relax.n_clusters <= exact.n_clusters
+        np.testing.assert_array_equal(exact.core, relax.core)
+
+    def test_cell_engine_same_semantics(self, tiny_clustered):
+        data, _ = tiny_clustered
+        a = rho_approx_dbscan(data, 0.3, 4, rho=0.5, engine="cell")
+        b = rho_approx_dbscan(data, 0.3, 4, rho=0.5, engine="direct")
+        assert adjusted_rand_index(a.labels, b.labels) > 0.999

@@ -1,0 +1,84 @@
+import numpy as np
+import pytest
+
+from repro.core.dbscan import dbscan_parallel, dbscan_sequential
+from repro.core.metrics import adjusted_rand_index
+from repro.core.range_query import range_counts
+from repro.data.synthetic import make_angular_clusters
+
+
+@pytest.mark.parametrize("eps,tau", [(0.2, 3), (0.25, 5), (0.3, 8)])
+def test_parallel_matches_sequential(small_clustered, eps, tau):
+    data, _ = small_clustered
+    seq = dbscan_sequential(data, eps, tau)
+    par = dbscan_parallel(data, eps, tau)
+    np.testing.assert_array_equal(seq.core, par.core)
+    # identical partitions up to border ties -> ARI must be ~1
+    assert adjusted_rand_index(seq.labels, par.labels) > 0.999
+    # cluster count identical (core structure is order-invariant)
+    assert seq.n_clusters == par.n_clusters
+    # noise set: parallel may only differ on border ties, never on cores
+    assert np.array_equal(seq.labels == -1, par.labels == -1)
+
+
+def test_core_definition(small_clustered):
+    data, _ = small_clustered
+    eps, tau = 0.25, 5
+    res = dbscan_parallel(data, eps, tau)
+    counts = np.asarray(range_counts(data, data, eps))
+    np.testing.assert_array_equal(res.core, counts >= tau)
+
+
+def test_cores_never_noise(small_clustered):
+    data, _ = small_clustered
+    res = dbscan_parallel(data, 0.25, 5)
+    assert (res.labels[res.core] >= 0).all()
+
+
+def test_border_points_have_core_neighbor(small_clustered):
+    data, _ = small_clustered
+    eps = 0.25
+    res = dbscan_parallel(data, eps, 5)
+    border = (res.labels >= 0) & ~res.core
+    idx = np.nonzero(border)[0]
+    core_idx = np.nonzero(res.core)[0]
+    dots = data[idx] @ data[core_idx].T
+    hit = dots > 1 - eps
+    assert hit.any(axis=1).all()
+    # and the assigned cluster is one of the neighboring cores' clusters
+    for k, i in enumerate(idx):
+        neigh_clusters = set(res.labels[core_idx[hit[k]]])
+        assert res.labels[i] in neigh_clusters
+
+
+def test_same_cluster_core_connectivity(tiny_clustered):
+    """Any two cores within eps share a cluster (maximality/connectivity)."""
+    data, _ = tiny_clustered
+    eps = 0.25
+    res = dbscan_parallel(data, eps, 5)
+    core_idx = np.nonzero(res.core)[0]
+    dots = data[core_idx] @ data[core_idx].T
+    close = dots > 1 - eps
+    li = res.labels[core_idx]
+    same = li[:, None] == li[None, :]
+    assert (same | ~close).all()
+
+
+def test_recovers_true_clusters(small_clustered):
+    data, truth = small_clustered
+    res = dbscan_parallel(data, 0.25, 5)
+    assert adjusted_rand_index(res.labels, truth) > 0.9
+
+
+def test_all_noise_when_eps_tiny(tiny_clustered):
+    data, _ = tiny_clustered
+    res = dbscan_parallel(data, 1e-6, 5)
+    assert res.n_clusters == 0
+    assert (res.labels == -1).all()
+
+
+def test_one_cluster_when_eps_huge(tiny_clustered):
+    data, _ = tiny_clustered
+    res = dbscan_parallel(data, 1.99, 3)
+    assert res.n_clusters == 1
+    assert (res.labels == 0).all()

@@ -1,0 +1,50 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distances import (
+    cos_to_euclidean,
+    cosine_distance,
+    euclidean_to_cos,
+    l2_normalize,
+    pairwise_cosine_distance,
+)
+
+
+def test_normalize_unit_norm():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((64, 33)).astype(np.float32)
+    y = np.asarray(l2_normalize(x))
+    np.testing.assert_allclose(np.linalg.norm(y, axis=1), 1.0, rtol=1e-5)
+
+
+def test_pairwise_matches_direct():
+    rng = np.random.default_rng(1)
+    q = np.asarray(l2_normalize(rng.standard_normal((10, 20)).astype(np.float32)))
+    db = np.asarray(l2_normalize(rng.standard_normal((17, 20)).astype(np.float32)))
+    m = np.asarray(pairwise_cosine_distance(q, db))
+    for i in range(10):
+        for j in range(17):
+            assert m[i, j] == pytest.approx(1.0 - float(q[i] @ db[j]), abs=1e-5)
+
+
+def test_eq1_paper_example():
+    """Paper: d_cos = 0.5  =>  d_euc = 1.0."""
+    assert cos_to_euclidean(0.5) == pytest.approx(1.0)
+    assert euclidean_to_cos(1.0) == pytest.approx(0.5)
+
+
+@given(st.floats(min_value=0.0, max_value=2.0))
+@settings(max_examples=50, deadline=None)
+def test_eq1_roundtrip(d_cos):
+    assert euclidean_to_cos(cos_to_euclidean(d_cos)) == pytest.approx(d_cos, abs=1e-9)
+
+
+def test_eq1_consistent_with_actual_norms():
+    """d_euc(u,v) on unit vectors must equal sqrt(2 d_cos(u,v))."""
+    rng = np.random.default_rng(2)
+    u = np.asarray(l2_normalize(rng.standard_normal(16)))
+    v = np.asarray(l2_normalize(rng.standard_normal(16)))
+    d_cos = 1.0 - float(u @ v)
+    d_euc = float(np.linalg.norm(u - v))
+    assert d_euc == pytest.approx(float(cos_to_euclidean(d_cos)), abs=1e-6)

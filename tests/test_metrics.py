@@ -1,0 +1,103 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import (
+    adjusted_mutual_info,
+    adjusted_rand_index,
+    contingency,
+    entropy,
+    expected_mutual_info,
+    mutual_info,
+)
+
+
+def test_perfect_agreement():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    b = np.array([5, 5, 9, 9, 7, 7])  # same partition, different ids
+    assert adjusted_rand_index(a, b) == pytest.approx(1.0)
+    assert adjusted_mutual_info(a, b) == pytest.approx(1.0)
+
+
+def test_known_ari_value():
+    # classic example: ARI([0,0,1,1],[0,0,1,2]) = 0.5714285714
+    a = np.array([0, 0, 1, 1])
+    b = np.array([0, 0, 1, 2])
+    assert adjusted_rand_index(a, b) == pytest.approx(0.5714285714285714, abs=1e-12)
+
+
+def test_known_mi_value():
+    # MI of independent-ish small case, hand-computed
+    a = np.array([0, 0, 1, 1])
+    b = np.array([0, 1, 0, 1])
+    # contingency = [[1,1],[1,1]] -> MI = 0
+    assert mutual_info(a, b) == pytest.approx(0.0, abs=1e-12)
+    assert adjusted_rand_index(a, b) == pytest.approx(-0.5, abs=1e-9)
+
+
+def test_single_cluster_each():
+    a = np.zeros(10, dtype=int)
+    b = np.zeros(10, dtype=int)
+    assert adjusted_mutual_info(a, b) == pytest.approx(1.0)
+
+
+def test_emi_small_case_vs_naive():
+    """E[MI] against a direct naive triple-loop on a tiny case."""
+    import math
+
+    ra = np.array([3, 2])
+    cb = np.array([2, 3])
+    n = 5
+    # naive
+    total = 0.0
+    for a in ra:
+        for b in cb:
+            for nij in range(max(1, a + b - n), min(a, b) + 1):
+                p = (
+                    math.factorial(a) * math.factorial(b)
+                    * math.factorial(n - a) * math.factorial(n - b)
+                ) / (
+                    math.factorial(n) * math.factorial(nij)
+                    * math.factorial(a - nij) * math.factorial(b - nij)
+                    * math.factorial(n - a - b + nij)
+                )
+                total += nij / n * math.log(n * nij / (a * b)) * p
+    assert expected_mutual_info(ra, cb) == pytest.approx(total, rel=1e-10)
+
+
+def test_ami_beats_mi_for_random_labels():
+    """AMI of random labelings concentrates near 0 (chance-corrected)."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 8, size=500)
+    b = rng.integers(0, 8, size=500)
+    assert abs(adjusted_mutual_info(a, b)) < 0.05
+    assert mutual_info(a, b) > 0.01  # raw MI is biased > 0
+
+
+@given(st.integers(min_value=2, max_value=6), st.integers(min_value=20, max_value=60))
+@settings(max_examples=15, deadline=None)
+def test_metric_symmetry(k, n):
+    rng = np.random.default_rng(n * k)
+    a = rng.integers(0, k, size=n)
+    b = rng.integers(0, k, size=n)
+    assert adjusted_rand_index(a, b) == pytest.approx(adjusted_rand_index(b, a), abs=1e-10)
+    assert adjusted_mutual_info(a, b) == pytest.approx(adjusted_mutual_info(b, a), abs=1e-8)
+
+
+@given(st.integers(min_value=2, max_value=5), st.integers(min_value=10, max_value=40))
+@settings(max_examples=15, deadline=None)
+def test_ari_upper_bound(k, n):
+    rng = np.random.default_rng(n + k)
+    a = rng.integers(0, k, size=n)
+    b = rng.integers(0, k, size=n)
+    assert adjusted_rand_index(a, b) <= 1.0 + 1e-12
+    assert adjusted_mutual_info(a, b) <= 1.0 + 1e-8
+
+
+def test_contingency_shape():
+    a = np.array([0, 1, 1, 2])
+    b = np.array([1, 1, 0, 0])
+    m, ra, cb = contingency(a, b)
+    assert m.shape == (3, 2)
+    assert m.sum() == 4
+    np.testing.assert_array_equal(ra, [1, 2, 1])

@@ -1,0 +1,326 @@
+"""Model zoo tests: shapes, finiteness, grads, decode==forward equivalence,
+attention oracle agreement, MoE invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import ctr_batch, powerlaw_graph, random_small_graphs
+from repro.models.gnn import GATConfig, gat_forward, gat_forward_batched, gat_init, gat_loss
+from repro.models.layers import blockwise_attention, cross_entropy_loss
+from repro.models.mla import MLAConfig
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+from repro.models.recsys import (
+    AutoIntConfig,
+    BSTConfig,
+    DeepFMConfig,
+    DIENConfig,
+    autoint_forward,
+    autoint_init,
+    bce_loss,
+    bst_forward,
+    bst_init,
+    deepfm_forward,
+    deepfm_init,
+    dien_forward,
+    dien_init,
+    retrieval_scores,
+)
+from repro.models.transformer import (
+    TransformerConfig,
+    make_cache,
+    transformer_decode_step,
+    transformer_forward,
+    transformer_init,
+    transformer_loss,
+)
+
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 16), (False, None)])
+def test_blockwise_attention_matches_oracle(causal, window):
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (2, 4, 64, 16)) for kk in keys)
+    got = np.asarray(blockwise_attention(q, k, v, causal=causal, window=window, kv_block=16))
+    ref = np.asarray(attention_ref(q, k, v, causal=causal, window=window))
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_attention_gqa():
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (2, 8, 32, 16))
+    k = jax.random.normal(keys[1], (2, 2, 32, 16))
+    v = jax.random.normal(keys[2], (2, 2, 32, 16))
+    got = np.asarray(blockwise_attention(q, k, v, causal=True, kv_block=8))
+    kr, vr = jnp.repeat(k, 4, axis=1), jnp.repeat(v, 4, axis=1)
+    ref = np.asarray(attention_ref(q, kr, vr, causal=True))
+    np.testing.assert_allclose(got, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_cross_entropy_against_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0]])
+    labels = jnp.asarray([0])
+    expect = -jax.nn.log_softmax(logits)[0, 0]
+    assert float(cross_entropy_loss(logits, labels)) == pytest.approx(float(expect), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# transformer
+# ---------------------------------------------------------------------------
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        vocab=256, d_model=64, n_layers=4, n_heads=4, kv_heads=2, d_head=16,
+        d_ff=128, dtype=jnp.float32,
+    )
+    base.update(kw)
+    return TransformerConfig(**base)
+
+
+def test_transformer_shapes_and_grads():
+    cfg = tiny_cfg()
+    params = transformer_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    logits = transformer_forward(params, cfg, toks)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    g = jax.grad(lambda p: transformer_loss(p, cfg, toks, toks))(params)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {},                                                # dense GQA
+        {"window": 8, "global_every": 2},                  # gemma-style hybrid
+        {"kv_heads": 1},                                   # MQA (granite)
+    ],
+)
+def test_decode_matches_forward(kw):
+    cfg = tiny_cfg(**kw)
+    params = transformer_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    cache = make_cache(cfg, 2, 16, dtype=jnp.float32)
+    outs = []
+    for t in range(8):
+        lg, cache = transformer_decode_step(params, cfg, toks[:, t : t + 1], cache, t)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    fwd = transformer_forward(params, cfg, toks[:, :8])
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(fwd), rtol=1e-3, atol=1e-4)
+
+
+def test_mla_moe_decode_matches_forward():
+    cfg = tiny_cfg(
+        attention="mla",
+        mla=MLAConfig(d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_dim=16, qk_rope_dim=8, v_dim=16),
+        # capacity_factor high enough that no tokens drop: decode==forward
+        # only holds when both paths route identically (drops are
+        # batch-size-dependent by design — GShard semantics).
+        moe=MoEConfig(d_model=64, d_ff=32, n_experts=4, top_k=2, n_shared=1,
+                      capacity_factor=8.0, dtype=jnp.float32),
+        n_dense_layers=1,
+    )
+    params = transformer_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    cache = make_cache(cfg, 2, 12, dtype=jnp.float32)
+    outs = []
+    for t in range(6):
+        lg, cache = transformer_decode_step(params, cfg, toks[:, t : t + 1], cache, t)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    fwd = transformer_forward(params, cfg, toks[:, :6])
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(fwd), rtol=1e-3, atol=1e-3)
+
+
+def test_param_count_analytic_matches_actual():
+    cfg = tiny_cfg()
+    params = transformer_init(jax.random.PRNGKey(0), cfg)
+    actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert cfg.param_count() == actual
+
+
+def test_param_count_moe():
+    cfg = tiny_cfg(
+        moe=MoEConfig(d_model=64, d_ff=32, n_experts=4, top_k=2, dtype=jnp.float32)
+    )
+    params = transformer_init(jax.random.PRNGKey(0), cfg)
+    actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    assert cfg.param_count() == actual
+    assert cfg.active_param_count() < cfg.param_count()
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+
+def test_moe_capacity_dropping():
+    cfg = MoEConfig(d_model=16, d_ff=32, n_experts=2, top_k=1,
+                    capacity_factor=0.25, dtype=jnp.float32)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    y, aux = moe_apply(p, cfg, x)
+    assert y.shape == x.shape
+    assert float(aux["drop_fraction"]) > 0.0  # capacity 8 << 64 tokens
+
+
+def test_moe_identical_tokens_identical_outputs():
+    cfg = MoEConfig(d_model=16, d_ff=32, n_experts=4, top_k=2,
+                    capacity_factor=8.0, dtype=jnp.float32)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.tile(jax.random.normal(jax.random.PRNGKey(1), (1, 16)), (8, 1))
+    y, _ = moe_apply(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y - y[0]), 0.0, atol=1e-5)
+
+
+def test_moe_gates_normalized():
+    cfg = MoEConfig(d_model=8, d_ff=16, n_experts=4, top_k=4,
+                    capacity_factor=8.0, dtype=jnp.float32)
+    p = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (10, 8))
+    # with top_k == n_experts and generous capacity, MoE == dense mixture;
+    # compare against direct dense computation
+    y, aux = moe_apply(p, cfg, x)
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    g = jax.nn.silu(jnp.einsum("td,edf->tef", x, p["wi_gate"]))
+    u = jnp.einsum("td,edf->tef", x, p["wi_up"])
+    dense_out = jnp.einsum("tef,efd,te->td", g * u, p["wo"], probs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense_out), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(0)
+    return powerlaw_graph(rng, 100, 400, 16)
+
+
+def test_gat_shapes_and_grads(graph):
+    cfg = GATConfig(d_in=16, d_hidden=8, n_heads=8, n_classes=7)
+    p = gat_init(jax.random.PRNGKey(0), cfg)
+    args = (jnp.asarray(graph["feats"]), jnp.asarray(graph["src"]), jnp.asarray(graph["dst"]))
+    logits = gat_forward(p, cfg, *args)
+    assert logits.shape == (100, 7)
+    g = jax.grad(gat_loss)(p, cfg, *args, jnp.asarray(graph["labels"]))
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_gat_edge_softmax_normalized(graph):
+    """Attention over incoming edges of each node sums to 1."""
+    from repro.models.gnn import _edge_softmax
+
+    scores = jnp.asarray(np.random.default_rng(1).standard_normal((400, 8)).astype(np.float32))
+    dst = jnp.asarray(graph["dst"])
+    attn = _edge_softmax(scores, dst, 100)
+    sums = jax.ops.segment_sum(attn, dst, num_segments=100)
+    has_edge = np.zeros(100, bool)
+    has_edge[np.asarray(graph["dst"])] = True
+    np.testing.assert_allclose(np.asarray(sums)[has_edge], 1.0, rtol=1e-5)
+
+
+def test_gat_isolated_nodes_no_nan(graph):
+    """Nodes with no incoming edges must produce finite (zero) outputs."""
+    cfg = GATConfig(d_in=16, d_hidden=8, n_heads=8, n_classes=7)
+    p = gat_init(jax.random.PRNGKey(0), cfg)
+    # only edges into nodes < 50: nodes >= 50 isolated as destinations
+    src = jnp.asarray(graph["src"]) % 50
+    dst = jnp.asarray(graph["dst"]) % 50
+    logits = gat_forward(p, cfg, jnp.asarray(graph["feats"]), src, dst)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_gat_batched_molecules():
+    rng = np.random.default_rng(2)
+    bg = random_small_graphs(rng, 4, 30, 64, 16)
+    cfg = GATConfig(d_in=16, d_hidden=8, n_heads=8, n_classes=7)
+    p = gat_init(jax.random.PRNGKey(0), cfg)
+    out = gat_forward_batched(p, cfg, jnp.asarray(bg["feats"]), jnp.asarray(bg["src"]), jnp.asarray(bg["dst"]))
+    assert out.shape == (4, 7)
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def ctr():
+    rng = np.random.default_rng(3)
+    vocabs = tuple(rng.integers(50, 500, size=39).tolist())
+    return vocabs, ctr_batch(rng, 32, 39, np.asarray(vocabs))
+
+
+@pytest.mark.parametrize("model", ["deepfm", "autoint"])
+def test_field_models(ctr, model):
+    vocabs, batch = ctr
+    if model == "deepfm":
+        cfg = DeepFMConfig(vocab_sizes=vocabs)
+        p = deepfm_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda pp: deepfm_forward(pp, cfg, jnp.asarray(batch["ids"]))
+    else:
+        cfg = AutoIntConfig(vocab_sizes=vocabs)
+        p = autoint_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda pp: autoint_forward(pp, cfg, jnp.asarray(batch["ids"]))
+    logits = fwd(p)
+    assert logits.shape == (32,)
+    assert bool(jnp.isfinite(logits).all())
+    g = jax.grad(lambda pp: bce_loss(fwd(pp), jnp.asarray(batch["label"])))(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize("model", ["dien", "bst"])
+def test_sequence_models(model):
+    rng = np.random.default_rng(4)
+    hist = jnp.asarray(rng.integers(0, 1000, (16, 20)).astype(np.int32))
+    tgt = jnp.asarray(rng.integers(0, 1000, 16).astype(np.int32))
+    if model == "dien":
+        cfg = DIENConfig(item_vocab=1000, seq_len=20)
+        p = dien_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda pp: dien_forward(pp, cfg, hist, tgt)
+    else:
+        cfg = BSTConfig(item_vocab=1000, seq_len=20)
+        p = bst_init(jax.random.PRNGKey(0), cfg)
+        fwd = lambda pp: bst_forward(pp, cfg, hist, tgt)
+    logits = fwd(p)
+    assert logits.shape == (16,)
+    assert bool(jnp.isfinite(logits).all())
+    g = jax.grad(lambda pp: bce_loss(fwd(pp), jnp.ones(16)))(p)
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_dien_attention_changes_output():
+    """AUGRU attention must make the target item matter."""
+    cfg = DIENConfig(item_vocab=100, seq_len=10)
+    p = dien_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    hist = jnp.asarray(rng.integers(0, 100, (4, 10)).astype(np.int32))
+    a = dien_forward(p, cfg, hist, jnp.zeros(4, jnp.int32))
+    b = dien_forward(p, cfg, hist, jnp.full(4, 7, jnp.int32))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_retrieval_scores_matmul():
+    q = jnp.asarray(np.eye(4, 8, dtype=np.float32))
+    c = jnp.asarray(np.eye(16, 8, dtype=np.float32))
+    s = retrieval_scores(q, c)
+    assert s.shape == (4, 16)
+    np.testing.assert_allclose(np.asarray(s)[0, 0], 1.0)

@@ -1,0 +1,142 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.dbscan import dbscan_parallel, dbscan_sequential
+from repro.core.laf_dbscan import laf_dbscan
+from repro.core.metrics import adjusted_rand_index
+from repro.core.range_query import range_counts
+from repro.data.synthetic import make_angular_clusters, sample_uniform_sphere
+
+FAST = settings(
+    max_examples=12, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def clustered_data(draw):
+    n = draw(st.integers(min_value=60, max_value=300))
+    d = draw(st.sampled_from([8, 16, 24]))
+    k = draw(st.integers(min_value=2, max_value=6))
+    seed = draw(st.integers(min_value=0, max_value=10_000))
+    noise = draw(st.floats(min_value=0.0, max_value=0.5))
+    data, _ = make_angular_clusters(
+        n, d, k, kappa=d / 0.2, noise_frac=noise, seed=seed
+    )
+    return data
+
+
+@given(clustered_data(), st.floats(min_value=0.1, max_value=0.8),
+       st.integers(min_value=2, max_value=8))
+@FAST
+def test_dbscan_core_invariants(data, eps, tau):
+    """Core points are exactly counts>=tau; cores never noise; any two
+    cores within eps share a label; labels partition correctly."""
+    res = dbscan_parallel(data, eps, tau)
+    counts = np.asarray(range_counts(data, data, eps))
+    np.testing.assert_array_equal(res.core, counts >= tau)
+    assert (res.labels[res.core] >= 0).all()
+    core_idx = np.nonzero(res.core)[0]
+    if len(core_idx):
+        dots = data[core_idx] @ data[core_idx].T
+        close = dots > 1 - eps
+        li = res.labels[core_idx]
+        assert ((li[:, None] == li[None, :]) | ~close).all()
+    # cluster ids are exactly 0..k-1
+    pos = np.unique(res.labels[res.labels >= 0])
+    np.testing.assert_array_equal(pos, np.arange(len(pos)))
+
+
+@given(clustered_data(), st.floats(min_value=0.15, max_value=0.6))
+@FAST
+def test_laf_oracle_alpha1_equals_dbscan(data, eps):
+    """Perfect estimator + alpha=1: LAF == DBSCAN on every point class."""
+    tau = 4
+    counts = np.asarray(range_counts(data, data, eps)).astype(float)
+    gt = dbscan_parallel(data, eps, tau)
+    res = laf_dbscan(data, eps, tau, 1.0, counts)
+    np.testing.assert_array_equal(res.core, gt.core)
+    assert adjusted_rand_index(res.labels, gt.labels) == pytest.approx(1.0)
+    assert res.n_range_queries == int(gt.core.sum())
+
+
+@given(clustered_data(), st.integers(min_value=0, max_value=1000))
+@FAST
+def test_laf_noisy_estimator_never_invents_cores(data, seed):
+    """Whatever the estimator says, a point labeled core by LAF is a true
+    core (skips cause false negatives, never false positives)."""
+    eps, tau = 0.3, 4
+    rng = np.random.default_rng(seed)
+    counts = np.asarray(range_counts(data, data, eps)).astype(float)
+    noisy = counts * np.exp(rng.normal(0, 1.0, len(counts)))
+    res = laf_dbscan(data, eps, tau, 1.5, noisy)
+    assert not np.any(res.core & ~(counts >= tau))
+
+
+@given(st.integers(min_value=2, max_value=40), st.integers(min_value=0, max_value=500))
+@FAST
+def test_counts_symmetry(n, seed):
+    """Neighbor relation is symmetric: j in N(i) <=> i in N(j)."""
+    rng = np.random.default_rng(seed)
+    x = sample_uniform_sphere(rng, n, 6)
+    dots = x @ x.T
+    hits = dots > 1 - 0.5
+    np.testing.assert_array_equal(hits, hits.T)
+
+
+@given(clustered_data())
+@FAST
+def test_sequential_parallel_agree(data):
+    """Engines agree exactly on cores and the core partition; border
+    points (legally ambiguous between adjacent clusters) must land in a
+    cluster owned by one of their core neighbors."""
+    eps, tau = 0.3, 4
+    seq = dbscan_sequential(data, eps, tau)
+    par = dbscan_parallel(data, eps, tau)
+    np.testing.assert_array_equal(seq.core, par.core)
+    assert seq.n_clusters == par.n_clusters
+    core = np.nonzero(seq.core)[0]
+    if len(core):
+        # identical partition of the CORE points
+        assert adjusted_rand_index(seq.labels[core], par.labels[core]) == pytest.approx(1.0)
+    # same noise set; borders attach to a genuine core neighbor's cluster
+    np.testing.assert_array_equal(seq.labels == -1, par.labels == -1)
+    border = np.nonzero((par.labels >= 0) & ~par.core)[0]
+    for j in border:
+        nbr = core[(data[core] @ data[j]) > 1 - eps]
+        assert par.labels[j] in set(par.labels[nbr])
+
+
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=2, max_size=60),
+       st.integers(min_value=0, max_value=5))
+@settings(max_examples=30, deadline=None)
+def test_ari_permutation_invariant(labels, shift):
+    """ARI is invariant to relabeling."""
+    a = np.asarray(labels)
+    b = (a + shift) % 7  # injective relabel of the values present
+    # only when the relabel is injective on the support:
+    if len(np.unique(a)) == len(np.unique(b)):
+        assert adjusted_rand_index(a, b) == pytest.approx(1.0)
+
+
+@given(st.integers(min_value=1, max_value=12), st.integers(min_value=0, max_value=99))
+@settings(max_examples=20, deadline=None)
+def test_checkpoint_roundtrip_property(n_leaves, seed):
+    import tempfile
+
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(seed)
+    tree = {
+        f"leaf{i}": rng.standard_normal(rng.integers(1, 20, size=rng.integers(1, 3)))
+        .astype(np.float32 if i % 2 else np.int32)
+        for i in range(n_leaves)
+    }
+    with tempfile.TemporaryDirectory() as root:
+        save_checkpoint(root, 0, tree)
+        restored, _ = restore_checkpoint(root, template=tree)
+    for k in tree:
+        np.testing.assert_array_equal(tree[k], restored[k])

@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.range_query import (
+    bitmap_row_to_indices,
+    neighbor_lists,
+    pack_bitmap,
+    range_bitmap,
+    range_counts,
+    range_counts_and_bitmap,
+    unpack_bitmap,
+)
+from repro.data.synthetic import sample_uniform_sphere
+
+
+def brute_counts(q, db, eps):
+    return ((q @ db.T) > (1.0 - eps)).sum(axis=1)
+
+
+@pytest.mark.parametrize("nq,nd,d,block", [(7, 33, 8, 16), (32, 100, 24, 32), (5, 257, 16, 64)])
+def test_counts_match_brute(nq, nd, d, block):
+    rng = np.random.default_rng(0)
+    q = sample_uniform_sphere(rng, nq, d)
+    db = sample_uniform_sphere(rng, nd, d)
+    for eps in (0.2, 0.5, 0.9):
+        got = np.asarray(range_counts(q, db, eps, block_size=block))
+        np.testing.assert_array_equal(got, brute_counts(q, db, eps))
+
+
+def test_bitmap_roundtrip():
+    rng = np.random.default_rng(1)
+    hits = rng.random((13, 77)) < 0.3
+    packed = pack_bitmap(hits)
+    np.testing.assert_array_equal(unpack_bitmap(packed, 77), hits)
+
+
+@pytest.mark.parametrize("nd", [31, 32, 33, 100])
+def test_range_bitmap_matches_brute(nd):
+    rng = np.random.default_rng(2)
+    q = sample_uniform_sphere(rng, 9, 12)
+    db = sample_uniform_sphere(rng, nd, 12)
+    eps = 0.6
+    bm = np.asarray(range_bitmap(q, db, eps, block_size=32))
+    expect = (q @ db.T) > (1.0 - eps)
+    np.testing.assert_array_equal(unpack_bitmap(bm, nd), expect)
+
+
+def test_counts_and_bitmap_consistent():
+    rng = np.random.default_rng(3)
+    q = sample_uniform_sphere(rng, 11, 10)
+    db = sample_uniform_sphere(rng, 67, 10)
+    counts, bm = range_counts_and_bitmap(q, db, 0.5, block_size=32)
+    counts = np.asarray(counts)
+    bm = np.asarray(bm)
+    np.testing.assert_array_equal(counts, unpack_bitmap(bm, 67).sum(axis=1))
+    for i in range(11):
+        idx = bitmap_row_to_indices(bm[i], 67)
+        assert len(idx) == counts[i]
+
+
+def test_neighbor_lists_self_included():
+    rng = np.random.default_rng(4)
+    db = sample_uniform_sphere(rng, 50, 8)
+    lists = neighbor_lists(db, 0.4)
+    for i, lst in enumerate(lists):
+        assert i in lst  # d(P,P)=0 < eps
+
+
+@given(st.integers(min_value=1, max_value=200), st.floats(min_value=0.05, max_value=1.5))
+@settings(max_examples=20, deadline=None)
+def test_counts_property(nd, eps):
+    """Counts are between 1 (self) and nd, and monotone in eps."""
+    rng = np.random.default_rng(nd)
+    db = sample_uniform_sphere(rng, nd, 6)
+    c1 = np.asarray(range_counts(db, db, eps, block_size=32))
+    c2 = np.asarray(range_counts(db, db, min(eps + 0.2, 2.0), block_size=32))
+    assert (c1 >= 1).all() and (c1 <= nd).all()
+    assert (c2 >= c1).all()

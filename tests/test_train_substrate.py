@@ -1,0 +1,367 @@
+"""Optimizer, checkpointing, compression, fault tolerance, data pipeline."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (
+    AsyncCheckpointer,
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.compression import (
+    compressed_wire_bytes,
+    init_residuals,
+    int8_codec,
+    topk_codec,
+)
+from repro.train.fault_tolerance import GuardedStep, StragglerPolicy, plan_elastic_remesh
+from repro.train.optimizer import (
+    adam,
+    adamw,
+    adamw_update_params,
+    apply_updates,
+    chain_clip,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+from repro.train.schedule import warmup_cosine, warmup_linear
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def quad_loss(p):
+    return jnp.sum(jnp.square(p["w"] - 3.0)) + jnp.sum(jnp.square(p["b"] + 1.0))
+
+
+@pytest.mark.parametrize("make_opt", [lambda: sgd(0.1, 0.9), lambda: adam(0.1), lambda: adamw(0.1, weight_decay=0.0)])
+def test_optimizers_converge(make_opt):
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    opt = make_opt()
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(quad_loss)(params)
+        updates, state = opt.update(g, state, params)
+        params = apply_updates(params, updates)
+    assert float(quad_loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    params = {"w": jnp.ones((8,)) * 10}
+    opt = adamw(lr=0.1, weight_decay=0.5)
+    state = opt.init(params)
+    g = {"w": jnp.zeros((8,))}
+    updates, state = opt.update(g, state, params)
+    params = apply_updates(params, updates)
+    assert float(params["w"][0]) < 10.0
+
+
+def test_adamw_bf16_state_roundtrip():
+    params = {"w": jnp.ones((16,), jnp.bfloat16)}
+    opt = adamw(0.01, state_dtype=jnp.bfloat16)
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((16,), jnp.bfloat16)}
+    updates, state = opt.update(g, state, params)
+    assert jnp.isfinite(updates["w"]).all()
+
+
+def test_adamw_update_params_matches_standard():
+    params = {"w": jnp.ones((4, 8)) * 2.0}
+    grads = {"w": jnp.ones((4, 8)) * 0.3}
+    opt = adamw(0.05)
+    state = opt.init(params)
+    updates, state2 = opt.update(grads, state, params)
+    expect = apply_updates(params, updates)
+    got, state3 = adamw_update_params(
+        params, grads, opt.init(params), lr=0.05
+    )
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(expect["w"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state3["m"]["w"]), np.asarray(state2["m"]["w"]), rtol=1e-6)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(90.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    s = warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) == 0.0
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+    lin = warmup_linear(1.0, 10, 110)
+    assert float(lin(jnp.asarray(60))) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def tree_example():
+    return {
+        "layer": {"w": np.arange(12, dtype=np.float32).reshape(3, 4)},
+        "step": np.asarray(7, np.int32),
+        "nested": [np.ones((2,), np.float32), np.zeros((5,), np.int8)],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = tree_example()
+    save_checkpoint(tmp_path, 3, tree)
+    restored, step = restore_checkpoint(tmp_path, template=tree)
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    tree = tree_example()
+    for s in (1, 5, 9, 12):
+        save_checkpoint(tmp_path, s, tree)
+    assert latest_step(tmp_path) == 12
+    deleted = gc_checkpoints(tmp_path, keep=2)
+    assert len(deleted) == 2
+    assert latest_step(tmp_path) == 12
+    restored, step = restore_checkpoint(tmp_path, template=tree)
+    assert step == 12
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A partial .tmp directory must be invisible to readers and GC'd."""
+    tree = tree_example()
+    save_checkpoint(tmp_path, 1, tree)
+    # simulate a crashed writer
+    crash = tmp_path / "step_000000000002.tmp"
+    crash.mkdir()
+    (crash / "shard_000000.npz").write_bytes(b"partial")
+    assert latest_step(tmp_path) == 1
+    gc_checkpoints(tmp_path, keep=3)
+    assert not crash.exists()
+
+
+def test_async_checkpointer(tmp_path):
+    tree = tree_example()
+    ck = AsyncCheckpointer(tmp_path, keep=2)
+    for s in (0, 1, 2):
+        ck.save(s, tree)
+    ck.wait()
+    assert latest_step(tmp_path) == 2
+
+
+def test_elastic_restore_to_new_sharding(tmp_path):
+    """Restore lays out arrays for the target sharding (reshard path)."""
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {"w": np.arange(8, dtype=np.float32)}
+    save_checkpoint(tmp_path, 0, tree)
+    sh = {"w": NamedSharding(mesh, P())}
+    restored, _ = restore_checkpoint(tmp_path, template=tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+
+def test_int8_codec_error_feedback_converges():
+    """With error feedback, repeated compression of a constant gradient
+    transmits the full value over time (residual -> 0 bias)."""
+    codec = int8_codec()
+    g = jnp.asarray(np.random.default_rng(0).standard_normal(256).astype(np.float32))
+    residual = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(30):
+        payload, residual = codec.compress(g, residual)
+        total = total + codec.decompress(payload)
+    np.testing.assert_allclose(np.asarray(total / 30), np.asarray(g), atol=1e-2)
+
+
+def test_int8_codec_wire_bytes():
+    codec = int8_codec()
+    g = jnp.ones((1024,))
+    payload, _ = codec.compress(g, jnp.zeros_like(g))
+    assert codec.wire_bytes(payload) == 1024 + 4  # 4x smaller than fp32
+
+
+def test_topk_codec_sparsity_and_feedback():
+    codec = topk_codec(frac=0.1)
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((20, 10)).astype(np.float32))
+    residual = jnp.zeros_like(g)
+    payload, residual = codec.compress(g, residual)
+    dense = codec.decompress(payload)
+    assert int((np.asarray(dense) != 0).sum()) == 20  # 10% of 200
+    # error feedback: residual holds exactly what was not sent
+    np.testing.assert_allclose(
+        np.asarray(dense + residual), np.asarray(g), atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_guarded_step_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("simulated preemption")
+        return x + 1
+
+    g = GuardedStep(flaky, max_retries=3)
+    res = g(41)
+    assert res.value == 42
+    assert res.attempts == 3
+    assert len(g.failures) == 2
+
+
+def test_guarded_step_escalates_to_restore():
+    state = {"restored": False}
+    calls = {"n": 0}
+
+    def always_fails_until_restore(x):
+        calls["n"] += 1
+        if not state["restored"]:
+            raise RuntimeError("hard failure")
+        return x
+
+    def restore():
+        state["restored"] = True
+
+    g = GuardedStep(always_fails_until_restore, max_retries=1, on_restore=restore)
+    res = g(7)
+    assert res.value == 7
+    assert res.recovered
+
+
+def test_straggler_policy_flags_slow_steps():
+    p = StragglerPolicy(tolerance=2.0, eject_after=2)
+    for _ in range(5):
+        v = p.observe(1.0)
+        assert not v["slow"]
+    v = p.observe(5.0)
+    assert v["slow"] and not v["recommend_eject"]
+    v = p.observe(5.0)
+    assert v["recommend_eject"]
+
+
+def test_elastic_remesh_plans():
+    (d, m), plan = plan_elastic_remesh(512)
+    assert (d, m) == (32, 16)
+    (d, m), plan = plan_elastic_remesh(480)  # lost 2 hosts of 8 chips
+    assert (d, m) == (30, 16)
+    assert plan["devices_idle"] == 0
+    (d, m), _ = plan_elastic_remesh(12, prefer_model=16)
+    assert m <= 8 and d * m <= 12
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_lm_batches_deterministic():
+    from repro.data.pipeline import lm_batches
+
+    mk = lm_batches(0, 8, 16, 1000)
+    a, b = mk(5), mk(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = mk(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_lm_batches_host_sharding():
+    from repro.data.pipeline import lm_batches
+
+    mk0 = lm_batches(0, 8, 16, 1000, host_shard=0, n_host_shards=2)
+    mk1 = lm_batches(0, 8, 16, 1000, host_shard=1, n_host_shards=2)
+    a, b = mk0(0), mk1(0)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_prefetcher_orders_batches():
+    from repro.data.pipeline import Prefetcher
+
+    pf = Prefetcher(lambda i: i * i, depth=2)
+    got = [next(pf) for _ in range(4)]
+    pf.close()
+    assert got == [(0, 0), (1, 1), (2, 4), (3, 9)]
+
+
+# ---------------------------------------------------------------------------
+# graph sampler
+# ---------------------------------------------------------------------------
+
+
+def test_csr_and_fanout_sampler():
+    from repro.data.graph_sampler import build_csr, sample_fanout
+
+    rng = np.random.default_rng(0)
+    n, e = 200, 2000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    feats = rng.standard_normal((n, 7)).astype(np.float32)
+    g = build_csr(src, dst, n)
+    assert g.indptr[-1] == e
+    # CSR correctness: neighbors of node v are exactly sources of edges into v
+    v = int(dst[0])
+    neigh = set(g.indices[g.indptr[v] : g.indptr[v + 1]].tolist())
+    assert neigh == set(src[dst == v].tolist())
+
+    seeds = rng.choice(n, 16, replace=False)
+    block = sample_fanout(g, seeds, (5, 3), feats, rng)
+    assert block["n_seeds"] == 16
+    assert block["feats"].shape == (16 + 16 * 5 + 16 * 5 * 3, 7)
+    assert block["src"].shape == block["dst"].shape == block["edge_mask"].shape
+    # every edge's dst position is a valid block position
+    assert block["dst"].max() < len(block["node_ids"])
+    # sampled edges are real graph edges (where valid)
+    ids = block["node_ids"]
+    for s_pos, d_pos, ok in list(zip(block["src"], block["dst"], block["edge_mask"]))[:50]:
+        if ok:
+            s_id, d_id = ids[s_pos], ids[d_pos]
+            assert np.any((src == s_id) & (dst == d_id))
+
+
+def test_trainer_loop_smoke(tmp_path):
+    """End-to-end tiny loop with checkpoint + resume."""
+    from repro.train.trainer import TrainLoopConfig, train_loop
+    from repro.train.optimizer import adam, apply_updates
+
+    opt = adam(0.3)  # adam moves ~lr per step: 30 steps covers the gap to 2.0
+    params = {"w": jnp.zeros(())}
+    state = opt.init(params)
+
+    def step(params, opt_state, batch):
+        g = jax.grad(lambda p: jnp.square(p["w"] - batch))(params)
+        updates, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, updates), opt_state, {"loss": jnp.square(params["w"] - batch)}
+
+    cfg = TrainLoopConfig(total_steps=60, ckpt_dir=str(tmp_path), ckpt_every=20, log_every=100)
+    out = train_loop(cfg, step, params, state, make_batch=lambda i: 2.0, log=lambda s: None)
+    assert abs(float(out["params"]["w"]) - 2.0) < 0.2
+    # resume from checkpoint
+    out2 = train_loop(
+        TrainLoopConfig(total_steps=64, ckpt_dir=str(tmp_path), ckpt_every=20, log_every=100),
+        step, params, state, make_batch=lambda i: 2.0, log=lambda s: None,
+    )
+    assert len(out2["history"]) <= 5  # resumed near step 59
