@@ -1,0 +1,178 @@
+"""Index benchmark: recall / speedup / clustering quality of the
+``repro.index`` range backends across (n, d, eps).
+
+For each operating point the same query sweep runs through the exact
+blocked-matmul backend and the random-projection ANN backend
+(interleaved block by block so recall is measured pair-exactly without
+materializing an n^2 adjacency), then LAF-DBSCAN runs end-to-end on
+both backends with an oracle cardinality estimator so the ARI delta
+isolates the index, not the estimator.
+
+  PYTHONPATH=src python -m benchmarks.index_bench                  # 20k x 768
+  PYTHONPATH=src python -m benchmarks.index_bench --grid           # n x d x eps sweep
+  PYTHONPATH=src python -m benchmarks.index_bench --n 5000 --d 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.laf_dbscan import laf_dbscan
+from repro.core.metrics import adjusted_rand_index
+from repro.data.synthetic import make_angular_clusters
+from repro.index import ExactBackend, RandomProjectionBackend
+
+from .common import save_json
+
+N_CLUSTERS = 80
+NOISE_FRAC = 0.35
+
+
+def _dataset(n: int, d: int, seed: int):
+    # kappa = (d-1)/0.30 puts same-cluster pairs near d_cos ~ 0.3
+    # (see benchmarks.common DATASETS rationale)
+    return make_angular_clusters(
+        n, d, N_CLUSTERS, kappa=(d - 1) / 0.30, noise_frac=NOISE_FRAC, seed=seed
+    )
+
+
+def bench_point(
+    n: int,
+    d: int,
+    eps: float,
+    tau: int,
+    *,
+    n_bits: int = 512,
+    margin: float = 3.0,
+    verify: str = "band",
+    seed: int = 0,
+    block: int = 2048,
+) -> dict:
+    data, _ = _dataset(n, d, seed)
+    exact = ExactBackend().fit(data)
+    t0 = time.perf_counter()
+    rp = RandomProjectionBackend(
+        n_bits=n_bits, margin=margin, verify=verify, seed=seed
+    ).fit(data)
+    build_s = time.perf_counter() - t0
+
+    counts = np.zeros(n, dtype=np.int64)
+    tp = pos = pred = 0
+    t_exact = t_rp = 0.0
+    for start in range(0, n, block):
+        rows = np.arange(start, min(start + block, n))
+        t0 = time.perf_counter()
+        h_ex = exact.query_hits(rows, eps)
+        t_exact += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        h_rp = rp.query_hits(rows, eps)
+        t_rp += time.perf_counter() - t0
+        counts[rows] = h_ex.sum(axis=1)
+        tp += int((h_ex & h_rp).sum())
+        pos += int(h_ex.sum())
+        pred += int(h_rp.sum())
+
+    # end-to-end LAF-DBSCAN, oracle estimator, backend is the only delta
+    t0 = time.perf_counter()
+    res_ex = laf_dbscan(data, eps, tau, 1.0, counts, seed=seed, backend=exact)
+    t_laf_exact = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_rp = laf_dbscan(data, eps, tau, 1.0, counts, seed=seed, backend=rp)
+    t_laf_rp = time.perf_counter() - t0
+
+    return {
+        "n": n, "d": d, "eps": eps, "tau": tau,
+        "n_bits": n_bits, "margin": margin, "verify": verify,
+        "build_s": build_s,
+        "sweep_exact_s": t_exact, "sweep_rp_s": t_rp,
+        "sweep_speedup": t_exact / t_rp if t_rp else float("inf"),
+        "recall": tp / pos if pos else 1.0,
+        "precision": tp / pred if pred else 1.0,
+        "laf_exact_s": t_laf_exact, "laf_rp_s": t_laf_rp,
+        "laf_speedup": t_laf_exact / t_laf_rp if t_laf_rp else float("inf"),
+        "ari_rp_vs_exact": adjusted_rand_index(res_ex.labels, res_rp.labels),
+        "noise_exact": res_ex.noise_ratio, "noise_rp": res_rp.noise_ratio,
+    }
+
+
+def run(
+    profile: str = "standard",
+    *,
+    ns=(20000,),
+    ds=(768,),
+    epss=(0.55,),
+    tau: int = 5,
+    n_bits: int = 512,
+    margin: float = 3.0,
+    verify: str = "band",
+    seed: int = 0,
+):
+    if profile == "quick":  # keep `-m benchmarks.run --profile quick` cheap
+        ns, ds = tuple(min(x, 5000) for x in ns), tuple(min(x, 256) for x in ds)
+    rows = []
+    for n in ns:
+        for d in ds:
+            for eps in epss:
+                row = bench_point(
+                    n, d, eps, tau,
+                    n_bits=n_bits, margin=margin, verify=verify, seed=seed,
+                )
+                rows.append(row)
+                print(
+                    f"  n={n} d={d} eps={eps}: recall={row['recall']:.4f} "
+                    f"sweep x{row['sweep_speedup']:.2f} laf x{row['laf_speedup']:.2f} "
+                    f"ARI={row['ari_rp_vs_exact']:.4f}",
+                    flush=True,
+                )
+    save_json("index_bench", rows)
+    return rows
+
+
+def summarize(rows) -> str:
+    lines = [
+        "index_bench: random_projection vs exact backend",
+        f"{'n':>7} {'d':>5} {'eps':>5} | {'recall':>7} {'prec':>6} | "
+        f"{'sweep x':>8} {'laf x':>6} | {'ARI':>6}",
+    ]
+    for r in rows:
+        lines.append(
+            f"{r['n']:>7} {r['d']:>5} {r['eps']:>5.2f} | {r['recall']:>7.4f} "
+            f"{r['precision']:>6.3f} | {r['sweep_speedup']:>8.2f} "
+            f"{r['laf_speedup']:>6.2f} | {r['ari_rp_vs_exact']:>6.3f}"
+        )
+    worst_recall = min(r["recall"] for r in rows)
+    worst_ari = min(r["ari_rp_vs_exact"] for r in rows)
+    lines.append(f"worst recall {worst_recall:.4f}; worst ARI vs exact {worst_ari:.4f}")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, nargs="+", default=[20000])
+    ap.add_argument("--d", type=int, nargs="+", default=[768])
+    ap.add_argument("--eps", type=float, nargs="+", default=[0.55])
+    ap.add_argument("--tau", type=int, default=5)
+    ap.add_argument("--n-bits", type=int, default=512)
+    ap.add_argument("--margin", type=float, default=3.0)
+    ap.add_argument("--verify", choices=["band", "full"], default="band")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--grid", action="store_true",
+        help="sweep n in {5000, 20000}, d in {256, 768}, eps in {0.5, 0.55, 0.6}",
+    )
+    args = ap.parse_args(argv)
+    ns, ds, epss = tuple(args.n), tuple(args.d), tuple(args.eps)
+    if args.grid:
+        ns, ds, epss = (5000, 20000), (256, 768), (0.5, 0.55, 0.6)
+    rows = run(
+        ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,
+        margin=args.margin, verify=args.verify, seed=args.seed,
+    )
+    print(summarize(rows))
+
+
+if __name__ == "__main__":
+    main()

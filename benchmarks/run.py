@@ -18,6 +18,7 @@ import time
 from . import (
     fig1_time,
     fig23_tradeoff,
+    index_bench,
     kernel_bench,
     table2_noise,
     table3_quality,
@@ -28,6 +29,7 @@ from . import (
 
 TABLES = {
     "kernel_bench": kernel_bench,
+    "index_bench": index_bench,
     "table2_noise": table2_noise,
     "table3_quality": table3_quality,
     "fig1_time": fig1_time,

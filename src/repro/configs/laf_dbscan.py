@@ -25,6 +25,15 @@ class LAFClusterConfig:
     alpha: float = 1.5
     frontier: int = 4096      # queries per frontier round
     dtype: object = jnp.float32
+    # range-query backend (repro.index): "exact" = brute-force matmul,
+    # "random_projection" = sign-signature Hamming prefilter + verify
+    # (kernels.hamming_filter on device); index_bits sizes the signature,
+    # index_seed fixes the projection (db signatures MUST be packed with
+    # the same seed/bits), index_margin sets the Hamming band width.
+    backend: str = "exact"
+    index_bits: int = 512
+    index_seed: int = 0
+    index_margin: float = 3.0
 
 
 def make_config():
@@ -33,7 +42,7 @@ def make_config():
 
 
 def make_reduced_config():
-    return LAFClusterConfig(n_points=2048, dim=64, frontier=256)
+    return LAFClusterConfig(n_points=2048, dim=64, frontier=256, index_bits=128)
 
 
 LAF_SHAPES: Mapping[str, ShapeSpec] = {

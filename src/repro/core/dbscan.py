@@ -103,12 +103,21 @@ def dbscan_parallel(
     tau: int,
     *,
     block_size: int = 2048,
+    backend="exact",
 ) -> DBSCANResult:
-    """Batch-parallel exact DBSCAN (matmul core detection + star unions)."""
+    """Batch-parallel DBSCAN (blocked core detection + star unions).
+
+    ``backend`` selects the range-query engine (``repro.index``): the
+    default ``"exact"`` reproduces brute-force DBSCAN; an ANN backend
+    (``"random_projection"`` or a fit instance) makes every range query
+    cheaper at a bounded recall cost.
+    """
+    from ..index import as_fitted
+
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    thresh = 1.0 - eps
-    counts = np.asarray(range_counts(data, data, eps, block_size=block_size))
+    bk = as_fitted(backend, data, block_size=block_size)
+    counts = bk.query_counts(np.arange(n), eps)
     core = counts >= tau
     core_idx = np.nonzero(core)[0]
 
@@ -117,7 +126,7 @@ def dbscan_parallel(
 
     for start in range(0, len(core_idx), block_size):
         rows = core_idx[start : start + block_size]
-        hit = (data[rows] @ data.T) > thresh  # (b, n)
+        hit = bk.query_hits(rows, eps)  # (b, n)
         hit_core = hit & core[None, :]
         for bi, i in enumerate(rows):
             members = np.nonzero(hit_core[bi])[0]

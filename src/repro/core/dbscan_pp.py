@@ -59,8 +59,14 @@ def _cluster_from_sampled_cores(
     core_in_sample: np.ndarray,
     eps: float,
     block_size: int,
+    bk,
 ) -> np.ndarray:
-    """Connected components over sampled cores + nearest-core assignment."""
+    """Connected components over sampled cores + nearest-core assignment.
+
+    Core-core edges go through the range backend; the nearest-core
+    assignment below is an argmax (closest-point) query outside the
+    ``RangeBackend`` contract, so it stays an exact matmul.
+    """
     n = data.shape[0]
     thresh = 1.0 - eps
     core_idx = sample_idx[core_in_sample]
@@ -71,7 +77,7 @@ def _cluster_from_sampled_cores(
     parent = np.arange(len(core_idx), dtype=np.int64)
     # core-core unions within the sample
     for start in range(0, len(core_idx), block_size):
-        hit = (core_data[start : start + block_size] @ core_data.T) > thresh
+        hit = bk.query_hits_subset(core_idx[start : start + block_size], core_idx, eps)
         for bi in range(hit.shape[0]):
             union_star(parent, np.nonzero(hit[bi])[0])
     comp = compact_labels_from_parent(parent, np.ones(len(core_idx), bool))
@@ -94,26 +100,28 @@ def dbscan_pp(
     init: str = "uniform",
     block_size: int = 2048,
     seed: int = 0,
+    backend="exact",
 ) -> DBSCANResult:
     """DBSCAN++ with sample fraction p."""
+    from ..index import as_fitted
+
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
+    bk = as_fitted(backend, data, block_size=block_size)
     m = max(1, int(round(p * n)))
     rng = np.random.default_rng(seed)
     if init == "kcenter":
         sample_idx = kcenter_sample(data, m, seed)
     else:
         sample_idx = np.sort(rng.choice(n, size=m, replace=False))
-    thresh = 1.0 - eps
 
     # core detection: sampled queries against the ENTIRE dataset
-    counts = np.zeros(m, dtype=np.int64)
-    for start in range(0, m, block_size):
-        rows = sample_idx[start : start + block_size]
-        counts[start : start + len(rows)] = ((data[rows] @ data.T) > thresh).sum(axis=1)
+    counts = bk.query_counts(sample_idx, eps)
     core_in_sample = counts >= tau
 
-    labels = _cluster_from_sampled_cores(data, sample_idx, core_in_sample, eps, block_size)
+    labels = _cluster_from_sampled_cores(
+        data, sample_idx, core_in_sample, eps, block_size, bk
+    )
     core = np.zeros(n, dtype=bool)
     core[sample_idx[core_in_sample]] = True
     n_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
@@ -134,6 +142,7 @@ def laf_dbscan_pp(
     block_size: int = 2048,
     seed: int = 0,
     sample_idx: Optional[np.ndarray] = None,
+    backend="exact",
 ) -> DBSCANResult:
     """LAF-DBSCAN++: skip sampled range queries for predicted-stop samples.
 
@@ -142,8 +151,11 @@ def laf_dbscan_pp(
     identically to :func:`dbscan_pp` so the two share samples in
     benchmarks).
     """
+    from ..index import as_fitted
+
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
+    bk = as_fitted(backend, data, block_size=block_size)
     m = max(1, int(round(p * n)))
     rng = np.random.default_rng(seed)
     if sample_idx is None:
@@ -152,7 +164,6 @@ def laf_dbscan_pp(
         else:
             sample_idx = np.sort(rng.choice(n, size=m, replace=False))
     m = len(sample_idx)
-    thresh = 1.0 - eps
 
     predicted_core = np.asarray(predicted_counts_sample) >= alpha * tau
     exec_rows = sample_idx[predicted_core]
@@ -161,14 +172,16 @@ def laf_dbscan_pp(
     partial_counts = np.zeros(n, dtype=np.int64)
     for start in range(0, len(exec_rows), block_size):
         rows = exec_rows[start : start + block_size]
-        hit = (data[rows] @ data.T) > thresh
+        hit = bk.query_hits(rows, eps)
         # map back to sample positions
         pos = np.searchsorted(sample_idx, rows)
         counts[pos] = hit.sum(axis=1)
         partial_counts += hit.sum(axis=0)
     core_in_sample = predicted_core & (counts >= tau)
 
-    labels = _cluster_from_sampled_cores(data, sample_idx, core_in_sample, eps, block_size)
+    labels = _cluster_from_sampled_cores(
+        data, sample_idx, core_in_sample, eps, block_size, bk
+    )
 
     # ---- post-processing (Algorithm 3) over predicted-stop samples -----
     in_sample_stop = np.zeros(n, dtype=bool)
@@ -177,10 +190,9 @@ def laf_dbscan_pp(
     rescue_idx = np.nonzero(rescue_mask)[0]
     emap = PartialNeighborMap()
     if len(rescue_idx) > 0:
-        rescue_data = data[rescue_idx]
         for start in range(0, len(exec_rows), block_size):
             rows = exec_rows[start : start + block_size]
-            hit = (data[rows] @ rescue_data.T) > thresh
+            hit = bk.query_hits_subset(rows, rescue_idx, eps)
             for ri in np.nonzero(hit.any(axis=0))[0]:
                 r = int(rescue_idx[ri])
                 emap.register(r)

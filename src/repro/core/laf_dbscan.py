@@ -27,7 +27,7 @@ import numpy as np
 
 from .dbscan import NOISE, UNDEFINED, DBSCANResult
 from .postprocess import PartialNeighborMap, post_processing, update_partial_neighbors
-from .union_find import compact_labels_from_parent, union_star
+from .union_find import compact_labels, compact_labels_from_parent, union_star
 
 __all__ = ["laf_dbscan_sequential", "laf_dbscan"]
 
@@ -99,12 +99,8 @@ def laf_dbscan_sequential(
     return DBSCANResult(labels, core, n_clusters, queries, {"n_registered": len(emap)})
 
 
-def _compact(labels: np.ndarray) -> np.ndarray:
-    out = labels.copy()
-    ids = np.unique(labels[labels >= 0])
-    for i, c in enumerate(ids):
-        out[labels == c] = i
-    return out
+# single-pass np.unique relabeling shared with the union-find module
+_compact = compact_labels
 
 
 def laf_dbscan(
@@ -116,6 +112,7 @@ def laf_dbscan(
     *,
     block_size: int = 2048,
     seed: int = 0,
+    backend="exact",
 ) -> DBSCANResult:
     """Batch-parallel LAF-DBSCAN engine.
 
@@ -123,10 +120,15 @@ def laf_dbscan(
       predicted_counts: (n,) estimator predictions for every point at
         this eps (one batched RMI pass by the caller — kept as an input
         so engines and estimators compose freely; tests pass oracles).
+      backend: range-query backend (``repro.index``) — LAF's skip rule
+        composes with an ANN backend: the estimator skips whole queries,
+        the index then prunes the candidates inside each executed one.
     """
+    from ..index import as_fitted
+
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    thresh = 1.0 - eps
+    bk = as_fitted(backend, data, block_size=block_size)
     predicted_core = np.asarray(predicted_counts) >= alpha * tau  # LAF skip rule
     exec_idx = np.nonzero(predicted_core)[0]
     n_exec = len(exec_idx)
@@ -134,11 +136,11 @@ def laf_dbscan(
     exact_counts = np.zeros(n, dtype=np.int64)
     partial_counts = np.zeros(n, dtype=np.int64)  # |𝓔(q)| for predicted-stop q
 
-    # ---- pass 1 (the only matmul pass): execute predicted-core queries --
+    # ---- pass 1 (the only range-query pass): predicted-core queries ----
     packed_blocks: list[tuple[np.ndarray, np.ndarray]] = []
     for start in range(0, n_exec, block_size):
         rows = exec_idx[start : start + block_size]
-        hit = (data[rows] @ data.T) > thresh  # (b, n)
+        hit = bk.query_hits(rows, eps)  # (b, n)
         exact_counts[rows] = hit.sum(axis=1)
         # Alg.2 superset: every predicted-stop neighbor of an executed
         # query gains one partial neighbor.
@@ -176,10 +178,9 @@ def laf_dbscan(
     rescue_idx = np.nonzero(~predicted_core & (partial_counts >= tau))[0]
     emap = PartialNeighborMap()
     if len(rescue_idx) > 0:
-        rescue_data = data[rescue_idx]
         for start in range(0, n_exec, block_size):
             rows = exec_idx[start : start + block_size]
-            hit = (data[rows] @ rescue_data.T) > thresh  # (b, n_rescue)
+            hit = bk.query_hits_subset(rows, rescue_idx, eps)  # (b, n_rescue)
             for ri in np.nonzero(hit.any(axis=0))[0]:
                 r = int(rescue_idx[ri])
                 emap.register(r)

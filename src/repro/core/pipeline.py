@@ -30,7 +30,13 @@ class ClusterOutcome:
 
 
 class LAFPipeline:
-    """Owns a trained cardinality estimator + the LAF-enhanced engines."""
+    """Owns a trained cardinality estimator + the LAF-enhanced engines.
+
+    ``backend`` selects the range-query engine for every clustering
+    method (``repro.index``): ``"exact"`` (default), ``"random_projection"``,
+    or a constructed ``RangeBackend`` instance; per-call ``backend=``
+    kwargs override it.
+    """
 
     def __init__(
         self,
@@ -40,12 +46,14 @@ class LAFPipeline:
         batch_size: int = 512,
         lr: float = 1e-3,
         seed: int = 0,
+        backend="exact",
     ):
         self.eps_grid = eps_grid
         self.epochs = epochs
         self.batch_size = batch_size
         self.lr = lr
         self.seed = seed
+        self.backend = backend
         self.estimator: Optional[TrainedEstimator] = None
 
     # -- estimator ---------------------------------------------------------
@@ -74,6 +82,7 @@ class LAFPipeline:
     def cluster_laf_dbscan(
         self, vectors: np.ndarray, eps: float, tau: int, alpha: float, **kw
     ) -> ClusterOutcome:
+        kw.setdefault("backend", self.backend)
         t0 = time.time()
         pred = self.predict_counts(vectors, eps)
         t1 = time.time()
@@ -83,6 +92,7 @@ class LAFPipeline:
                               {"eps": eps, "tau": tau, "alpha": alpha})
 
     def cluster_dbscan(self, vectors: np.ndarray, eps: float, tau: int, **kw) -> ClusterOutcome:
+        kw.setdefault("backend", self.backend)
         t0 = time.time()
         res = dbscan_parallel(vectors, eps, tau, **kw)
         return ClusterOutcome(res, time.time() - t0, 0.0, "DBSCAN", {"eps": eps, "tau": tau})
@@ -91,6 +101,7 @@ class LAFPipeline:
         self, vectors: np.ndarray, eps: float, tau: int,
         *, delta: float = 0.2, alpha: float = 1.0, p: Optional[float] = None, **kw
     ) -> ClusterOutcome:
+        kw.setdefault("backend", self.backend)
         t0 = time.time()
         if p is None:
             pred = self.predict_counts(vectors, eps)
@@ -103,6 +114,7 @@ class LAFPipeline:
         self, vectors: np.ndarray, eps: float, tau: int,
         *, delta: float = 0.2, alpha: float = 1.0, p: Optional[float] = None, **kw
     ) -> ClusterOutcome:
+        kw.setdefault("backend", self.backend)
         t0 = time.time()
         pred_all = self.predict_counts(vectors, eps)
         if p is None:

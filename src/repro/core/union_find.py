@@ -26,10 +26,22 @@ __all__ = [
     "connected_components_host",
     "find_roots_vec",
     "union_star",
+    "compact_labels",
     "compact_labels_from_parent",
     "label_propagation",
     "label_propagation_dense",
 ]
+
+
+def compact_labels(labels: np.ndarray) -> np.ndarray:
+    """Renumber non-negative labels to 0..k-1 (order-preserving), one
+    ``np.unique`` pass; negative labels (noise) are kept as-is."""
+    out = labels.copy()
+    pos = labels >= 0
+    if pos.any():
+        _, inv = np.unique(labels[pos], return_inverse=True)
+        out[pos] = inv
+    return out
 
 
 def find_roots_vec(parent: np.ndarray, nodes: np.ndarray) -> np.ndarray:

@@ -1,0 +1,18 @@
+"""``repro.index`` — pluggable eps-range-query backends for the engines.
+
+``as_fitted("exact" | "random_projection", data)`` is the entry point
+the ``repro.core`` engines use; see ``base`` for the protocol and the
+sibling modules for the implementations.  The TPU tile of the
+random-projection pipeline lives in ``repro.kernels.hamming_filter``.
+"""
+
+from .base import BACKENDS, RangeBackend, as_fitted, make_backend, register_backend  # noqa: F401
+from .exact import ExactBackend  # noqa: F401
+from .random_projection import RandomProjectionBackend  # noqa: F401
+from .signatures import (  # noqa: F401
+    collision_fraction,
+    hamming_band,
+    hamming_numpy,
+    make_projection,
+    sign_signatures,
+)

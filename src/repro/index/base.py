@@ -1,0 +1,108 @@
+"""Range-query backend protocol + registry.
+
+Every clustering engine in ``repro.core`` consumes eps-neighborhoods
+through three primitives — boolean hit rows against the whole database,
+hit rows against a column subset, and neighbor counts.  A
+``RangeBackend`` supplies those primitives for one database (``fit``
+binds the data; queries are rows *of that database*, which is exactly
+how DBSCAN uses them).  Backends are interchangeable:
+
+* ``exact``             — the blocked-matmul oracle (bit-for-bit the
+                          engine behaviour before this subsystem).
+* ``random_projection`` — signed-random-projection ANN prefilter with
+                          exact verification (sDBSCAN-style).
+
+Engines accept ``backend=`` as either a registry name, a
+``(name, kwargs)``-style constructed instance, or an already-fit
+instance; ``as_fitted`` normalizes all three.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Type, Union
+
+import numpy as np
+
+__all__ = ["RangeBackend", "BACKENDS", "register_backend", "make_backend", "as_fitted"]
+
+
+class RangeBackend:
+    """Interface + shared glue for eps-range query backends.
+
+    Subclasses must implement ``fit`` and ``query_hits``; the remaining
+    primitives have correct (if not always optimal) defaults on top.
+    ``fit`` must be idempotent when handed the same array object so
+    engines can re-enter with a shared backend without paying a rebuild.
+    """
+
+    name: str = "base"
+
+    def fit(self, data: np.ndarray) -> "RangeBackend":
+        raise NotImplementedError
+
+    # -- primitives --------------------------------------------------------
+    def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        """Boolean (len(rows), n) adjacency of db[rows] against the db."""
+        raise NotImplementedError
+
+    def query_hits_subset(
+        self, rows: np.ndarray, cols: np.ndarray, eps: float
+    ) -> np.ndarray:
+        """Boolean (len(rows), len(cols)) adjacency against db[cols]."""
+        return self.query_hits(rows, eps)[:, cols]
+
+    def query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        """Neighbor counts |N_eps(db[i])| for i in rows (int64).
+
+        Chunked over rows so the boolean hit matrix never exceeds
+        (block, n) even when asked for counts of the whole database.
+        """
+        rows = np.asarray(rows)
+        block = getattr(self, "block_size", 2048)
+        counts = np.zeros(len(rows), dtype=np.int64)
+        for start in range(0, len(rows), block):
+            sub = rows[start : start + block]
+            counts[start : start + len(sub)] = self.query_hits(sub, eps).sum(axis=1)
+        return counts
+
+    # -- conveniences ------------------------------------------------------
+    def neighbor_lists(self, eps: float, block_size: int = 2048) -> List[np.ndarray]:
+        """Per-point sorted neighbor index arrays for the whole database."""
+        n = self.n_points
+        out: List[np.ndarray] = []
+        for start in range(0, n, block_size):
+            rows = np.arange(start, min(start + block_size, n))
+            hit = self.query_hits(rows, eps)
+            for i in range(hit.shape[0]):
+                out.append(np.nonzero(hit[i])[0])
+        return out
+
+    @property
+    def n_points(self) -> int:
+        return self._data.shape[0]  # type: ignore[attr-defined]
+
+
+BACKENDS: Dict[str, Type[RangeBackend]] = {}
+
+
+def register_backend(cls: Type[RangeBackend]) -> Type[RangeBackend]:
+    BACKENDS[cls.name] = cls
+    return cls
+
+
+def make_backend(spec: Union[str, RangeBackend], **kwargs) -> RangeBackend:
+    """Normalize a backend spec (registry name or instance) to an instance."""
+    if isinstance(spec, RangeBackend):
+        return spec
+    if spec not in BACKENDS:
+        raise KeyError(f"unknown range backend {spec!r}; known: {sorted(BACKENDS)}")
+    return BACKENDS[spec](**kwargs)
+
+
+def as_fitted(spec: Union[str, RangeBackend], data: np.ndarray, **kwargs) -> RangeBackend:
+    """Backend instance bound to ``data`` (no-op refit on the same array).
+
+    ``kwargs`` configure construction when ``spec`` is a registry name;
+    an already-constructed instance keeps its own configuration.
+    """
+    return make_backend(spec, **kwargs).fit(data)

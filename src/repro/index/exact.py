@@ -1,0 +1,53 @@
+"""Exact range backend: the blocked-matmul engine as a ``RangeBackend``.
+
+This is the same thresholded matmul the engines inlined before the
+index subsystem existed (numpy BLAS; d_cos(q, x) < eps  <=>  <q, x> >
+1 - eps on normalized vectors), so swapping an engine to
+``backend="exact"`` is behaviour-preserving.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.range_query import range_counts
+from .base import RangeBackend, register_backend
+
+__all__ = ["ExactBackend"]
+
+
+@register_backend
+class ExactBackend(RangeBackend):
+    name = "exact"
+
+    def __init__(self, *, block_size: int = 2048):
+        self.block_size = block_size
+        self._data: np.ndarray | None = None
+
+    def fit(self, data: np.ndarray) -> "ExactBackend":
+        if self._data is data:
+            return self
+        self._data = np.ascontiguousarray(data, dtype=np.float32)
+        return self
+
+    def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        assert self._data is not None, "call fit() first"
+        return (self._data[rows] @ self._data.T) > (1.0 - eps)
+
+    def query_hits_subset(
+        self, rows: np.ndarray, cols: np.ndarray, eps: float
+    ) -> np.ndarray:
+        assert self._data is not None, "call fit() first"
+        return (self._data[rows] @ self._data[cols].T) > (1.0 - eps)
+
+    def query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        assert self._data is not None, "call fit() first"
+        rows = np.asarray(rows)
+        n = self._data.shape[0]
+        if len(rows) == n and np.array_equal(rows, np.arange(n)):
+            # whole-database counts: the jit'd blocked lax.scan engine
+            # (device-placed; bit-for-bit the pre-index dbscan_parallel)
+            return np.asarray(
+                range_counts(self._data, self._data, eps, block_size=self.block_size)
+            ).astype(np.int64)
+        return super().query_counts(rows, eps)

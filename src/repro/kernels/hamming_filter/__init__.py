@@ -1,0 +1,1 @@
+from .ops import hamming_filter_bitmap, hamming_filter_count  # noqa: F401

@@ -1,0 +1,102 @@
+"""Public jit'd wrappers for the Hamming-filter kernel: padding to tile
+alignment, padded-row corrections, interpret switch — mirroring
+``repro.kernels.range_count.ops``."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_DB_TILE, DEFAULT_Q_TILE, hamming_filter_pallas
+
+__all__ = ["hamming_filter_count", "hamming_filter_bitmap"]
+
+
+def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[0]) % mult
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+def _pad_col_hits(q_sig: jax.Array, eps, ham_thresh, n_pad: int) -> jax.Array:
+    """Per-query hits contributed by zero-padded db rows.
+
+    A padded db row has signature 0 and vector 0, so it passes the
+    Hamming filter iff popcount(q_sig_i) <= t and the dot test iff
+    0 > 1 - eps (i.e. eps > 1) — exactly computable, like range_count's
+    padded-hit correction but signature-dependent.
+    """
+    pop = jnp.sum(jax.lax.population_count(q_sig).astype(jnp.int32), axis=1)
+    passes = (pop <= jnp.asarray(ham_thresh, jnp.int32)) & (
+        jnp.asarray(eps, jnp.float32) > 1.0
+    )
+    return jnp.where(passes, n_pad, 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "db_tile", "interpret"))
+def hamming_filter_count(
+    q: jax.Array,
+    db: jax.Array,
+    q_sig: jax.Array,
+    db_sig: jax.Array,
+    eps,
+    ham_thresh,
+    *,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: bool = True,
+):
+    """Filtered-and-verified neighbor counts; pads to tiles and subtracts
+    the padded-row hits exactly."""
+    nq, nd = q.shape[0], db.shape[0]
+    qp, dbp = _pad_rows(q, q_tile), _pad_rows(db, db_tile)
+    qsp, dbsp = _pad_rows(q_sig, q_tile), _pad_rows(db_sig, db_tile)
+    counts = hamming_filter_pallas(
+        qp, dbp, qsp, dbsp, eps, ham_thresh,
+        q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+    )[:nq]
+    n_pad = dbp.shape[0] - nd
+    if n_pad:
+        counts = counts - _pad_col_hits(q_sig, eps, ham_thresh, n_pad)
+    return counts
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "db_tile", "interpret"))
+def hamming_filter_bitmap(
+    q: jax.Array,
+    db: jax.Array,
+    q_sig: jax.Array,
+    db_sig: jax.Array,
+    eps,
+    ham_thresh,
+    *,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: bool = True,
+):
+    """(counts, packed adjacency) with padded bits cleared; the bitmap
+    covers ceil(nd/32) words."""
+    nq, nd = q.shape[0], db.shape[0]
+    qp, dbp = _pad_rows(q, q_tile), _pad_rows(db, db_tile)
+    qsp, dbsp = _pad_rows(q_sig, q_tile), _pad_rows(db_sig, db_tile)
+    counts, bitmap = hamming_filter_pallas(
+        qp, dbp, qsp, dbsp, eps, ham_thresh,
+        q_tile=q_tile, db_tile=db_tile, interpret=interpret, with_bitmap=True,
+    )
+    counts = counts[:nq]
+    bitmap = bitmap[:nq]
+    n_pad = dbp.shape[0] - nd
+    if n_pad:
+        counts = counts - _pad_col_hits(q_sig, eps, ham_thresh, n_pad)
+        nw = bitmap.shape[1]
+        bit_idx = jnp.arange(nw * 32) < nd
+        word_mask = jnp.sum(
+            bit_idx.reshape(nw, 32).astype(jnp.uint32)
+            << jnp.arange(32, dtype=jnp.uint32)[None, :],
+            axis=1,
+            dtype=jnp.uint32,
+        )
+        bitmap = bitmap & word_mask[None, :]
+    words_needed = -(-nd // 32)
+    return counts, bitmap[:, :words_needed]

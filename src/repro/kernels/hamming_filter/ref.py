@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused Hamming-filter + exact-verify kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def _hamming(q_sig, db_sig):
+    x = q_sig[:, None, :] ^ db_sig[None, :, :]
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_filter_count_ref(q, db, q_sig, db_sig, eps, ham_thresh):
+    """Counts of {j : hamming(sig_i, sig_j) <= t  and  1 - <q_i, db_j> < eps}."""
+    dots = q.astype(jnp.float32) @ db.astype(jnp.float32).T
+    hit = (_hamming(q_sig, db_sig) <= ham_thresh) & (dots > 1.0 - eps)
+    return jnp.sum(hit, axis=1, dtype=jnp.int32)
+
+
+def hamming_filter_bitmap_ref(q, db, q_sig, db_sig, eps, ham_thresh):
+    """(counts, packed uint32 adjacency rows) under the same predicate."""
+    dots = q.astype(jnp.float32) @ db.astype(jnp.float32).T
+    hit = (_hamming(q_sig, db_sig) <= ham_thresh) & (dots > 1.0 - eps)
+    counts = jnp.sum(hit, axis=1, dtype=jnp.int32)
+    nq, nd = hit.shape
+    pad = (-nd) % 32
+    hitp = jnp.pad(hit, ((0, 0), (0, pad)))
+    words = hitp.reshape(nq, -1, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    packed = jnp.sum(words << shifts[None, None, :], axis=2, dtype=jnp.uint32)
+    return counts, packed

@@ -744,7 +744,25 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
     all_axes = tuple(mesh.axis_names)
     thresh = 1.0 - base.eps
 
-    def cluster_step(rmi_params, db, queries):
+    # backend="random_projection": the frontier round carries the ANN
+    # index's Hamming pre-filter — packed db signatures ride along
+    # row-sharded with the database, frontier signatures are projected
+    # in-step, and hits are gated on the signature band (repro.index
+    # semantics; the per-tile matmul *skip* is the hamming_filter Pallas
+    # kernel's job, this lowering keeps the filtered dataflow shardable).
+    use_rp = base.backend == "random_projection"
+    if use_rp:
+        from ..index.signatures import hamming_band, make_projection
+
+        n_bits = base.index_bits
+        sig_words = n_bits // 32
+        # the projection is part of the cell contract: db_sig passed in
+        # must be packed with this (index_seed, index_bits) projection —
+        # both are recorded in the cell meta below
+        proj = jnp.asarray(make_projection(d, n_bits, seed=base.index_seed))
+        ham_hi = hamming_band(base.eps, n_bits, margin=base.index_margin)[1]
+
+    def cluster_step(rmi_params, db, queries, db_sig=None):
         """One frontier round: RMI predicts frontier cardinalities; the
         whole frontier's range counts + partial-neighbor increments are
         computed against the device-sharded database."""
@@ -763,11 +781,19 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
                 preferred_element_type=F32,
             )                                                  # (C, n)
             hit = dots > thresh
+            if use_rp:
+                from ..index.signatures import hamming_words, pack_bits
+
+                q_sig = pack_bits((qc.astype(F32) @ proj) >= 0.0)
+                hit = hit & (hamming_words(q_sig, db_sig) <= ham_hi)
             return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
 
         # bound the live (chunk, n_local) fp32 score tile to ~0.5 GiB
         n_dev = int(np.prod(list(mesh.shape.values())))
-        rows_budget = max(32, int(1.25e8 / max(n // n_dev, 1)))
+        # the rp path adds a (chunk, n_local) int32 ham matrix + uint32
+        # XOR temporaries on top of the fp32 score tile: halve the budget
+        elems_budget = 0.625e8 if use_rp else 1.25e8
+        rows_budget = max(32, int(elems_budget / max(n // n_dev, 1)))
         n_chunks = 1
         while frontier // n_chunks > rows_budget and n_chunks < frontier:
             n_chunks *= 2
@@ -789,10 +815,22 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         named(mesh, all_axes, None),   # db row-sharded over every device
         replicated(mesh),
     )
+    if use_rp:
+        # packed signatures row-sharded exactly like the database
+        args = args + (jax.ShapeDtypeStruct((n, sig_words), jnp.uint32),)
+        in_sh = in_sh + (named(mesh, all_axes, None),)
     out_sh = (replicated(mesh), named(mesh, all_axes), replicated(mesh))
+    meta = {"kind": "cluster", "n_points": n, "dim": d, "frontier": frontier}
+    if use_rp:
+        # the db_sig contract: signatures must be packed with this exact
+        # projection (repro.index.make_projection(dim, bits, seed))
+        meta.update(
+            index_bits=base.index_bits,
+            index_seed=base.index_seed,
+            index_margin=base.index_margin,
+        )
     return LoweredCell(
-        f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh,
-        {"kind": "cluster", "n_points": n, "dim": d, "frontier": frontier},
+        f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh, meta,
     )
 
 

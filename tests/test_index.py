@@ -1,0 +1,259 @@
+"""repro.index: backend protocol, signatures, and engine integration.
+
+Also carries the non-multiple-of-32 bitmap-utility coverage for
+``repro.core.range_query`` (those utilities are the packing idiom the
+index signatures reuse).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dbscan import dbscan_parallel
+from repro.core.laf_dbscan import laf_dbscan
+from repro.core.metrics import adjusted_rand_index
+from repro.core.range_query import (
+    bitmap_row_to_indices,
+    neighbor_lists,
+    pack_bitmap,
+    unpack_bitmap,
+)
+from repro.data.synthetic import make_angular_clusters, sample_uniform_sphere
+from repro.index import (
+    ExactBackend,
+    RandomProjectionBackend,
+    as_fitted,
+    hamming_band,
+    hamming_numpy,
+    make_projection,
+    sign_signatures,
+)
+
+EPS = 0.55
+
+
+@pytest.fixture(scope="module")
+def fixture_data():
+    data, _ = make_angular_clusters(1500, 48, 12, kappa=160, noise_frac=0.3, seed=7)
+    return data
+
+
+# ---------------------------------------------------------------------------
+# bitmap utilities at nd not a multiple of 32
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nd", [1, 31, 33, 77, 100])
+def test_pack_unpack_roundtrip_odd_widths(nd):
+    rng = np.random.default_rng(nd)
+    hits = rng.random((9, nd)) < 0.4
+    packed = pack_bitmap(hits)
+    assert packed.shape == (9, -(-nd // 32))
+    np.testing.assert_array_equal(unpack_bitmap(packed, nd), hits)
+
+
+@pytest.mark.parametrize("nd", [31, 45, 97])
+def test_bitmap_row_to_indices_odd_widths(nd):
+    rng = np.random.default_rng(nd + 1)
+    hits = rng.random((4, nd)) < 0.35
+    packed = pack_bitmap(hits)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            bitmap_row_to_indices(packed[i], nd), np.nonzero(hits[i])[0]
+        )
+
+
+# ---------------------------------------------------------------------------
+# signatures
+# ---------------------------------------------------------------------------
+
+
+def test_sign_signatures_match_host_packing():
+    rng = np.random.default_rng(0)
+    data = sample_uniform_sphere(rng, 200, 40)
+    proj = make_projection(40, 64, seed=2)
+    sigs = sign_signatures(data, proj)
+    assert sigs.shape == (200, 2) and sigs.dtype == np.uint32
+    np.testing.assert_array_equal(sigs, pack_bitmap((data @ proj) >= 0))
+
+
+def test_make_projection_rejects_unaligned_bits():
+    with pytest.raises(ValueError):
+        make_projection(16, 40)
+
+
+def test_hamming_numpy_matches_bit_xor():
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2**32, size=(6, 3), dtype=np.uint32)
+    b = rng.integers(0, 2**32, size=(9, 3), dtype=np.uint32)
+    got = hamming_numpy(a, b)
+    ref = np.array(
+        [[sum(bin(int(x) ^ int(y)).count("1") for x, y in zip(ra, rb)) for rb in b]
+         for ra in a]
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_hamming_band_ordering():
+    for eps in (0.2, 0.55, 0.9):
+        t_lo, t_hi = hamming_band(eps, 512, margin=3.0)
+        assert t_lo < t_hi <= 512
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+def test_exact_backend_matches_neighbor_lists(fixture_data):
+    bk = as_fitted("exact", fixture_data)
+    ref = neighbor_lists(fixture_data, EPS)
+    got = bk.neighbor_lists(EPS)
+    assert len(got) == len(ref)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_fit_idempotent_on_same_array(fixture_data):
+    bk = RandomProjectionBackend(seed=0).fit(fixture_data)
+    sigs = bk.signatures
+    assert bk.fit(fixture_data) is bk
+    assert bk.signatures is sigs
+
+
+def test_rp_full_verify_with_open_filter_is_exact(fixture_data):
+    """ham_thresh = n_bits admits every candidate; full verify then
+    reproduces the exact neighbor lists bit-for-bit."""
+    bk = RandomProjectionBackend(n_bits=64, margin=1e9, verify="full", seed=4)
+    bk.fit(fixture_data)
+    t_lo, t_hi = bk.band(EPS)
+    assert t_lo == -1 and t_hi == 64
+    ref = neighbor_lists(fixture_data, EPS)
+    got = bk.neighbor_lists(EPS)
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("verify", ["band", "full"])
+def test_rp_recall_on_fixture(fixture_data, verify):
+    """Default-parameter recall of the ANN backend vs exact neighbor
+    lists; full-verify mode must also keep precision at 1."""
+    bk = RandomProjectionBackend(seed=1, verify=verify).fit(fixture_data)
+    ref = neighbor_lists(fixture_data, EPS)
+    got = bk.neighbor_lists(EPS)
+    tp = fp = pos = 0
+    for a, b in zip(got, ref):
+        inter = len(np.intersect1d(a, b, assume_unique=True))
+        tp += inter
+        fp += len(a) - inter
+        pos += len(b)
+    assert tp / pos >= 0.95
+    if verify == "full":
+        assert fp == 0
+
+
+def test_rp_subset_consistent_with_full(fixture_data):
+    bk = RandomProjectionBackend(seed=2, verify="full").fit(fixture_data)
+    rows = np.arange(40)
+    cols = np.arange(100, 900, 3)
+    np.testing.assert_array_equal(
+        bk.query_hits_subset(rows, cols, EPS), bk.query_hits(rows, EPS)[:, cols]
+    )
+
+
+def test_query_counts_chunking_consistent(fixture_data):
+    bk = as_fitted("exact", fixture_data, block_size=128)
+    rows = np.arange(300)
+    np.testing.assert_array_equal(
+        bk.query_counts(rows, EPS), bk.query_hits(rows, EPS).sum(axis=1)
+    )
+
+
+def test_make_backend_unknown_name():
+    with pytest.raises(KeyError):
+        as_fitted("faiss", np.zeros((4, 4), np.float32))
+
+
+def test_neighbor_lists_backend_dispatch(fixture_data):
+    ref = neighbor_lists(fixture_data, EPS)
+    got = neighbor_lists(
+        fixture_data, EPS,
+        backend=RandomProjectionBackend(n_bits=64, margin=1e9, verify="full", seed=4),
+    )
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: indexed clustering tracks exact clustering
+# ---------------------------------------------------------------------------
+
+
+def test_dbscan_parallel_rp_backend_matches_exact(fixture_data):
+    tau = 5
+    exact = dbscan_parallel(fixture_data, EPS, tau)
+    rp = dbscan_parallel(fixture_data, EPS, tau, backend="random_projection")
+    assert adjusted_rand_index(exact.labels, rp.labels) >= 0.98
+    # core sets nearly identical (ANN may drop a few boundary counts)
+    assert (exact.core != rp.core).mean() <= 0.01
+
+
+def test_laf_dbscan_rp_backend_matches_exact(fixture_data):
+    tau = 5
+    bk = as_fitted("exact", fixture_data)
+    pred = bk.query_counts(np.arange(len(fixture_data)), EPS)  # oracle estimator
+    exact = laf_dbscan(fixture_data, EPS, tau, 1.0, pred)
+    rp = laf_dbscan(fixture_data, EPS, tau, 1.0, pred, backend="random_projection")
+    assert adjusted_rand_index(exact.labels, rp.labels) >= 0.98
+
+
+# ---------------------------------------------------------------------------
+# config -> lowered workload: LAFClusterConfig.backend/index_bits are live
+# ---------------------------------------------------------------------------
+
+
+def test_laf_cluster_lowering_consumes_rp_backend():
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.configs.registry import get_arch
+    from repro.launch import steps as S
+
+    arch = get_arch("laf_dbscan")
+    base = arch.make_reduced_config()
+    shape = dataclasses.replace(arch.shapes["nyt_150k"], meta={"n_points": 512, "dim": 32})
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+
+    def cell_for(backend):
+        red = dataclasses.replace(base, backend=backend)
+        a = dataclasses.replace(arch, make_config=lambda: red)
+        return S.build_laf_cluster(a, shape, mesh)
+
+    exact_cell = cell_for("exact")
+    rp_cell = cell_for("random_projection")
+    assert len(exact_cell.args) == 3
+    assert len(rp_cell.args) == 4  # packed db signatures ride along
+    n, w = rp_cell.args[3].shape
+    assert (n, w) == (512, base.index_bits // 32)
+
+    rng = np.random.default_rng(0)
+    data = sample_uniform_sphere(rng, 512, 32)
+    queries = data[: base.frontier]
+    db_sig = sign_signatures(data, make_projection(32, base.index_bits, seed=0))
+    params = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), exact_cell.args[0])
+
+    # partial_counts (output 1) is not masked by the RMI skip gate, so
+    # it isolates the signature filter from the zero-initialized
+    # estimator's skip decisions
+    exact_partial = np.asarray(exact_cell.step_fn(params, data, queries)[1])
+    rp_partial = np.asarray(
+        rp_cell.step_fn(params, data, queries, jnp.asarray(db_sig))[1]
+    )
+    # the Hamming gate only removes pairs, and at margin=3 removes
+    # almost no true neighbors
+    assert np.all(rp_partial <= exact_partial)
+    assert exact_partial.sum() > 0
+    kept = rp_partial.sum() / exact_partial.sum()
+    assert kept >= 0.95

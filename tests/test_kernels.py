@@ -218,3 +218,66 @@ def test_flash_attention_bf16():
     got = np.asarray(flash_attention(q, k, v, causal=True, q_block=64, kv_block=64), np.float32)
     ref = np.asarray(attention_ref(q, k, v, causal=True), np.float32)
     np.testing.assert_allclose(got, ref, rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# hamming_filter
+# ---------------------------------------------------------------------------
+from repro.index.signatures import hamming_band, make_projection, sign_signatures
+from repro.kernels.hamming_filter.ops import hamming_filter_bitmap, hamming_filter_count
+from repro.kernels.hamming_filter.ref import (
+    hamming_filter_bitmap_ref,
+    hamming_filter_count_ref,
+)
+
+
+def _sig_case(nq, nd, d, n_bits, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(sample_uniform_sphere(rng, nq, d))
+    db = jnp.asarray(sample_uniform_sphere(rng, nd, d))
+    proj = make_projection(d, n_bits, seed=seed + 1)
+    q_sig = jnp.asarray(sign_signatures(np.asarray(q), proj))
+    db_sig = jnp.asarray(sign_signatures(np.asarray(db), proj))
+    return q, db, q_sig, db_sig
+
+
+@pytest.mark.parametrize("nq,nd,d,n_bits", [(64, 128, 32, 64), (100, 300, 64, 96), (33, 257, 48, 32)])
+@pytest.mark.parametrize("eps", [0.3, 0.7, 1.2])
+def test_hamming_filter_count_sweep(nq, nd, d, n_bits, eps):
+    q, db, q_sig, db_sig = _sig_case(nq, nd, d, n_bits, seed=nq + nd)
+    _, t_hi = hamming_band(eps, n_bits, margin=3.0)
+    got = np.asarray(
+        hamming_filter_count(q, db, q_sig, db_sig, eps, t_hi, q_tile=32, db_tile=64)
+    )
+    ref = np.asarray(hamming_filter_count_ref(q, db, q_sig, db_sig, eps, t_hi))
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("nq,nd", [(40, 96), (64, 257)])
+def test_hamming_filter_bitmap_sweep(nq, nd):
+    q, db, q_sig, db_sig = _sig_case(nq, nd, 48, 64, seed=7)
+    _, t_hi = hamming_band(0.6, 64, margin=3.0)
+    gc, gb = hamming_filter_bitmap(q, db, q_sig, db_sig, 0.6, t_hi, q_tile=32, db_tile=64)
+    rc, rb = hamming_filter_bitmap_ref(q, db, q_sig, db_sig, 0.6, t_hi)
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(gb), np.asarray(rb))
+
+
+def test_hamming_filter_open_threshold_equals_range_count():
+    """ham_thresh = n_bits disables the filter: the fused kernel must
+    reproduce the plain range_count oracle exactly."""
+    q, db, q_sig, db_sig = _sig_case(48, 200, 32, 64, seed=11)
+    for eps in (0.4, 0.8):
+        got = np.asarray(
+            hamming_filter_count(q, db, q_sig, db_sig, eps, 64, q_tile=32, db_tile=64)
+        )
+        ref = np.asarray(range_count_ref(q, db, eps))
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_hamming_filter_closed_threshold_prunes_everything():
+    q, db, q_sig, db_sig = _sig_case(32, 64, 32, 64, seed=13)
+    got = np.asarray(
+        hamming_filter_count(q, db, q_sig, db_sig, 0.5, -1, q_tile=32, db_tile=64)
+    )
+    np.testing.assert_array_equal(got, np.zeros(32, np.int32))
