@@ -11,12 +11,21 @@ isolates the index, not the estimator.
   PYTHONPATH=src python -m benchmarks.index_bench                  # 20k x 768
   PYTHONPATH=src python -m benchmarks.index_bench --grid           # n x d x eps sweep
   PYTHONPATH=src python -m benchmarks.index_bench --n 5000 --d 256
+  PYTHONPATH=src python -m benchmarks.index_bench \
+      --n 2000 --d 64 --device device --json BENCH_PR2.json        # CI trajectory
+
+``--device device`` routes the ANN backend through the fused Pallas
+``hamming_filter`` tile (interpret mode off-accelerator), so the CI
+artifact tracks the kernel path's recall/speedup/ARI, not just the
+host oracle's.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -48,6 +57,7 @@ def bench_point(
     n_bits: int = 512,
     margin: float = 3.0,
     verify: str = "band",
+    device: str = "host",
     seed: int = 0,
     block: int = 2048,
 ) -> dict:
@@ -55,7 +65,8 @@ def bench_point(
     exact = ExactBackend().fit(data)
     t0 = time.perf_counter()
     rp = RandomProjectionBackend(
-        n_bits=n_bits, margin=margin, verify=verify, seed=seed
+        n_bits=n_bits, margin=margin, verify=verify, seed=seed,
+        device=(device == "device"),
     ).fit(data)
     build_s = time.perf_counter() - t0
 
@@ -85,7 +96,7 @@ def bench_point(
 
     return {
         "n": n, "d": d, "eps": eps, "tau": tau,
-        "n_bits": n_bits, "margin": margin, "verify": verify,
+        "n_bits": n_bits, "margin": margin, "verify": verify, "device": device,
         "build_s": build_s,
         "sweep_exact_s": t_exact, "sweep_rp_s": t_rp,
         "sweep_speedup": t_exact / t_rp if t_rp else float("inf"),
@@ -108,6 +119,7 @@ def run(
     n_bits: int = 512,
     margin: float = 3.0,
     verify: str = "band",
+    device: str = "host",
     seed: int = 0,
 ):
     if profile == "quick":  # keep `-m benchmarks.run --profile quick` cheap
@@ -118,7 +130,8 @@ def run(
             for eps in epss:
                 row = bench_point(
                     n, d, eps, tau,
-                    n_bits=n_bits, margin=margin, verify=verify, seed=seed,
+                    n_bits=n_bits, margin=margin, verify=verify, device=device,
+                    seed=seed,
                 )
                 rows.append(row)
                 print(
@@ -158,7 +171,17 @@ def main(argv=None):
     ap.add_argument("--n-bits", type=int, default=512)
     ap.add_argument("--margin", type=float, default=3.0)
     ap.add_argument("--verify", choices=["band", "full"], default="band")
+    ap.add_argument(
+        "--device", choices=["host", "device"], default="host",
+        help="ANN backend evaluator: host numpy band logic or the fused "
+        "Pallas hamming_filter tile (interpret mode off-accelerator)",
+    )
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--json", type=Path, default=None,
+        help="also write {rows, summary} to this path (CI perf-trajectory "
+        "artifact, e.g. BENCH_PR2.json)",
+    )
     ap.add_argument(
         "--grid", action="store_true",
         help="sweep n in {5000, 20000}, d in {256, 768}, eps in {0.5, 0.55, 0.6}",
@@ -169,9 +192,19 @@ def main(argv=None):
         ns, ds, epss = (5000, 20000), (256, 768), (0.5, 0.55, 0.6)
     rows = run(
         ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,
-        margin=args.margin, verify=args.verify, seed=args.seed,
+        margin=args.margin, verify=args.verify, device=args.device,
+        seed=args.seed,
     )
     print(summarize(rows))
+    if args.json is not None:
+        payload = {
+            "rows": rows,
+            "worst_recall": min(r["recall"] for r in rows),
+            "worst_ari": min(r["ari_rp_vs_exact"] for r in rows),
+            "best_sweep_speedup": max(r["sweep_speedup"] for r in rows),
+        }
+        args.json.write_text(json.dumps(payload, indent=2, default=float))
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -30,10 +30,19 @@ class LAFClusterConfig:
     # (kernels.hamming_filter on device); index_bits sizes the signature,
     # index_seed fixes the projection (db signatures MUST be packed with
     # the same seed/bits), index_margin sets the Hamming band width.
+    # index_verify picks the backend's dual-threshold semantics
+    # ("band" = sure-accept below t_lo + exact-verify the band; "full" =
+    # t_lo disabled, every candidate verified), and index_device routes
+    # the frontier round through the fused hamming_filter Pallas tile
+    # (True | False | "auto"; the fused tile requires a single-device
+    # mesh — multi-device lowerings keep the shardable jnp dataflow of
+    # the same predicate).
     backend: str = "exact"
     index_bits: int = 512
     index_seed: int = 0
     index_margin: float = 3.0
+    index_verify: str = "band"
+    index_device: object = "auto"
 
 
 def make_config():

@@ -104,19 +104,23 @@ def dbscan_parallel(
     *,
     block_size: int = 2048,
     backend="exact",
+    device="auto",
 ) -> DBSCANResult:
     """Batch-parallel DBSCAN (blocked core detection + star unions).
 
     ``backend`` selects the range-query engine (``repro.index``): the
     default ``"exact"`` reproduces brute-force DBSCAN; an ANN backend
     (``"random_projection"`` or a fit instance) makes every range query
-    cheaper at a bounded recall cost.
+    cheaper at a bounded recall cost.  ``device`` picks the backend's
+    evaluator (``True`` = fused Pallas tile, ``False`` = host numpy,
+    ``"auto"`` = tile iff a TPU/GPU is present); constructed backend
+    instances keep their own setting.
     """
     from ..index import as_fitted
 
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    bk = as_fitted(backend, data, block_size=block_size)
+    bk = as_fitted(backend, data, block_size=block_size, device=device)
     counts = bk.query_counts(np.arange(n), eps)
     core = counts >= tau
     core_idx = np.nonzero(core)[0]

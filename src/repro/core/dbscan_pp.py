@@ -101,13 +101,15 @@ def dbscan_pp(
     block_size: int = 2048,
     seed: int = 0,
     backend="exact",
+    device="auto",
 ) -> DBSCANResult:
-    """DBSCAN++ with sample fraction p."""
+    """DBSCAN++ with sample fraction p (``device`` as in
+    ``dbscan_parallel``: fused-tile vs host evaluator of the backend)."""
     from ..index import as_fitted
 
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    bk = as_fitted(backend, data, block_size=block_size)
+    bk = as_fitted(backend, data, block_size=block_size, device=device)
     m = max(1, int(round(p * n)))
     rng = np.random.default_rng(seed)
     if init == "kcenter":
@@ -143,19 +145,20 @@ def laf_dbscan_pp(
     seed: int = 0,
     sample_idx: Optional[np.ndarray] = None,
     backend="exact",
+    device="auto",
 ) -> DBSCANResult:
     """LAF-DBSCAN++: skip sampled range queries for predicted-stop samples.
 
     ``predicted_counts_sample`` aligns with the sample (either the given
     ``sample_idx`` or the one this function draws with ``seed`` — drawn
     identically to :func:`dbscan_pp` so the two share samples in
-    benchmarks).
+    benchmarks).  ``device`` as in ``dbscan_parallel``.
     """
     from ..index import as_fitted
 
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    bk = as_fitted(backend, data, block_size=block_size)
+    bk = as_fitted(backend, data, block_size=block_size, device=device)
     m = max(1, int(round(p * n)))
     rng = np.random.default_rng(seed)
     if sample_idx is None:

@@ -27,6 +27,7 @@ import numpy as np
 
 from .dbscan import NOISE, UNDEFINED, DBSCANResult
 from .postprocess import PartialNeighborMap, post_processing, update_partial_neighbors
+from .range_query import pack_bitmap, unpack_bitmap
 from .union_find import compact_labels, compact_labels_from_parent, union_star
 
 __all__ = ["laf_dbscan_sequential", "laf_dbscan"]
@@ -113,6 +114,7 @@ def laf_dbscan(
     block_size: int = 2048,
     seed: int = 0,
     backend="exact",
+    device="auto",
 ) -> DBSCANResult:
     """Batch-parallel LAF-DBSCAN engine.
 
@@ -123,12 +125,14 @@ def laf_dbscan(
       backend: range-query backend (``repro.index``) — LAF's skip rule
         composes with an ANN backend: the estimator skips whole queries,
         the index then prunes the candidates inside each executed one.
+      device: backend evaluator choice (fused Pallas tile vs host; see
+        ``dbscan_parallel``); ignored by constructed instances.
     """
     from ..index import as_fitted
 
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    bk = as_fitted(backend, data, block_size=block_size)
+    bk = as_fitted(backend, data, block_size=block_size, device=device)
     predicted_core = np.asarray(predicted_counts) >= alpha * tau  # LAF skip rule
     exec_idx = np.nonzero(predicted_core)[0]
     n_exec = len(exec_idx)
@@ -145,7 +149,10 @@ def laf_dbscan(
         # Alg.2 superset: every predicted-stop neighbor of an executed
         # query gains one partial neighbor.
         partial_counts += hit.sum(axis=0)
-        packed_blocks.append((rows, np.packbits(hit, axis=1)))
+        # pack in the shared LSB-first uint32 word order (pack_bitmap ==
+        # index signatures == device kernel bitmaps), so a backend that
+        # returns packed adjacency can feed pass 2 without a re-pack
+        packed_blocks.append((rows, pack_bitmap(hit)))
     partial_counts[predicted_core] = 0  # 𝓔 keys are predicted-stop points only
 
     core = np.zeros(n, dtype=bool)
@@ -155,7 +162,7 @@ def laf_dbscan(
     parent = np.arange(n, dtype=np.int64)
     owner = np.full(n, -1, dtype=np.int64)
     for rows, packed in packed_blocks:
-        hit = np.unpackbits(packed, axis=1, count=n).astype(bool)
+        hit = unpack_bitmap(packed, n)
         row_is_core = core[rows]
         hit_core = hit & core[None, :]
         for bi in np.nonzero(row_is_core)[0]:

@@ -35,7 +35,9 @@ class LAFPipeline:
     ``backend`` selects the range-query engine for every clustering
     method (``repro.index``): ``"exact"`` (default), ``"random_projection"``,
     or a constructed ``RangeBackend`` instance; per-call ``backend=``
-    kwargs override it.
+    kwargs override it.  ``device`` picks the backend evaluator (fused
+    Pallas tile vs host numpy; ``"auto"`` = tile iff TPU/GPU present)
+    and is likewise overridable per call.
     """
 
     def __init__(
@@ -47,6 +49,7 @@ class LAFPipeline:
         lr: float = 1e-3,
         seed: int = 0,
         backend="exact",
+        device="auto",
     ):
         self.eps_grid = eps_grid
         self.epochs = epochs
@@ -54,6 +57,7 @@ class LAFPipeline:
         self.lr = lr
         self.seed = seed
         self.backend = backend
+        self.device = device
         self.estimator: Optional[TrainedEstimator] = None
 
     # -- estimator ---------------------------------------------------------
@@ -83,6 +87,7 @@ class LAFPipeline:
         self, vectors: np.ndarray, eps: float, tau: int, alpha: float, **kw
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
+        kw.setdefault("device", self.device)
         t0 = time.time()
         pred = self.predict_counts(vectors, eps)
         t1 = time.time()
@@ -93,6 +98,7 @@ class LAFPipeline:
 
     def cluster_dbscan(self, vectors: np.ndarray, eps: float, tau: int, **kw) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
+        kw.setdefault("device", self.device)
         t0 = time.time()
         res = dbscan_parallel(vectors, eps, tau, **kw)
         return ClusterOutcome(res, time.time() - t0, 0.0, "DBSCAN", {"eps": eps, "tau": tau})
@@ -102,6 +108,7 @@ class LAFPipeline:
         *, delta: float = 0.2, alpha: float = 1.0, p: Optional[float] = None, **kw
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
+        kw.setdefault("device", self.device)
         t0 = time.time()
         if p is None:
             pred = self.predict_counts(vectors, eps)
@@ -115,6 +122,7 @@ class LAFPipeline:
         *, delta: float = 0.2, alpha: float = 1.0, p: Optional[float] = None, **kw
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
+        kw.setdefault("device", self.device)
         t0 = time.time()
         pred_all = self.predict_counts(vectors, eps)
         if p is None:

@@ -155,21 +155,25 @@ def bitmap_row_to_indices(row: np.ndarray, nd: int) -> np.ndarray:
     return np.nonzero(unpack_bitmap(row[None, :], nd)[0])[0]
 
 
-def neighbor_lists(data: np.ndarray, eps: float, block_size: int = 4096, *, backend="exact"):
+def neighbor_lists(
+    data: np.ndarray, eps: float, block_size: int = 4096, *, backend="exact",
+    device="auto",
+):
     """Host-side neighbor lists for the whole dataset.
 
     Returns ``list[np.ndarray]`` — used by the faithful sequential
     Algorithm-1 transcription and by tests.  Self is included (d(P,P)=0).
     ``backend`` selects the range-query engine (``repro.index``); any
-    non-default backend is fit on ``data`` and queried block by block.
+    non-default backend is fit on ``data`` and queried block by block,
+    with ``device`` choosing its evaluator (fused Pallas tile vs host).
     """
     data = np.asarray(data)
     if backend != "exact":  # name or RangeBackend instance
         from ..index import as_fitted  # deferred: repro.index imports this module
 
-        return as_fitted(backend, np.asarray(data, np.float32)).neighbor_lists(
-            eps, block_size=block_size
-        )
+        return as_fitted(
+            backend, np.asarray(data, np.float32), device=device
+        ).neighbor_lists(eps, block_size=block_size)
     n = data.shape[0]
     out = []
     thresh = 1.0 - eps

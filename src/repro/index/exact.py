@@ -20,8 +20,13 @@ __all__ = ["ExactBackend"]
 class ExactBackend(RangeBackend):
     name = "exact"
 
-    def __init__(self, *, block_size: int = 2048):
+    def __init__(self, *, block_size: int = 2048, device="auto"):
+        # ``device`` is accepted for engine-kwarg uniformity with the
+        # ANN backend and is a no-op here: whole-database counts already
+        # run through the jit'd device-placed lax.scan engine, and the
+        # blocked BLAS matmul is the hit-matrix oracle by definition.
         self.block_size = block_size
+        self.device = device
         self._data: np.ndarray | None = None
 
     def fit(self, data: np.ndarray) -> "ExactBackend":

@@ -18,16 +18,38 @@ Pipeline per query block:
 every candidate (hits then have no false positives; misses are bounded
 by the pre-filter's margin).  ``verify="band"`` is the fast default and
 what the benchmarks run.
+
+Execution paths — **one contract, two evaluators**:
+
+* ``device=False`` — the host numpy path above (the oracle).
+* ``device=True`` — every query routes through the fused Pallas
+  ``hamming_filter`` kernel (``repro.kernels.hamming_filter``), which
+  implements the identical dual-threshold predicate per
+  (q_tile × db_tile) tile: sure-accepts never touch the MXU and
+  band-free tiles skip their verify matmul entirely.
+* ``device="auto"`` (default) — the kernel when a real accelerator
+  backs JAX, the host path otherwise, so CPU containers keep BLAS speed
+  while TPU/GPU sessions get the fused tile with zero configuration.
+
+Both paths evaluate :func:`repro.index.signatures.band_hits`, so hit
+sets are identical (up to fp summation order on exact-boundary dots).
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.hamming_filter.ops import (
+    DEFAULT_DB_TILE,
+    DEFAULT_Q_TILE,
+    default_interpret,
+    hamming_filter_bitmap,
+    hamming_filter_count,
+)
 from .base import RangeBackend, register_backend
 from .signatures import (
     hamming_band,
@@ -57,9 +79,15 @@ class RandomProjectionBackend(RangeBackend):
         block_size: int = 2048,
         chunk: int = 256,
         max_band_frac: float = 0.05,
+        device: Union[bool, str] = "auto",
+        interpret: Optional[bool] = None,
+        q_tile: int = DEFAULT_Q_TILE,
+        db_tile: int = DEFAULT_DB_TILE,
     ):
         if verify not in ("band", "full"):
             raise ValueError(f"verify must be 'band' or 'full', got {verify!r}")
+        if device not in (True, False, "auto"):
+            raise ValueError(f"device must be True, False, or 'auto', got {device!r}")
         self.n_bits = n_bits
         self.margin = margin
         self.seed = seed
@@ -67,10 +95,22 @@ class RandomProjectionBackend(RangeBackend):
         self.block_size = block_size
         self.chunk = chunk
         self.max_band_frac = max_band_frac
+        self.device = device
+        self.interpret = interpret
+        self.q_tile = q_tile
+        self.db_tile = db_tile
         self._data: Optional[np.ndarray] = None
         self._sigs: Optional[np.ndarray] = None
         self._sigs_dev = None
+        self._data_dev = None
         self.projection: Optional[np.ndarray] = None
+
+    @property
+    def use_device(self) -> bool:
+        """Whether queries run through the fused Pallas tile."""
+        if self.device == "auto":
+            return not default_interpret()
+        return bool(self.device)
 
     # -- index build -------------------------------------------------------
     def fit(self, data: np.ndarray) -> "RandomProjectionBackend":
@@ -92,6 +132,7 @@ class RandomProjectionBackend(RangeBackend):
         self.projection = make_projection(d, self.n_bits, self.seed)
         self._sigs = sign_signatures(data, self.projection)
         self._sigs_dev = jnp.asarray(self._sigs)
+        self._data_dev = None  # device copy is lazy: host paths never read it
         self._data = data
         return self
 
@@ -107,17 +148,21 @@ class RandomProjectionBackend(RangeBackend):
             t_lo = -1
         return t_lo, t_hi
 
-    # -- queries -----------------------------------------------------------
+    # -- host evaluation ---------------------------------------------------
+    def _band_split(self, ham: np.ndarray, eps: float):
+        t_lo, t_hi = self.band(eps)
+        accept = ham <= t_lo
+        band = (ham <= t_hi) & ~accept
+        return accept, band
+
     def _tile_hits(
         self, rows: np.ndarray, cols: Optional[np.ndarray], ham: np.ndarray, eps: float
     ) -> np.ndarray:
         """Band-split + exact verify for one (rows, cols) tile given its
         Hamming distances; ``cols=None`` means the whole database."""
         data = self._data
-        t_lo, t_hi = self.band(eps)
         thresh = 1.0 - eps
-        accept = ham <= t_lo
-        band = (ham <= t_hi) & ~accept
+        accept, band = self._band_split(ham, eps)
         pi, pj = np.nonzero(band)
         if len(pi) > self.max_band_frac * band.size:
             # band saturated (eps in the bulk of the pair-distance
@@ -135,17 +180,81 @@ class RandomProjectionBackend(RangeBackend):
             hit[pi, pj] = dots > thresh
         return hit
 
+    def _tile_counts(
+        self, rows: np.ndarray, ham: np.ndarray, eps: float
+    ) -> np.ndarray:
+        """Per-row hit counts for one tile without materializing the hit
+        matrix: sure-accepts are a row reduction of the Hamming mask and
+        band survivors are scatter-added from the verified pairs."""
+        data = self._data
+        thresh = 1.0 - eps
+        accept, band = self._band_split(ham, eps)
+        counts = accept.sum(axis=1, dtype=np.int64)
+        pi, pj = np.nonzero(band)
+        if len(pi) > self.max_band_frac * band.size:
+            dots = data[rows] @ data.T
+            counts += (band & (dots > thresh)).sum(axis=1, dtype=np.int64)
+        elif len(pi):
+            dots = np.einsum("ij,ij->i", data[rows[pi]], data[pj], optimize=True)
+            np.add.at(counts, pi, (dots > thresh).astype(np.int64))
+        return counts
+
+    # -- device evaluation (fused Pallas tile) -----------------------------
+    def _device_data(self):
+        if self._data_dev is None:
+            self._data_dev = jnp.asarray(self._data)
+        return self._data_dev
+
+    def _device_hits(
+        self, rows: np.ndarray, db, db_sig, nd: int, eps: float
+    ) -> np.ndarray:
+        """Boolean hits for one row chunk through ``hamming_filter_bitmap``
+        against a pre-gathered (db, db_sig) column side."""
+        from ..core.range_query import unpack_bitmap
+
+        t_lo, t_hi = self.band(eps)
+        ridx = jnp.asarray(rows)
+        _, bitmap = hamming_filter_bitmap(
+            self._device_data()[ridx], db, self._sigs_dev[ridx], db_sig,
+            eps, t_hi, t_lo=t_lo,
+            q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
+        )
+        return unpack_bitmap(np.asarray(bitmap), nd)
+
+    def _device_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        t_lo, t_hi = self.band(eps)
+        ridx = jnp.asarray(rows)
+        counts = hamming_filter_count(
+            self._device_data()[ridx], self._device_data(),
+            self._sigs_dev[ridx], self._sigs_dev,
+            eps, t_hi, t_lo=t_lo,
+            q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
+        )
+        return np.asarray(counts).astype(np.int64)
+
+    # -- queries -----------------------------------------------------------
+    def _padded_chunks(self, rows: np.ndarray):
+        """Fixed-size index chunks (padded with row 0) so both the jit'd
+        host sweep and the kernel compile once per (chunk, n) shape."""
+        c = self.chunk
+        for start in range(0, len(rows), c):
+            sub = rows[start : start + c]
+            padded = np.zeros(c, dtype=np.int64)
+            padded[: len(sub)] = sub
+            yield start, sub, padded
+
     def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
         assert self._data is not None, "call fit() first"
         rows = np.asarray(rows, dtype=np.int64)
         n = self._data.shape[0]
         hit = np.zeros((len(rows), n), dtype=bool)
-        c = self.chunk
-        for start in range(0, len(rows), c):
-            sub = rows[start : start + c]
-            # pad the chunk so the jit'd sweep compiles once per (c, n)
-            padded = np.zeros(c, dtype=np.int64)
-            padded[: len(sub)] = sub
+        dev = self.use_device
+        for start, sub, padded in self._padded_chunks(rows):
+            if dev:
+                hit[start : start + len(sub)] = self._device_hits(
+                    padded, self._device_data(), self._sigs_dev, n, eps
+                )[: len(sub)]
+                continue
             ham = np.asarray(
                 _hamming_sweep(self._sigs_dev[padded], self._sigs_dev)
             )[: len(sub)]
@@ -159,6 +268,15 @@ class RandomProjectionBackend(RangeBackend):
         rows = np.asarray(rows, dtype=np.int64)
         cols = np.asarray(cols, dtype=np.int64)
         hit = np.zeros((len(rows), len(cols)), dtype=bool)
+        if self.use_device:
+            # gather the column side once, not per row chunk
+            cidx = jnp.asarray(cols)
+            db, db_sig = self._device_data()[cidx], self._sigs_dev[cidx]
+            for start, sub, padded in self._padded_chunks(rows):
+                hit[start : start + len(sub)] = self._device_hits(
+                    padded, db, db_sig, len(cols), eps
+                )[: len(sub)]
+            return hit
         # tile both axes: the host popcount materializes a
         # (rows, cols, words) XOR tensor, so keep tiles bounded even
         # when cols is a large core set
@@ -172,3 +290,26 @@ class RandomProjectionBackend(RangeBackend):
                     rsub, csub, ham, eps
                 )
         return hit
+
+    def query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        """Counts fast-path: never materializes a (block, n) hit matrix.
+
+        On device the fused count kernel (no bitmap output) runs per
+        chunk; on host each chunk reduces its accepts and scatter-adds
+        its verified band pairs directly into the counts vector.
+        """
+        assert self._data is not None, "call fit() first"
+        rows = np.asarray(rows, dtype=np.int64)
+        counts = np.zeros(len(rows), dtype=np.int64)
+        dev = self.use_device
+        for start, sub, padded in self._padded_chunks(rows):
+            if dev:
+                counts[start : start + len(sub)] = self._device_counts(padded, eps)[
+                    : len(sub)
+                ]
+                continue
+            ham = np.asarray(
+                _hamming_sweep(self._sigs_dev[padded], self._sigs_dev)
+            )[: len(sub)]
+            counts[start : start + len(sub)] = self._tile_counts(sub, ham, eps)
+        return counts

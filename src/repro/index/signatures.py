@@ -26,9 +26,11 @@ import numpy as np
 __all__ = [
     "make_projection",
     "pack_bits",
+    "unpack_bits",
     "sign_signatures",
     "collision_fraction",
     "hamming_band",
+    "band_hits",
     "hamming_words",
     "hamming_numpy",
 ]
@@ -50,6 +52,27 @@ def pack_bits(bits: jax.Array) -> jax.Array:
     words = bits.reshape(n, nb // 32, 32).astype(jnp.uint32)
     shifts = jnp.arange(32, dtype=jnp.uint32)
     return jnp.sum(words << shifts[None, None, :], axis=2, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """(n, n_words) packed uint32 -> (n, n_bits) bool (traceable inverse
+    of :func:`pack_bits`; same LSB-first bit order)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(words.shape[0], -1)[:, :n_bits].astype(bool)
+
+
+def band_hits(dots, ham, eps, t_lo, t_hi):
+    """The unified band predicate shared by every execution path.
+
+    hit  <=>  ham <= t_lo  (sure-accept, no exact verify)
+           or (ham <= t_hi and dot > 1 - eps)  (band, exact-verified).
+
+    ``t_lo = -1`` is full-verify mode (no sure-accepts).  Works on numpy
+    and jnp operands alike — the host backend, the kernel oracle, and
+    the sharded lowering all evaluate this one definition.
+    """
+    return (ham <= t_lo) | ((ham <= t_hi) & (dots > 1.0 - eps))
 
 
 def hamming_words(a: jax.Array, b: jax.Array) -> jax.Array:

@@ -1,1 +1,5 @@
-from .ops import hamming_filter_bitmap, hamming_filter_count  # noqa: F401
+from .ops import (  # noqa: F401
+    default_interpret,
+    hamming_filter_bitmap,
+    hamming_filter_count,
+)

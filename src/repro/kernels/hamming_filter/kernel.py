@@ -1,13 +1,22 @@
-"""Fused Hamming-filter + exact-verify Pallas kernel.
+"""Fused Hamming-filter + exact-verify Pallas kernel (dual-threshold).
 
-The TPU tile of the ``random_projection`` range backend: for a
-(query-tile, db-tile) pair the kernel XOR+popcounts the packed sign
-signatures (VPU, ``n_bits/32`` uint32 words per pair), thresholds the
-Hamming distance, and **only if the tile contains any candidate** runs
-the exact-dot verification matmul (MXU) — a tile with no candidates
-skips its matmul entirely, which is where the pre-filter's pruning
-turns into saved FLOPs.  Outputs match ``range_count``'s contract
-(per-query int32 counts, optional packed uint32 adjacency) so the two
+The TPU tile of the ``random_projection`` range backend, implementing
+the backend's real ``verify="band"`` contract: for a (query-tile,
+db-tile) pair the kernel XOR+popcounts the packed sign signatures (VPU,
+``n_bits/32`` uint32 words per pair) and splits pairs on the
+``(t_lo, t_hi)`` Hamming band —
+
+  * ``ham <= t_lo``         sure-accept, **no MXU work at all**;
+  * ``t_lo < ham <= t_hi``  ambiguous band, exact dot verify (MXU);
+  * ``ham > t_hi``          pruned.
+
+Only if the tile contains a *band* candidate does the exact-dot
+verification matmul run — a tile whose pairs are all sure-accepts or
+all pruned skips its matmul entirely, which is where the pre-filter's
+pruning turns into saved FLOPs.  ``t_lo = -1`` recovers full-verify
+semantics (every candidate exact-checked).  Outputs match
+``range_count``'s contract (per-query int32 counts, optional packed
+uint32 adjacency in the shared ``pack_bits`` bit order) so the two
 kernels are drop-in alternates for the engines.
 
 Tiling: q tile 128×d, db tile 256×d keeps q/db/score tiles plus the two
@@ -32,7 +41,25 @@ DEFAULT_Q_TILE = 128
 DEFAULT_DB_TILE = 256
 
 
-def _filter_count_kernel(q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, ham_ref, counts_ref):
+def _tile_masks(qs_ref, dbs_ref, band_ref):
+    """(accept, band) masks for one tile from its packed signatures;
+    band_ref holds [t_lo, t_hi]."""
+    ham = _tile_hamming(qs_ref[...], dbs_ref[...])
+    accept = ham <= band_ref[0]
+    band = (ham <= band_ref[1]) & ~accept
+    return accept, band
+
+
+def _verify_dots(q_ref, db_ref, thresh_ref):
+    q = q_ref[...].astype(jnp.float32)
+    db = db_ref[...].astype(jnp.float32)
+    dots = jax.lax.dot_general(
+        q, db, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return dots > thresh_ref[0]
+
+
+def _filter_count_kernel(q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, band_ref, counts_ref):
     """Grid (nq_tiles, nd_tiles); counts accumulate over the db axis."""
     j = pl.program_id(1)
 
@@ -40,22 +67,18 @@ def _filter_count_kernel(q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, ham_ref, co
     def _init():
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
-    ham = _tile_hamming(qs_ref[...], dbs_ref[...])
-    cand = ham <= ham_ref[0]
+    accept, band = _tile_masks(qs_ref, dbs_ref, band_ref)
+    # sure-accepts count without touching the MXU
+    counts_ref[...] += jnp.sum(accept, axis=1, dtype=jnp.int32)
 
-    @pl.when(jnp.any(cand))
+    @pl.when(jnp.any(band))
     def _verify():
-        q = q_ref[...].astype(jnp.float32)
-        db = db_ref[...].astype(jnp.float32)
-        dots = jax.lax.dot_general(
-            q, db, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        hit = cand & (dots > thresh_ref[0])
+        hit = band & _verify_dots(q_ref, db_ref, thresh_ref)
         counts_ref[...] += jnp.sum(hit, axis=1, dtype=jnp.int32)
 
 
 def _filter_count_bitmap_kernel(
-    q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, ham_ref, counts_ref, bitmap_ref
+    q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, band_ref, counts_ref, bitmap_ref
 ):
     j = pl.program_id(1)
 
@@ -63,24 +86,21 @@ def _filter_count_bitmap_kernel(
     def _init():
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
-    ham = _tile_hamming(qs_ref[...], dbs_ref[...])
-    cand = ham <= ham_ref[0]
-    any_cand = jnp.any(cand)
+    accept, band = _tile_masks(qs_ref, dbs_ref, band_ref)
+    any_band = jnp.any(band)
 
-    @pl.when(any_cand)
+    @pl.when(any_band)
     def _verify():
-        q = q_ref[...].astype(jnp.float32)
-        db = db_ref[...].astype(jnp.float32)
-        dots = jax.lax.dot_general(
-            q, db, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        hit = cand & (dots > thresh_ref[0])
+        hit = accept | (band & _verify_dots(q_ref, db_ref, thresh_ref))
         counts_ref[...] += jnp.sum(hit, axis=1, dtype=jnp.int32)
         bitmap_ref[...] = _pack_bits(hit)
 
-    @pl.when(~any_cand)
+    @pl.when(~any_band)
     def _prune():
-        bitmap_ref[...] = jnp.zeros_like(bitmap_ref)
+        # band-free tile: sure-accepts (possibly none) are the whole
+        # answer — still no matmul
+        counts_ref[...] += jnp.sum(accept, axis=1, dtype=jnp.int32)
+        bitmap_ref[...] = _pack_bits(accept)
 
 
 @functools.partial(
@@ -92,7 +112,8 @@ def hamming_filter_pallas(
     q_sig: jax.Array,
     db_sig: jax.Array,
     eps: jax.Array | float,
-    ham_thresh: jax.Array | int,
+    t_lo: jax.Array | int,
+    t_hi: jax.Array | int,
     *,
     q_tile: int = DEFAULT_Q_TILE,
     db_tile: int = DEFAULT_DB_TILE,
@@ -102,7 +123,9 @@ def hamming_filter_pallas(
     """Raw kernel entry; inputs must already be tile-aligned (see ops.py).
 
     ``q_sig``/``db_sig`` are packed uint32 sign signatures (same bit
-    order as ``repro.index.signatures``), one row per q/db row.
+    order as ``repro.index.signatures``, one row per q/db row);
+    ``(t_lo, t_hi)`` is the Hamming band (``t_lo = -1`` = full verify).
+    Both thresholds are traced, so sweeping eps never recompiles.
     """
     nq, d = q.shape
     nd = db.shape[0]
@@ -111,7 +134,9 @@ def hamming_filter_pallas(
     assert nq % q_tile == 0 and nd % db_tile == 0 and db_tile % 32 == 0
     grid = (nq // q_tile, nd // db_tile)
     thresh = jnp.asarray([1.0 - eps], jnp.float32)
-    ham_t = jnp.asarray([ham_thresh], jnp.int32)
+    band_t = jnp.stack(
+        [jnp.asarray(t_lo, jnp.int32), jnp.asarray(t_hi, jnp.int32)]
+    )
 
     q_spec = pl.BlockSpec((q_tile, d), lambda i, j: (i, 0))
     db_spec = pl.BlockSpec((db_tile, d), lambda i, j: (j, 0))
@@ -128,7 +153,7 @@ def hamming_filter_pallas(
             out_specs=counts_spec,
             out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
             interpret=interpret,
-        )(q, db, q_sig, db_sig, thresh, ham_t)
+        )(q, db, q_sig, db_sig, thresh, band_t)
 
     bitmap_spec = pl.BlockSpec((q_tile, db_tile // 32), lambda i, j: (i, j))
     return pl.pallas_call(
@@ -141,4 +166,4 @@ def hamming_filter_pallas(
             jax.ShapeDtypeStruct((nq, nd // 32), jnp.uint32),
         ],
         interpret=interpret,
-    )(q, db, q_sig, db_sig, thresh, ham_t)
+    )(q, db, q_sig, db_sig, thresh, band_t)

@@ -1,6 +1,13 @@
 """Public jit'd wrappers for the Hamming-filter kernel: padding to tile
 alignment, padded-row corrections, interpret switch — mirroring
-``repro.kernels.range_count.ops``."""
+``repro.kernels.range_count.ops``.
+
+``interpret=None`` (the default) resolves per platform: the compiled
+kernel runs whenever a real accelerator backs the default JAX backend,
+and the Pallas interpreter is used otherwise (CPU containers, CI) — so
+callers get the fast path automatically without every call site having
+to remember the switch.  Tests pin ``interpret=True`` explicitly.
+"""
 
 from __future__ import annotations
 
@@ -9,9 +16,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...index.signatures import band_hits
 from .kernel import DEFAULT_DB_TILE, DEFAULT_Q_TILE, hamming_filter_pallas
 
-__all__ = ["hamming_filter_count", "hamming_filter_bitmap"]
+__all__ = ["hamming_filter_count", "hamming_filter_bitmap", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """True iff the compiled kernel cannot run here (no TPU/GPU)."""
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
 
 
 def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
@@ -19,17 +32,22 @@ def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
 
 
-def _pad_col_hits(q_sig: jax.Array, eps, ham_thresh, n_pad: int) -> jax.Array:
+def _pad_col_hits(q_sig: jax.Array, eps, t_lo, t_hi, n_pad: int) -> jax.Array:
     """Per-query hits contributed by zero-padded db rows.
 
-    A padded db row has signature 0 and vector 0, so it passes the
-    Hamming filter iff popcount(q_sig_i) <= t and the dot test iff
-    0 > 1 - eps (i.e. eps > 1) — exactly computable, like range_count's
-    padded-hit correction but signature-dependent.
-    """
+    A padded db row has signature 0 and vector 0, so its Hamming
+    distance to query i is popcount(q_sig_i) and its dot is 0 — feeding
+    those into the shared ``band_hits`` predicate gives the exact count
+    to subtract: a sure-accept when popcount <= t_lo, a band hit only
+    when eps > 1 (like range_count's padded-hit correction, but
+    signature-dependent on both thresholds)."""
     pop = jnp.sum(jax.lax.population_count(q_sig).astype(jnp.int32), axis=1)
-    passes = (pop <= jnp.asarray(ham_thresh, jnp.int32)) & (
-        jnp.asarray(eps, jnp.float32) > 1.0
+    passes = band_hits(
+        jnp.float32(0.0),
+        pop,
+        jnp.asarray(eps, jnp.float32),
+        jnp.asarray(t_lo, jnp.int32),
+        jnp.asarray(t_hi, jnp.int32),
     )
     return jnp.where(passes, n_pad, 0).astype(jnp.int32)
 
@@ -41,24 +59,27 @@ def hamming_filter_count(
     q_sig: jax.Array,
     db_sig: jax.Array,
     eps,
-    ham_thresh,
+    t_hi,
     *,
+    t_lo=-1,
     q_tile: int = DEFAULT_Q_TILE,
     db_tile: int = DEFAULT_DB_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Filtered-and-verified neighbor counts; pads to tiles and subtracts
-    the padded-row hits exactly."""
+    the padded-row hits exactly.  ``t_lo=-1`` is full-verify mode."""
+    if interpret is None:
+        interpret = default_interpret()
     nq, nd = q.shape[0], db.shape[0]
     qp, dbp = _pad_rows(q, q_tile), _pad_rows(db, db_tile)
     qsp, dbsp = _pad_rows(q_sig, q_tile), _pad_rows(db_sig, db_tile)
     counts = hamming_filter_pallas(
-        qp, dbp, qsp, dbsp, eps, ham_thresh,
+        qp, dbp, qsp, dbsp, eps, t_lo, t_hi,
         q_tile=q_tile, db_tile=db_tile, interpret=interpret,
     )[:nq]
     n_pad = dbp.shape[0] - nd
     if n_pad:
-        counts = counts - _pad_col_hits(q_sig, eps, ham_thresh, n_pad)
+        counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, n_pad)
     return counts
 
 
@@ -69,26 +90,29 @@ def hamming_filter_bitmap(
     q_sig: jax.Array,
     db_sig: jax.Array,
     eps,
-    ham_thresh,
+    t_hi,
     *,
+    t_lo=-1,
     q_tile: int = DEFAULT_Q_TILE,
     db_tile: int = DEFAULT_DB_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """(counts, packed adjacency) with padded bits cleared; the bitmap
-    covers ceil(nd/32) words."""
+    covers ceil(nd/32) words.  ``t_lo=-1`` is full-verify mode."""
+    if interpret is None:
+        interpret = default_interpret()
     nq, nd = q.shape[0], db.shape[0]
     qp, dbp = _pad_rows(q, q_tile), _pad_rows(db, db_tile)
     qsp, dbsp = _pad_rows(q_sig, q_tile), _pad_rows(db_sig, db_tile)
     counts, bitmap = hamming_filter_pallas(
-        qp, dbp, qsp, dbsp, eps, ham_thresh,
+        qp, dbp, qsp, dbsp, eps, t_lo, t_hi,
         q_tile=q_tile, db_tile=db_tile, interpret=interpret, with_bitmap=True,
     )
     counts = counts[:nq]
     bitmap = bitmap[:nq]
     n_pad = dbp.shape[0] - nd
     if n_pad:
-        counts = counts - _pad_col_hits(q_sig, eps, ham_thresh, n_pad)
+        counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, n_pad)
         nw = bitmap.shape[1]
         bit_idx = jnp.arange(nw * 32) < nd
         word_mask = jnp.sum(

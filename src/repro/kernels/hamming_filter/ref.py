@@ -1,7 +1,12 @@
-"""Pure-jnp oracle for the fused Hamming-filter + exact-verify kernel."""
+"""Pure-jnp oracle for the fused dual-threshold Hamming-filter +
+exact-verify kernel.  The predicate is the shared
+:func:`repro.index.signatures.band_hits` definition — the same one the
+host ``random_projection`` backend and the sharded lowering evaluate."""
 
 import jax
 import jax.numpy as jnp
+
+from ...index.signatures import band_hits
 
 
 def _hamming(q_sig, db_sig):
@@ -9,17 +14,20 @@ def _hamming(q_sig, db_sig):
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
 
 
-def hamming_filter_count_ref(q, db, q_sig, db_sig, eps, ham_thresh):
-    """Counts of {j : hamming(sig_i, sig_j) <= t  and  1 - <q_i, db_j> < eps}."""
+def _hits(q, db, q_sig, db_sig, eps, t_lo, t_hi):
     dots = q.astype(jnp.float32) @ db.astype(jnp.float32).T
-    hit = (_hamming(q_sig, db_sig) <= ham_thresh) & (dots > 1.0 - eps)
+    return band_hits(dots, _hamming(q_sig, db_sig), eps, t_lo, t_hi)
+
+
+def hamming_filter_count_ref(q, db, q_sig, db_sig, eps, t_lo, t_hi):
+    """Counts of {j : ham <= t_lo  or  (ham <= t_hi and d_cos < eps)}."""
+    hit = _hits(q, db, q_sig, db_sig, eps, t_lo, t_hi)
     return jnp.sum(hit, axis=1, dtype=jnp.int32)
 
 
-def hamming_filter_bitmap_ref(q, db, q_sig, db_sig, eps, ham_thresh):
+def hamming_filter_bitmap_ref(q, db, q_sig, db_sig, eps, t_lo, t_hi):
     """(counts, packed uint32 adjacency rows) under the same predicate."""
-    dots = q.astype(jnp.float32) @ db.astype(jnp.float32).T
-    hit = (_hamming(q_sig, db_sig) <= ham_thresh) & (dots > 1.0 - eps)
+    hit = _hits(q, db, q_sig, db_sig, eps, t_lo, t_hi)
     counts = jnp.sum(hit, axis=1, dtype=jnp.int32)
     nq, nd = hit.shape
     pad = (-nd) % 32

@@ -747,12 +747,17 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
     # backend="random_projection": the frontier round carries the ANN
     # index's Hamming pre-filter — packed db signatures ride along
     # row-sharded with the database, frontier signatures are projected
-    # in-step, and hits are gated on the signature band (repro.index
-    # semantics; the per-tile matmul *skip* is the hamming_filter Pallas
-    # kernel's job, this lowering keeps the filtered dataflow shardable).
+    # in-step, and hits follow the backend's dual-threshold band
+    # contract (sure-accept below t_lo, exact-verify only the band).
+    # index_device routes the whole round through the fused
+    # hamming_filter Pallas tile when the mesh is a single device;
+    # multi-device meshes evaluate the same band_hits predicate as
+    # shardable jnp dataflow (XLA partitions the matmul + popcount).
     use_rp = base.backend == "random_projection"
+    use_kernel = False
     if use_rp:
         from ..index.signatures import hamming_band, make_projection
+        from ..kernels.hamming_filter.ops import default_interpret
 
         n_bits = base.index_bits
         sig_words = n_bits // 32
@@ -760,7 +765,13 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         # must be packed with this (index_seed, index_bits) projection —
         # both are recorded in the cell meta below
         proj = jnp.asarray(make_projection(d, n_bits, seed=base.index_seed))
-        ham_hi = hamming_band(base.eps, n_bits, margin=base.index_margin)[1]
+        t_lo, t_hi = hamming_band(base.eps, n_bits, margin=base.index_margin)
+        if base.index_verify == "full":
+            t_lo = -1
+        if base.index_device == "auto":
+            use_kernel = n_dev == 1 and not default_interpret()
+        else:
+            use_kernel = n_dev == 1 and bool(base.index_device)
 
     def cluster_step(rmi_params, db, queries, db_sig=None):
         """One frontier round: RMI predicts frontier cardinalities; the
@@ -772,7 +783,28 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         pred = rmi_predict_counts(rmi_params, feats.astype(F32), rmi_cfg)
         gate = (pred >= base.alpha * base.tau).astype(F32)  # skip decisions
 
+        if use_rp:
+            # caller-level padding (n rounded to a device multiple) adds
+            # zero db rows whose *signatures* are not zero (sign(0) >= 0
+            # packs to all-ones); sure-accepts bypass the dot test, so
+            # padded columns must be masked out explicitly
+            db_valid = jnp.any(db != 0, axis=1)
+
         def chunk_counts(qc):
+            if use_rp:
+                from ..index.signatures import band_hits, hamming_words, pack_bits, unpack_bits
+
+                q_sig = pack_bits((qc.astype(F32) @ proj) >= 0.0)
+            if use_kernel:
+                from ..kernels.hamming_filter.ops import hamming_filter_bitmap
+
+                # the fused tile: popcount band split + MXU verify of
+                # band tiles only (band-free tiles skip their matmul)
+                _, bm = hamming_filter_bitmap(
+                    qc.astype(F32), db, q_sig, db_sig, base.eps, t_hi, t_lo=t_lo
+                )
+                hit = unpack_bits(bm, db.shape[0]) & db_valid[None, :]
+                return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
             # native-dtype MXU dot with fp32 accumulation: upcasting the
             # database to f32 first doubles HBM traffic and halves the
             # bf16 MXU rate (§Perf iteration on web_1b)
@@ -780,12 +812,11 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
                 qc, db, (((1,), (1,)), ((), ())),
                 preferred_element_type=F32,
             )                                                  # (C, n)
-            hit = dots > thresh
             if use_rp:
-                from ..index.signatures import hamming_words, pack_bits
-
-                q_sig = pack_bits((qc.astype(F32) @ proj) >= 0.0)
-                hit = hit & (hamming_words(q_sig, db_sig) <= ham_hi)
+                ham = hamming_words(q_sig, db_sig)
+                hit = band_hits(dots, ham, base.eps, t_lo, t_hi) & db_valid[None, :]
+            else:
+                hit = dots > thresh
             return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
 
         # bound the live (chunk, n_local) fp32 score tile to ~0.5 GiB
@@ -828,6 +859,9 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
             index_bits=base.index_bits,
             index_seed=base.index_seed,
             index_margin=base.index_margin,
+            index_verify=base.index_verify,
+            index_band=(t_lo, t_hi),
+            fused_kernel=use_kernel,
         )
     return LoweredCell(
         f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh, meta,

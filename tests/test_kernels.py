@@ -221,7 +221,7 @@ def test_flash_attention_bf16():
 
 
 # ---------------------------------------------------------------------------
-# hamming_filter
+# hamming_filter (dual-threshold band kernel; interpret=True pinned)
 # ---------------------------------------------------------------------------
 from repro.index.signatures import hamming_band, make_projection, sign_signatures
 from repro.kernels.hamming_filter.ops import hamming_filter_bitmap, hamming_filter_count
@@ -243,41 +243,103 @@ def _sig_case(nq, nd, d, n_bits, seed):
 
 @pytest.mark.parametrize("nq,nd,d,n_bits", [(64, 128, 32, 64), (100, 300, 64, 96), (33, 257, 48, 32)])
 @pytest.mark.parametrize("eps", [0.3, 0.7, 1.2])
-def test_hamming_filter_count_sweep(nq, nd, d, n_bits, eps):
+@pytest.mark.parametrize("mode", ["full", "band"])
+def test_hamming_filter_count_sweep(nq, nd, d, n_bits, eps, mode):
     q, db, q_sig, db_sig = _sig_case(nq, nd, d, n_bits, seed=nq + nd)
-    _, t_hi = hamming_band(eps, n_bits, margin=3.0)
+    t_lo, t_hi = hamming_band(eps, n_bits, margin=3.0)
+    if mode == "full":
+        t_lo = -1
     got = np.asarray(
-        hamming_filter_count(q, db, q_sig, db_sig, eps, t_hi, q_tile=32, db_tile=64)
+        hamming_filter_count(
+            q, db, q_sig, db_sig, eps, t_hi, t_lo=t_lo,
+            q_tile=32, db_tile=64, interpret=True,
+        )
     )
-    ref = np.asarray(hamming_filter_count_ref(q, db, q_sig, db_sig, eps, t_hi))
+    ref = np.asarray(hamming_filter_count_ref(q, db, q_sig, db_sig, eps, t_lo, t_hi))
     np.testing.assert_array_equal(got, ref)
 
 
 @pytest.mark.parametrize("nq,nd", [(40, 96), (64, 257)])
-def test_hamming_filter_bitmap_sweep(nq, nd):
+@pytest.mark.parametrize("mode", ["full", "band"])
+def test_hamming_filter_bitmap_sweep(nq, nd, mode):
     q, db, q_sig, db_sig = _sig_case(nq, nd, 48, 64, seed=7)
-    _, t_hi = hamming_band(0.6, 64, margin=3.0)
-    gc, gb = hamming_filter_bitmap(q, db, q_sig, db_sig, 0.6, t_hi, q_tile=32, db_tile=64)
-    rc, rb = hamming_filter_bitmap_ref(q, db, q_sig, db_sig, 0.6, t_hi)
+    t_lo, t_hi = hamming_band(0.6, 64, margin=3.0)
+    if mode == "full":
+        t_lo = -1
+    gc, gb = hamming_filter_bitmap(
+        q, db, q_sig, db_sig, 0.6, t_hi, t_lo=t_lo,
+        q_tile=32, db_tile=64, interpret=True,
+    )
+    rc, rb = hamming_filter_bitmap_ref(q, db, q_sig, db_sig, 0.6, t_lo, t_hi)
     np.testing.assert_array_equal(np.asarray(gc), np.asarray(rc))
     np.testing.assert_array_equal(np.asarray(gb), np.asarray(rb))
 
 
 def test_hamming_filter_open_threshold_equals_range_count():
-    """ham_thresh = n_bits disables the filter: the fused kernel must
-    reproduce the plain range_count oracle exactly."""
+    """t_hi = n_bits (full verify) disables the filter: the fused kernel
+    must reproduce the plain range_count oracle exactly."""
     q, db, q_sig, db_sig = _sig_case(48, 200, 32, 64, seed=11)
     for eps in (0.4, 0.8):
         got = np.asarray(
-            hamming_filter_count(q, db, q_sig, db_sig, eps, 64, q_tile=32, db_tile=64)
+            hamming_filter_count(
+                q, db, q_sig, db_sig, eps, 64, q_tile=32, db_tile=64, interpret=True
+            )
         )
         ref = np.asarray(range_count_ref(q, db, eps))
         np.testing.assert_array_equal(got, ref)
 
 
 def test_hamming_filter_closed_threshold_prunes_everything():
+    """t_hi = -1 prunes every pair: the zero-candidate branch must skip
+    the verify matmul in every tile and still write zero counts."""
     q, db, q_sig, db_sig = _sig_case(32, 64, 32, 64, seed=13)
     got = np.asarray(
-        hamming_filter_count(q, db, q_sig, db_sig, 0.5, -1, q_tile=32, db_tile=64)
+        hamming_filter_count(
+            q, db, q_sig, db_sig, 0.5, -1, q_tile=32, db_tile=64, interpret=True
+        )
     )
     np.testing.assert_array_equal(got, np.zeros(32, np.int32))
+    gc, gb = hamming_filter_bitmap(
+        q, db, q_sig, db_sig, 0.5, -1, q_tile=32, db_tile=64, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(gc), np.zeros(32, np.int32))
+    np.testing.assert_array_equal(np.asarray(gb), np.zeros((32, 2), np.uint32))
+
+
+def test_hamming_filter_all_sure_accept_skips_matmul():
+    """t_lo = n_bits sure-accepts every pair: no tile has band
+    candidates, so no verify matmul runs, yet every pair must be a hit
+    (counts = nd) regardless of eps."""
+    nq, nd, n_bits = 32, 100, 64  # nd not a multiple of db_tile
+    q, db, q_sig, db_sig = _sig_case(nq, nd, 32, n_bits, seed=17)
+    for eps in (0.3, 1.2):
+        got = np.asarray(
+            hamming_filter_count(
+                q, db, q_sig, db_sig, eps, n_bits, t_lo=n_bits,
+                q_tile=32, db_tile=64, interpret=True,
+            )
+        )
+        np.testing.assert_array_equal(got, np.full(nq, nd, np.int32))
+        gc, gb = hamming_filter_bitmap(
+            q, db, q_sig, db_sig, eps, n_bits, t_lo=n_bits,
+            q_tile=32, db_tile=64, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(gc), np.full(nq, nd, np.int32))
+        rc, rb = hamming_filter_bitmap_ref(q, db, q_sig, db_sig, eps, n_bits, n_bits)
+        np.testing.assert_array_equal(np.asarray(gb), np.asarray(rb))
+
+
+def test_hamming_filter_padded_row_sure_accept_correction():
+    """Zero-padded db rows can pass the *Hamming* side of the band even
+    at eps < 1 (their distance to query i is popcount(q_sig_i)); the
+    dual-threshold pad correction must subtract those sure-accepts."""
+    nq, nd, n_bits = 32, 70, 64  # pads 70 -> 128 db rows
+    q, db, q_sig, db_sig = _sig_case(nq, nd, 32, n_bits, seed=19)
+    # t_lo = n_bits: every padded row would sure-accept uncorrected
+    got = np.asarray(
+        hamming_filter_count(
+            q, db, q_sig, db_sig, 0.5, n_bits, t_lo=n_bits,
+            q_tile=32, db_tile=64, interpret=True,
+        )
+    )
+    np.testing.assert_array_equal(got, np.full(nq, nd, np.int32))

@@ -112,6 +112,30 @@ def test_sequential_parallel_agree(data):
         assert par.labels[j] in set(par.labels[nbr])
 
 
+@given(st.integers(min_value=0, max_value=10_000))
+@FAST
+def test_band_mode_clustering_ari_matches_exact(seed):
+    """verify="band" (sure-accept + band verify) clustering is
+    indistinguishable from exact clustering on blob data across an eps
+    grid: at margin=4 the prefilter's per-pair miss/false-accept
+    probability (~Phi(-4)) is far below anything that could flip a core
+    decision or a cluster link on concentrated vMF blobs."""
+    from repro.index import RandomProjectionBackend
+
+    data, _ = make_angular_clusters(
+        220, 16, 4, kappa=16 / 0.05, noise_frac=0.0, seed=seed
+    )
+    for eps in (0.3, 0.45, 0.6):
+        exact = dbscan_parallel(data, eps, 4)
+        band = dbscan_parallel(
+            data, eps, 4,
+            backend=RandomProjectionBackend(
+                n_bits=384, margin=4.0, verify="band", seed=seed % 13, device=False
+            ),
+        )
+        assert adjusted_rand_index(exact.labels, band.labels) == pytest.approx(1.0)
+
+
 @given(st.lists(st.integers(min_value=0, max_value=5), min_size=2, max_size=60),
        st.integers(min_value=0, max_value=5))
 @settings(max_examples=30, deadline=None)
