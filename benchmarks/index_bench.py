@@ -13,34 +13,37 @@ isolates the index, not the estimator.
   PYTHONPATH=src python -m benchmarks.index_bench --n 5000 --d 256
   PYTHONPATH=src python -m benchmarks.index_bench \
       --n 2000 --d 64 --device device --json BENCH_PR2.json        # CI trajectory
+  PYTHONPATH=src python -m benchmarks.index_bench \
+      --n 2000 --d 64 --mesh 4 --json BENCH_PR3.json  # sharded index plane
 
 ``--device device`` routes the ANN backend through the fused Pallas
 ``hamming_filter`` tile (interpret mode off-accelerator), so the CI
 artifact tracks the kernel path's recall/speedup/ARI, not just the
-host oracle's.
+host oracle's.  ``--mesh N`` forces N host devices (the flag must be
+set before jax initializes, which is why the repro imports below are
+deferred into the functions) and runs the same sweep through the
+shard_mapped index plane — the row payload then carries both the
+sharded and single-device fused sweep times plus per-device shard
+numbers.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from pathlib import Path
 
 import numpy as np
-
-from repro.core.laf_dbscan import laf_dbscan
-from repro.core.metrics import adjusted_rand_index
-from repro.data.synthetic import make_angular_clusters
-from repro.index import ExactBackend, RandomProjectionBackend
-
-from .common import save_json
 
 N_CLUSTERS = 80
 NOISE_FRAC = 0.35
 
 
 def _dataset(n: int, d: int, seed: int):
+    from repro.data.synthetic import make_angular_clusters
+
     # kappa = (d-1)/0.30 puts same-cluster pairs near d_cos ~ 0.3
     # (see benchmarks.common DATASETS rationale)
     return make_angular_clusters(
@@ -58,21 +61,40 @@ def bench_point(
     margin: float = 3.0,
     verify: str = "band",
     device: str = "host",
+    mesh_devices: int = 0,
     seed: int = 0,
     block: int = 2048,
 ) -> dict:
+    from repro.core.laf_dbscan import laf_dbscan
+    from repro.core.metrics import adjusted_rand_index
+    from repro.index import ExactBackend, RandomProjectionBackend
+
     data, _ = _dataset(n, d, seed)
     exact = ExactBackend().fit(data)
+    mesh = None
+    if mesh_devices > 1:
+        import jax
+
+        mesh = jax.make_mesh((mesh_devices,), ("data",))
     t0 = time.perf_counter()
     rp = RandomProjectionBackend(
         n_bits=n_bits, margin=margin, verify=verify, seed=seed,
-        device=(device == "device"),
+        # the plane is a device evaluator: --mesh implies the fused tile
+        device=True if mesh is not None else (device == "device"), mesh=mesh,
     ).fit(data)
     build_s = time.perf_counter() - t0
+    # same index configuration WITHOUT the mesh: the single-device fused
+    # tile, so the sharded-vs-single sweep delta isolates the plane
+    rp_single = None
+    if mesh is not None:
+        rp_single = RandomProjectionBackend(
+            n_bits=n_bits, margin=margin, verify=verify, seed=seed, device=True,
+        ).fit(data)
 
     counts = np.zeros(n, dtype=np.int64)
+    shard_hits = None
     tp = pos = pred = 0
-    t_exact = t_rp = 0.0
+    t_exact = t_rp = t_rp_single = 0.0
     for start in range(0, n, block):
         rows = np.arange(start, min(start + block, n))
         t0 = time.perf_counter()
@@ -81,6 +103,18 @@ def bench_point(
         t0 = time.perf_counter()
         h_rp = rp.query_hits(rows, eps)
         t_rp += time.perf_counter() - t0
+        if rp_single is not None:
+            t0 = time.perf_counter()
+            rp_single.query_hits(rows, eps)
+            t_rp_single += time.perf_counter() - t0
+            # per-device hit totals: slice the hit matrix at the plane's
+            # shard boundaries (rows n_local*k .. n_local*(k+1) live on
+            # device k)
+            n_local = rp._plan.n_local
+            if shard_hits is None:
+                shard_hits = np.zeros(mesh_devices, dtype=np.int64)
+            for k in range(mesh_devices):
+                shard_hits[k] += int(h_rp[:, k * n_local : (k + 1) * n_local].sum())
         counts[rows] = h_ex.sum(axis=1)
         tp += int((h_ex & h_rp).sum())
         pos += int(h_ex.sum())
@@ -94,9 +128,12 @@ def bench_point(
     res_rp = laf_dbscan(data, eps, tau, 1.0, counts, seed=seed, backend=rp)
     t_laf_rp = time.perf_counter() - t0
 
-    return {
+    row = {
         "n": n, "d": d, "eps": eps, "tau": tau,
-        "n_bits": n_bits, "margin": margin, "verify": verify, "device": device,
+        "n_bits": n_bits, "margin": margin, "verify": verify,
+        # the evaluator that actually ran (--mesh forces the fused tile)
+        "device": "device" if mesh is not None else device,
+        "mesh": mesh_devices,
         "build_s": build_s,
         "sweep_exact_s": t_exact, "sweep_rp_s": t_rp,
         "sweep_speedup": t_exact / t_rp if t_rp else float("inf"),
@@ -107,6 +144,22 @@ def bench_point(
         "ari_rp_vs_exact": adjusted_rand_index(res_ex.labels, res_rp.labels),
         "noise_exact": res_ex.noise_ratio, "noise_rp": res_rp.noise_ratio,
     }
+    if mesh is not None:
+        plan = rp._plan
+        row["sweep_rp_single_s"] = t_rp_single
+        # >1 means the plane beat the single-device tile (expect <1 on a
+        # CPU runner: N interpret-mode kernels on 2 cores is a parity
+        # harness, not a speed win — the trajectory tracks the ratio)
+        row["sharded_speedup"] = t_rp_single / t_rp if t_rp else float("inf")
+        row["per_device"] = [
+            {
+                "device": k,
+                "rows": int(min(max(plan.n - k * plan.n_local, 0), plan.n_local)),
+                "hits": int(shard_hits[k]),
+            }
+            for k in range(mesh_devices)
+        ]
+    return row
 
 
 def run(
@@ -120,8 +173,11 @@ def run(
     margin: float = 3.0,
     verify: str = "band",
     device: str = "host",
+    mesh_devices: int = 0,
     seed: int = 0,
 ):
+    from .common import save_json
+
     if profile == "quick":  # keep `-m benchmarks.run --profile quick` cheap
         ns, ds = tuple(min(x, 5000) for x in ns), tuple(min(x, 256) for x in ds)
     rows = []
@@ -131,13 +187,17 @@ def run(
                 row = bench_point(
                     n, d, eps, tau,
                     n_bits=n_bits, margin=margin, verify=verify, device=device,
-                    seed=seed,
+                    mesh_devices=mesh_devices, seed=seed,
                 )
                 rows.append(row)
+                extra = (
+                    f" sharded speedup x{row['sharded_speedup']:.2f}"
+                    if "sharded_speedup" in row else ""
+                )
                 print(
                     f"  n={n} d={d} eps={eps}: recall={row['recall']:.4f} "
                     f"sweep x{row['sweep_speedup']:.2f} laf x{row['laf_speedup']:.2f} "
-                    f"ARI={row['ari_rp_vs_exact']:.4f}",
+                    f"ARI={row['ari_rp_vs_exact']:.4f}{extra}",
                     flush=True,
                 )
     save_json("index_bench", rows)
@@ -176,6 +236,13 @@ def main(argv=None):
         help="ANN backend evaluator: host numpy band logic or the fused "
         "Pallas hamming_filter tile (interpret mode off-accelerator)",
     )
+    ap.add_argument(
+        "--mesh", type=int, default=0, metavar="N",
+        help="benchmark the sharded index plane on N forced host devices "
+        "(sets --xla_force_host_platform_device_count before jax "
+        "initializes; implies the device evaluator); rows then include "
+        "the single-device fused sweep time and per-device shard numbers",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--json", type=Path, default=None,
@@ -187,13 +254,27 @@ def main(argv=None):
         help="sweep n in {5000, 20000}, d in {256, 768}, eps in {0.5, 0.55, 0.6}",
     )
     args = ap.parse_args(argv)
+    if args.mesh > 1:
+        # must land before the first jax import anywhere in the process
+        # (the repro imports are deferred into the functions for this);
+        # any inherited force-count is replaced, other flags are kept
+        import sys
+
+        assert "jax" not in sys.modules, "--mesh requires jax to be uninitialized"
+        inherited = [
+            f for f in os.environ.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")
+        ]
+        os.environ["XLA_FLAGS"] = " ".join(
+            [f"--xla_force_host_platform_device_count={args.mesh}"] + inherited
+        )
     ns, ds, epss = tuple(args.n), tuple(args.d), tuple(args.eps)
     if args.grid:
         ns, ds, epss = (5000, 20000), (256, 768), (0.5, 0.55, 0.6)
     rows = run(
         ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,
         margin=args.margin, verify=args.verify, device=args.device,
-        seed=args.seed,
+        mesh_devices=args.mesh, seed=args.seed,
     )
     print(summarize(rows))
     if args.json is not None:
@@ -203,6 +284,12 @@ def main(argv=None):
             "worst_ari": min(r["ari_rp_vs_exact"] for r in rows),
             "best_sweep_speedup": max(r["sweep_speedup"] for r in rows),
         }
+        if args.mesh > 1:
+            payload["mesh_summary"] = {
+                "mesh": args.mesh,
+                "sweep_sharded_s": sum(r["sweep_rp_s"] for r in rows),
+                "sweep_single_device_s": sum(r["sweep_rp_single_s"] for r in rows),
+            }
         args.json.write_text(json.dumps(payload, indent=2, default=float))
         print(f"wrote {args.json}")
 

@@ -32,17 +32,23 @@ class LAFClusterConfig:
     # the same seed/bits), index_margin sets the Hamming band width.
     # index_verify picks the backend's dual-threshold semantics
     # ("band" = sure-accept below t_lo + exact-verify the band; "full" =
-    # t_lo disabled, every candidate verified), and index_device routes
-    # the frontier round through the fused hamming_filter Pallas tile
-    # (True | False | "auto"; the fused tile requires a single-device
-    # mesh — multi-device lowerings keep the shardable jnp dataflow of
-    # the same predicate).
+    # t_lo disabled, every candidate verified).  index_device routes the
+    # frontier round through the fused hamming_filter Pallas tile
+    # (True | False | "auto") on ANY mesh size: multi-device meshes run
+    # the tile shard-locally via the index plane
+    # (repro.distributed.index_plane), with the packed signature table
+    # co-sharded with the database rows; "auto" = the tile on every
+    # multi-device mesh and on accelerator-backed single devices (a
+    # lone CPU device keeps the shardable jnp dataflow of the same
+    # predicate).  index_axes names the mesh axes the db rows +
+    # signature table are co-sharded over ("auto" = every mesh axis).
     backend: str = "exact"
     index_bits: int = 512
     index_seed: int = 0
     index_margin: float = 3.0
     index_verify: str = "band"
     index_device: object = "auto"
+    index_axes: object = "auto"
 
 
 def make_config():

@@ -1,4 +1,6 @@
 from .sharding import (  # noqa: F401
+    axis_size,
+    data_axes,
     param_sharding_rule,
     tree_param_shardings,
     replicated,

@@ -1,0 +1,287 @@
+"""Device-sharded index plane: the fused ``hamming_filter`` tile on any
+mesh size.
+
+The database rows and their packed sign-signature table are sharded
+*identically* over the mesh's data axes (sDBSCAN's observation: the
+random-projection summary is small enough to live with the points it
+summarizes), so every range query runs shard-locally — KNN-DBSCAN's
+rule that distributed high-dimensional DBSCAN lives or dies on keeping
+neighborhood queries next to their data shard.  Inside each shard the
+existing single-device machinery is reused unchanged: the ops wrapper
+pads the local block to the kernel tile multiple and applies the
+dual-threshold padded-row correction per shard.  Only per-shard results
+cross the network —
+
+* counts: one ``psum`` of (nq,) int32 partial counts;
+* bitmaps: an all-gather of the (nq, n_local/32) packed uint32 words
+  (the shard axis concatenates on the word dim, so the gathered array
+  *is* the global bitmap);
+* marginals: ``psum`` of per-query counts + the per-row partial counts
+  left sharded in place —
+
+never the (nq, n) boolean hit matrix, the database, or the signature
+table.  Plane-level padding (to a shard multiple of rows) uses zero
+rows with zero signatures, exactly the shape the kernel wrappers'
+``_pad_col_hits`` correction was built for, so non-shard-multiple
+databases stay exact — including the eps > 1 corner where zero rows
+pass the dot test.
+
+A 1-device mesh degenerates to the plain wrapper call (the ``psum`` and
+gather are trivial), which is what lets ``index_device="auto"`` stop
+special-casing single-device lowerings.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..index.signatures import shard_signatures, unpack_bits
+from ..kernels.hamming_filter.ops import (
+    DEFAULT_DB_TILE,
+    DEFAULT_Q_TILE,
+    _pad_col_hits,
+    _tail_word_mask,
+    default_interpret,
+    hamming_filter_bitmap,
+    hamming_filter_count,
+)
+from .sharding import axis_size, data_axes
+
+__all__ = [
+    "ShardPlan",
+    "shard_plan",
+    "shard_database",
+    "sharded_hamming_count",
+    "sharded_hamming_bitmap",
+    "sharded_band_marginals",
+]
+
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Row layout of one database over one mesh.
+
+    ``n_padded`` is ``n`` rounded up to ``32 * n_shards`` so every shard
+    holds the same number of rows *and* its packed bitmap rows are
+    word-aligned (a shard's words concatenate into the global bitmap
+    without bit shifting).
+    """
+
+    axes: Tuple[str, ...]
+    n_shards: int
+    n: int
+    n_padded: int
+
+    @property
+    def n_local(self) -> int:
+        return self.n_padded // self.n_shards
+
+    @property
+    def n_pad(self) -> int:
+        return self.n_padded - self.n
+
+
+def shard_plan(mesh: Mesh, n: int, axes=None) -> ShardPlan:
+    """Row plan for an ``n``-row database sharded over ``axes`` (default:
+    the mesh's data axes)."""
+    axes = data_axes(mesh) if axes is None else tuple(axes)
+    n_shards = axis_size(mesh, axes)
+    mult = 32 * n_shards
+    return ShardPlan(axes, n_shards, n, -(-n // mult) * mult)
+
+
+def _pad_rows_to(x, n_padded: int):
+    pad = n_padded - x.shape[0]
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+def shard_database(mesh: Mesh, data, sigs, axes=None):
+    """Co-shard a database and its packed signature table.
+
+    Returns ``(db, db_sig, plan)`` where both arrays are padded to
+    ``plan.n_padded`` zero rows / zero signature words and placed with
+    ``P(axes, None)`` — one ``device_put`` each at fit time, so queries
+    never move the table again.
+    """
+    plan = shard_plan(mesh, data.shape[0], axes)
+    spec = P(plan.axes, None)
+    db = jax.device_put(
+        _pad_rows_to(jnp.asarray(data, jnp.float32), plan.n_padded),
+        NamedSharding(mesh, spec),
+    )
+    db_sig = shard_signatures(mesh, sigs, spec, n_padded=plan.n_padded)
+    return db, db_sig, plan
+
+
+@functools.lru_cache(maxsize=None)
+def _build_plane_fn(mesh: Mesh, axes, kind: str, q_tile: int, db_tile: int, interpret: bool):
+    """shard_map'd evaluator, cached per (mesh, axes, variant, tiles).
+
+    eps and the band thresholds ride in as traced operands (``eps``
+    f32[1], ``band`` i32[2]) so eps sweeps never rebuild or recompile.
+    """
+    rep = P(None, None)
+    row_sharded = P(axes, None)
+
+    if kind == "count":
+
+        def body(qc, db, qs, dbs, eps, band):
+            c = hamming_filter_count(
+                qc, db, qs, dbs, eps[0], band[1], t_lo=band[0],
+                q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            )
+            return jax.lax.psum(c, axes)
+
+        out_specs = P()
+    elif kind == "bitmap":
+
+        def body(qc, db, qs, dbs, eps, band):
+            c, bm = hamming_filter_bitmap(
+                qc, db, qs, dbs, eps[0], band[1], t_lo=band[0],
+                q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            )
+            return jax.lax.psum(c, axes), bm
+
+        out_specs = (P(), P(None, axes))
+    else:  # marginals
+
+        def body(qc, db, qs, dbs, eps, band):
+            _, bm = hamming_filter_bitmap(
+                qc, db, qs, dbs, eps[0], band[1], t_lo=band[0],
+                q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            )
+            # all-zero db rows are padding by construction (unit-norm
+            # data never has a zero row): whatever their signatures say
+            # — zero words from plane padding, all-ones from the
+            # lowering's sign(0) packing — they must never count
+            hit = unpack_bits(bm, db.shape[0]) & jnp.any(db != 0, axis=1)[None, :]
+            return (
+                jax.lax.psum(hit.sum(axis=1, dtype=I32), axes),
+                hit.sum(axis=0, dtype=I32),
+            )
+
+        out_specs = (P(), P(axes))
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(rep, row_sharded, rep, row_sharded, P(None), P(None)),
+        out_specs=out_specs,
+        check_rep=False,
+    )
+
+
+def _prep(q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret):
+    plan = shard_plan(mesh, db.shape[0], axes)
+    if interpret is None:
+        interpret = default_interpret()
+    db = _pad_rows_to(jnp.asarray(db), plan.n_padded)
+    db_sig = _pad_rows_to(jnp.asarray(db_sig, jnp.uint32), plan.n_padded)
+    # eps rides as a traced (1,) operand (the wrappers derive the dot
+    # threshold themselves) so eps sweeps never rebuild the plane
+    eps_op = jnp.asarray([eps], jnp.float32)
+    band = jnp.stack([jnp.asarray(t_lo, I32), jnp.asarray(t_hi, I32)])
+    return plan, db, db_sig, eps_op, band, interpret
+
+
+def sharded_hamming_count(
+    q,
+    db,
+    q_sig,
+    db_sig,
+    eps,
+    t_hi,
+    *,
+    mesh: Mesh,
+    t_lo=-1,
+    axes=None,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: Optional[bool] = None,
+):
+    """(nq,) int32 global band-contract counts; queries replicated, db +
+    signatures row-sharded, one psum on the wire."""
+    plan, db, db_sig, eps_op, band, interpret = _prep(
+        q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret
+    )
+    f = _build_plane_fn(mesh, plan.axes, "count", q_tile, db_tile, interpret)
+    counts = f(jnp.asarray(q), db, jnp.asarray(q_sig, jnp.uint32), db_sig, eps_op, band)
+    if plan.n_pad:
+        counts = counts - _pad_col_hits(jnp.asarray(q_sig, jnp.uint32), eps, t_lo, t_hi, plan.n_pad)
+    return counts
+
+
+def sharded_hamming_bitmap(
+    q,
+    db,
+    q_sig,
+    db_sig,
+    eps,
+    t_hi,
+    *,
+    mesh: Mesh,
+    t_lo=-1,
+    axes=None,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: Optional[bool] = None,
+):
+    """(counts, packed adjacency) with plane-pad bits cleared.
+
+    Each shard emits its word-aligned (nq, n_local/32) block; the
+    gather concatenates blocks on the word axis into the global
+    (nq, ceil(n/32)) bitmap — identical to the single-device wrapper's
+    output on the same inputs.
+    """
+    nd = db.shape[0]
+    plan, db, db_sig, eps_op, band, interpret = _prep(
+        q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret
+    )
+    f = _build_plane_fn(mesh, plan.axes, "bitmap", q_tile, db_tile, interpret)
+    q_sig = jnp.asarray(q_sig, jnp.uint32)
+    counts, bitmap = f(jnp.asarray(q), db, q_sig, db_sig, eps_op, band)
+    if plan.n_pad:
+        counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, plan.n_pad)
+        bitmap = bitmap & _tail_word_mask(bitmap.shape[1], nd)[None, :]
+    return counts, bitmap[:, : -(-nd // 32)]
+
+
+def sharded_band_marginals(
+    q,
+    db,
+    q_sig,
+    db_sig,
+    eps,
+    t_hi,
+    *,
+    mesh: Mesh,
+    t_lo=-1,
+    axes=None,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: Optional[bool] = None,
+):
+    """Both marginals of the hit matrix without gathering it: per-query
+    counts (replicated, psum'd) and per-db-row partial counts (left
+    sharded ``P(axes)`` — the layout the clustering lowering keeps its
+    partial-neighbor accumulator in).  All-zero db rows never count, so
+    callers that pad with zero rows need no correction here.
+    """
+    nd = db.shape[0]
+    plan, db, db_sig, eps_op, band, interpret = _prep(
+        q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret
+    )
+    f = _build_plane_fn(mesh, plan.axes, "marginals", q_tile, db_tile, interpret)
+    counts, partial = f(
+        jnp.asarray(q), db, jnp.asarray(q_sig, jnp.uint32), db_sig, eps_op, band
+    )
+    return counts, partial[:nd] if plan.n_pad else partial

@@ -27,6 +27,7 @@ __all__ = [
     "tree_param_shardings",
     "tree_replicated",
     "axis_size",
+    "data_axes",
 ]
 
 
@@ -46,15 +47,23 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
-def _dp_axes(mesh: Mesh):
+def data_axes(mesh: Mesh) -> tuple:
+    """The mesh axes that carry data parallelism, as a tuple usable both
+    as a PartitionSpec entry and with :func:`axis_size`.  The single
+    definition of "which axes shard the batch/database" — the step
+    builders, the index plane, and the param rule all derive from here
+    instead of re-spelling the pod special case."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+_dp_axes = data_axes  # back-compat spelling (pre-index-plane callers)
 
 
 def param_sharding_rule(mesh: Mesh, shape: Sequence[int]) -> NamedSharding:
     """The default FSDP×TP rule described in the module docstring."""
     ndim = len(shape)
     spec: list = [None] * ndim
-    dp = _dp_axes(mesh)
+    dp = data_axes(mesh)
     if ndim >= 1 and shape[-1] % axis_size(mesh, "model") == 0 and shape[-1] >= axis_size(mesh, "model"):
         # 1-D tensors stay replicated (tiny norms/biases)
         if ndim >= 2:

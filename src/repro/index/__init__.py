@@ -3,16 +3,36 @@
 ``as_fitted("exact" | "random_projection", data)`` is the entry point
 the ``repro.core`` engines use; see ``base`` for the protocol and the
 sibling modules for the implementations.  The TPU tile of the
-random-projection pipeline lives in ``repro.kernels.hamming_filter``.
+random-projection pipeline lives in ``repro.kernels.hamming_filter``,
+and its multi-device form in ``repro.distributed.index_plane``.
+
+``random_projection`` is imported lazily (PEP 562): its module pulls in
+the kernel package, which itself leans on :mod:`repro.index.signatures`
+— an eager import here would make ``import repro.kernels.…`` order-
+dependent (the cycle the sharded index plane would otherwise trip).
 """
 
 from .base import BACKENDS, RangeBackend, as_fitted, make_backend, register_backend  # noqa: F401
 from .exact import ExactBackend  # noqa: F401
-from .random_projection import RandomProjectionBackend  # noqa: F401
 from .signatures import (  # noqa: F401
     collision_fraction,
     hamming_band,
     hamming_numpy,
     make_projection,
+    shard_signatures,
     sign_signatures,
 )
+
+_LAZY = {"RandomProjectionBackend", "suggest_margin"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import random_projection
+
+        return getattr(random_projection, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _LAZY)

@@ -95,6 +95,22 @@ def make_backend(spec: Union[str, RangeBackend], **kwargs) -> RangeBackend:
     if isinstance(spec, RangeBackend):
         return spec
     if spec not in BACKENDS:
+        # registration happens at module import; the heavyweight backends
+        # are imported lazily (see the package __init__), so pull in any
+        # sibling module named after the backend before giving up
+        import importlib
+
+        mod_name = f"{__package__}.{spec}"
+        try:
+            importlib.import_module(mod_name)
+        except ModuleNotFoundError as e:
+            # only "no such sibling module" means unknown backend; a
+            # missing dependency *inside* an existing module must surface
+            if e.name != mod_name:
+                raise
+        except (TypeError, ValueError):
+            pass  # not a module-path-shaped spec: fall through to KeyError
+    if spec not in BACKENDS:
         raise KeyError(f"unknown range backend {spec!r}; known: {sorted(BACKENDS)}")
     return BACKENDS[spec](**kwargs)
 

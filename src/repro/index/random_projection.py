@@ -19,7 +19,7 @@ every candidate (hits then have no false positives; misses are bounded
 by the pre-filter's margin).  ``verify="band"`` is the fast default and
 what the benchmarks run.
 
-Execution paths — **one contract, two evaluators**:
+Execution paths — **one contract, three evaluators**:
 
 * ``device=False`` — the host numpy path above (the oracle).
 * ``device=True`` — every query routes through the fused Pallas
@@ -30,8 +30,15 @@ Execution paths — **one contract, two evaluators**:
 * ``device="auto"`` (default) — the kernel when a real accelerator
   backs JAX, the host path otherwise, so CPU containers keep BLAS speed
   while TPU/GPU sessions get the fused tile with zero configuration.
+* ``mesh=`` — device evaluation additionally routes whole-database
+  queries through the sharded index plane
+  (``repro.distributed.index_plane``): ``fit`` co-shards the database
+  rows and the packed signature table over the mesh's data axes once,
+  and every sweep runs the fused tile shard-locally, moving only
+  per-shard counts/bitmap words.  Column-subset queries gather their
+  (small) column side to one device and reuse the plain kernel.
 
-Both paths evaluate :func:`repro.index.signatures.band_hits`, so hit
+All paths evaluate :func:`repro.index.signatures.band_hits`, so hit
 sets are identical (up to fp summation order on exact-boundary dots).
 """
 
@@ -46,6 +53,7 @@ import numpy as np
 from ..kernels.hamming_filter.ops import (
     DEFAULT_DB_TILE,
     DEFAULT_Q_TILE,
+    _pad_col_hits,
     default_interpret,
     hamming_filter_bitmap,
     hamming_filter_count,
@@ -59,7 +67,7 @@ from .signatures import (
     sign_signatures,
 )
 
-__all__ = ["RandomProjectionBackend"]
+__all__ = ["RandomProjectionBackend", "suggest_margin"]
 
 # jit'd full-database sweep (fused XOR+popcount+reduce)
 _hamming_sweep = jax.jit(hamming_words)
@@ -83,6 +91,8 @@ class RandomProjectionBackend(RangeBackend):
         interpret: Optional[bool] = None,
         q_tile: int = DEFAULT_Q_TILE,
         db_tile: int = DEFAULT_DB_TILE,
+        mesh=None,
+        mesh_axes=None,
     ):
         if verify not in ("band", "full"):
             raise ValueError(f"verify must be 'band' or 'full', got {verify!r}")
@@ -99,10 +109,15 @@ class RandomProjectionBackend(RangeBackend):
         self.interpret = interpret
         self.q_tile = q_tile
         self.db_tile = db_tile
+        # mesh= shards device evaluation through the index plane; the
+        # host path ignores it (the oracle stays single-process)
+        self.mesh = mesh
+        self.mesh_axes = None if mesh_axes is None else tuple(mesh_axes)
         self._data: Optional[np.ndarray] = None
         self._sigs: Optional[np.ndarray] = None
         self._sigs_dev = None
         self._data_dev = None
+        self._plan = None
         self.projection: Optional[np.ndarray] = None
 
     @property
@@ -134,6 +149,14 @@ class RandomProjectionBackend(RangeBackend):
         self._sigs_dev = jnp.asarray(self._sigs)
         self._data_dev = None  # device copy is lazy: host paths never read it
         self._data = data
+        if self.mesh is not None:
+            # co-shard the database and its signature table once — the
+            # index plane moves only per-shard counts/bitmaps afterwards
+            from ..distributed.index_plane import shard_database
+
+            self._db_plane, self._sig_plane, self._plan = shard_database(
+                self.mesh, data, self._sigs, self.mesh_axes
+            )
         return self
 
     @property
@@ -205,31 +228,71 @@ class RandomProjectionBackend(RangeBackend):
             self._data_dev = jnp.asarray(self._data)
         return self._data_dev
 
-    def _device_hits(
-        self, rows: np.ndarray, db, db_sig, nd: int, eps: float
-    ) -> np.ndarray:
-        """Boolean hits for one row chunk through ``hamming_filter_bitmap``
-        against a pre-gathered (db, db_sig) column side."""
+    def _q_block(self, rows: np.ndarray):
+        """(q, q_sig) jnp arrays for one row chunk.  Under ``mesh=`` the
+        gather runs on the host copies — queries are tiny and the device
+        database is row-sharded, so a device gather would be a scattered
+        collective for no benefit."""
+        if self.mesh is not None:
+            return jnp.asarray(self._data[rows]), jnp.asarray(self._sigs[rows])
+        ridx = jnp.asarray(rows)
+        return self._device_data()[ridx], self._sigs_dev[ridx]
+
+    def _device_hits(self, q, q_sig, db, db_sig, nd: int, eps: float) -> np.ndarray:
+        """Boolean hits for one query block through
+        ``hamming_filter_bitmap`` against a pre-gathered (db, db_sig)
+        column side."""
         from ..core.range_query import unpack_bitmap
 
         t_lo, t_hi = self.band(eps)
-        ridx = jnp.asarray(rows)
         _, bitmap = hamming_filter_bitmap(
-            self._device_data()[ridx], db, self._sigs_dev[ridx], db_sig,
-            eps, t_hi, t_lo=t_lo,
+            q, db, q_sig, db_sig, eps, t_hi, t_lo=t_lo,
             q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
         )
         return unpack_bitmap(np.asarray(bitmap), nd)
 
     def _device_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
         t_lo, t_hi = self.band(eps)
-        ridx = jnp.asarray(rows)
+        q, q_sig = self._q_block(rows)
         counts = hamming_filter_count(
-            self._device_data()[ridx], self._device_data(),
-            self._sigs_dev[ridx], self._sigs_dev,
+            q, self._device_data(), q_sig, self._sigs_dev,
             eps, t_hi, t_lo=t_lo,
             q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
         )
+        return np.asarray(counts).astype(np.int64)
+
+    # -- sharded evaluation (the index plane) ------------------------------
+    def _plane_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        """One row chunk through the shard_map'd tile: only the gathered
+        per-shard bitmap words come back (the plane pad rows occupy the
+        trailing bits, so unpacking the true n drops them)."""
+        from ..core.range_query import unpack_bitmap
+        from ..distributed.index_plane import sharded_hamming_bitmap
+
+        t_lo, t_hi = self.band(eps)
+        q, q_sig = self._q_block(rows)
+        _, bitmap = sharded_hamming_bitmap(
+            q, self._db_plane, q_sig, self._sig_plane, eps, t_hi, t_lo=t_lo,
+            mesh=self.mesh, axes=self._plan.axes,
+            q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
+        )
+        return unpack_bitmap(np.asarray(bitmap), self._data.shape[0])
+
+    def _plane_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        from ..distributed.index_plane import sharded_hamming_count
+
+        t_lo, t_hi = self.band(eps)
+        q, q_sig = self._q_block(rows)
+        counts = sharded_hamming_count(
+            q, self._db_plane, q_sig, self._sig_plane, eps, t_hi, t_lo=t_lo,
+            mesh=self.mesh, axes=self._plan.axes,
+            q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
+        )
+        if self._plan.n_pad:
+            # the plane saw a pre-padded database (pad rows are zero
+            # vectors with zero signatures), so subtract their hits with
+            # the same correction the kernel wrappers apply to tile pads
+            counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, self._plan.n_pad)
         return np.asarray(counts).astype(np.int64)
 
     # -- queries -----------------------------------------------------------
@@ -249,10 +312,17 @@ class RandomProjectionBackend(RangeBackend):
         n = self._data.shape[0]
         hit = np.zeros((len(rows), n), dtype=bool)
         dev = self.use_device
+        plane = dev and self.mesh is not None
         for start, sub, padded in self._padded_chunks(rows):
+            if plane:
+                hit[start : start + len(sub)] = self._plane_hits(padded, eps)[
+                    : len(sub)
+                ]
+                continue
             if dev:
+                q, q_sig = self._q_block(padded)
                 hit[start : start + len(sub)] = self._device_hits(
-                    padded, self._device_data(), self._sigs_dev, n, eps
+                    q, q_sig, self._device_data(), self._sigs_dev, n, eps
                 )[: len(sub)]
                 continue
             ham = np.asarray(
@@ -269,12 +339,19 @@ class RandomProjectionBackend(RangeBackend):
         cols = np.asarray(cols, dtype=np.int64)
         hit = np.zeros((len(rows), len(cols)), dtype=bool)
         if self.use_device:
-            # gather the column side once, not per row chunk
-            cidx = jnp.asarray(cols)
-            db, db_sig = self._device_data()[cidx], self._sigs_dev[cidx]
+            # gather the column side once, not per row chunk; subset
+            # queries stay single-device even under mesh= (the gathered
+            # column side is small, the row-sharded plane only pays off
+            # on whole-database sweeps)
+            if self.mesh is not None:
+                db, db_sig = jnp.asarray(self._data[cols]), jnp.asarray(self._sigs[cols])
+            else:
+                cidx = jnp.asarray(cols)
+                db, db_sig = self._device_data()[cidx], self._sigs_dev[cidx]
             for start, sub, padded in self._padded_chunks(rows):
+                q, q_sig = self._q_block(padded)
                 hit[start : start + len(sub)] = self._device_hits(
-                    padded, db, db_sig, len(cols), eps
+                    q, q_sig, db, db_sig, len(cols), eps
                 )[: len(sub)]
             return hit
         # tile both axes: the host popcount materializes a
@@ -302,7 +379,13 @@ class RandomProjectionBackend(RangeBackend):
         rows = np.asarray(rows, dtype=np.int64)
         counts = np.zeros(len(rows), dtype=np.int64)
         dev = self.use_device
+        plane = dev and self.mesh is not None
         for start, sub, padded in self._padded_chunks(rows):
+            if plane:
+                counts[start : start + len(sub)] = self._plane_counts(padded, eps)[
+                    : len(sub)
+                ]
+                continue
             if dev:
                 counts[start : start + len(sub)] = self._device_counts(padded, eps)[
                     : len(sub)
@@ -313,3 +396,83 @@ class RandomProjectionBackend(RangeBackend):
             )[: len(sub)]
             counts[start : start + len(sub)] = self._tile_counts(sub, ham, eps)
         return counts
+
+
+# ---------------------------------------------------------------------------
+# margin auto-tune: price candidate Hamming bands with the kernel's
+# per-tile occupancy stats (or the host Hamming sweep) and pick the
+# widest band — best recall, ~Phi(margin) — the verify budget affords
+# ---------------------------------------------------------------------------
+
+
+def suggest_margin(
+    backend: RandomProjectionBackend,
+    eps: float,
+    rows: Optional[np.ndarray] = None,
+    *,
+    margins=(4.0, 3.5, 3.0, 2.5, 2.0, 1.5, 1.0),
+    max_band_frac: Optional[float] = None,
+    report: bool = False,
+):
+    """Suggest an ``index_margin`` for a fitted backend at one eps.
+
+    Recall of the dual-threshold contract is set by the band's upper
+    edge (misses are pairs beyond ``t_hi``, probability ~1 - Phi(margin))
+    while its *cost* is the exact-verify work on band pairs — so the
+    auto-tune question is "what is the widest band whose band-pair
+    fraction stays under ``max_band_frac``" (default: the backend's own
+    saturation threshold).  Occupancy is measured on a deterministic row
+    sample: through ``hamming_filter_count(..., return_stats=True)``
+    (the kernel's per-tile [accept, band, reject] counters) when the
+    backend evaluates on device, through one host Hamming sweep
+    otherwise.  Both thresholds are traced in the kernel, so sweeping
+    candidate margins re-runs nothing but the popcount pass.
+
+    Returns the chosen margin, or ``(margin, rows)`` with the per-margin
+    ``{margin, t_lo, t_hi, band_frac, accept_frac}`` table when
+    ``report=True``.  If no candidate fits the budget the narrowest
+    (cheapest) one is returned.
+    """
+    assert backend._data is not None, "call fit() first"
+    if max_band_frac is None:
+        max_band_frac = backend.max_band_frac
+    n = backend._data.shape[0]
+    if rows is None:
+        rows = np.unique(np.linspace(0, n - 1, min(n, 4 * backend.q_tile)).astype(np.int64))
+    rows = np.asarray(rows, dtype=np.int64)
+
+    dev = backend.use_device
+    if dev:
+        q = jnp.asarray(backend._data[rows])
+        q_sig = jnp.asarray(backend._sigs[rows])
+        db, db_sig = backend._device_data(), backend._sigs_dev
+    else:
+        ham = hamming_numpy(backend._sigs[rows], backend._sigs)
+
+    table = []
+    for m in sorted(margins, reverse=True):
+        t_lo, t_hi = hamming_band(eps, backend.n_bits, m)
+        if backend.verify == "full":
+            t_lo = -1
+        if dev:
+            _, stats = hamming_filter_count(
+                q, db, q_sig, db_sig, eps, t_hi, t_lo=t_lo,
+                q_tile=backend.q_tile, db_tile=backend.db_tile,
+                interpret=backend.interpret, return_stats=True,
+            )
+            stats = np.asarray(stats, dtype=np.int64).sum(axis=(0, 1))
+            total = stats.sum()
+            acc_frac, band_frac = stats[0] / total, stats[1] / total
+        else:
+            accept = ham <= t_lo
+            band = (ham <= t_hi) & ~accept
+            acc_frac = accept.mean()
+            band_frac = band.mean()
+        table.append(
+            dict(margin=m, t_lo=t_lo, t_hi=t_hi,
+                 band_frac=float(band_frac), accept_frac=float(acc_frac))
+        )
+
+    fits = [r for r in table if r["band_frac"] <= max_band_frac]
+    chosen = fits[0]["margin"] if fits else table[-1]["margin"]
+    return (chosen, table) if report else chosen

@@ -28,6 +28,7 @@ __all__ = [
     "pack_bits",
     "unpack_bits",
     "sign_signatures",
+    "shard_signatures",
     "collision_fraction",
     "hamming_band",
     "band_hits",
@@ -94,6 +95,30 @@ def _sign_pack(data: jax.Array, proj: jax.Array) -> jax.Array:
 def sign_signatures(data: np.ndarray, proj: np.ndarray) -> np.ndarray:
     """Packed (n, n_bits // 32) uint32 sign signatures of ``data @ proj``."""
     return np.asarray(_sign_pack(jnp.asarray(data, jnp.float32), jnp.asarray(proj)))
+
+
+def shard_signatures(mesh, sigs, spec=None, *, n_padded: int | None = None):
+    """Place a packed signature table co-sharded with the database rows
+    it summarizes.
+
+    ``spec`` defaults to ``P(data_axes(mesh), None)`` — rows over the
+    mesh's data axes, words replicated — the one layout the index plane
+    (``repro.distributed.index_plane``) accepts; pass an explicit
+    ``PartitionSpec`` to shard over other axes.  ``n_padded`` zero-pads
+    the row axis first (plane plans require a shard multiple; zero
+    signature words are exactly what the kernel wrappers' padded-row
+    correction models).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..distributed.sharding import data_axes
+
+    sigs = jnp.asarray(sigs, jnp.uint32)
+    if n_padded is not None and n_padded > sigs.shape[0]:
+        sigs = jnp.pad(sigs, ((0, n_padded - sigs.shape[0]), (0, 0)))
+    if spec is None:
+        spec = P(data_axes(mesh), None)
+    return jax.device_put(sigs, NamedSharding(mesh, spec))
 
 
 def collision_fraction(eps: float) -> float:

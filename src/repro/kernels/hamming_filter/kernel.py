@@ -103,8 +103,63 @@ def _filter_count_bitmap_kernel(
         bitmap_ref[...] = _pack_bits(accept)
 
 
+def _tile_stats(accept, band):
+    """[sure-accepts, band candidates, rejects] for one tile — the
+    occupancy triple the margin auto-tuner consumes (a tile's verify
+    matmul runs iff its band count is nonzero)."""
+    n_acc = jnp.sum(accept, dtype=jnp.int32)
+    n_band = jnp.sum(band, dtype=jnp.int32)
+    total = jnp.int32(accept.shape[0] * accept.shape[1])
+    return jnp.stack([n_acc, n_band, total - n_acc - n_band]).reshape(1, 1, 3)
+
+
+def _filter_count_stats_kernel(
+    q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, band_ref, counts_ref, stats_ref
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    accept, band = _tile_masks(qs_ref, dbs_ref, band_ref)
+    stats_ref[...] = _tile_stats(accept, band)
+    counts_ref[...] += jnp.sum(accept, axis=1, dtype=jnp.int32)
+
+    @pl.when(jnp.any(band))
+    def _verify():
+        hit = band & _verify_dots(q_ref, db_ref, thresh_ref)
+        counts_ref[...] += jnp.sum(hit, axis=1, dtype=jnp.int32)
+
+
+def _filter_count_bitmap_stats_kernel(
+    q_ref, db_ref, qs_ref, dbs_ref, thresh_ref, band_ref, counts_ref, bitmap_ref, stats_ref
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    accept, band = _tile_masks(qs_ref, dbs_ref, band_ref)
+    stats_ref[...] = _tile_stats(accept, band)
+    any_band = jnp.any(band)
+
+    @pl.when(any_band)
+    def _verify():
+        hit = accept | (band & _verify_dots(q_ref, db_ref, thresh_ref))
+        counts_ref[...] += jnp.sum(hit, axis=1, dtype=jnp.int32)
+        bitmap_ref[...] = _pack_bits(hit)
+
+    @pl.when(~any_band)
+    def _prune():
+        counts_ref[...] += jnp.sum(accept, axis=1, dtype=jnp.int32)
+        bitmap_ref[...] = _pack_bits(accept)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("q_tile", "db_tile", "interpret", "with_bitmap")
+    jax.jit,
+    static_argnames=("q_tile", "db_tile", "interpret", "with_bitmap", "with_stats"),
 )
 def hamming_filter_pallas(
     q: jax.Array,
@@ -119,6 +174,7 @@ def hamming_filter_pallas(
     db_tile: int = DEFAULT_DB_TILE,
     interpret: bool = False,
     with_bitmap: bool = False,
+    with_stats: bool = False,
 ):
     """Raw kernel entry; inputs must already be tile-aligned (see ops.py).
 
@@ -126,6 +182,12 @@ def hamming_filter_pallas(
     order as ``repro.index.signatures``, one row per q/db row);
     ``(t_lo, t_hi)`` is the Hamming band (``t_lo = -1`` = full verify).
     Both thresholds are traced, so sweeping eps never recompiles.
+
+    ``with_stats`` appends a (nq/q_tile, nd/db_tile, 3) int32 per-tile
+    occupancy output: [sure-accepts, band candidates, rejects] over the
+    tile's ``q_tile * db_tile`` pairs (padded rows included — the
+    caller sees raw tile occupancy, which is what decides whether the
+    tile's verify matmul ran).
     """
     nq, d = q.shape
     nd = db.shape[0]
@@ -144,26 +206,48 @@ def hamming_filter_pallas(
     dbs_spec = pl.BlockSpec((db_tile, w), lambda i, j: (j, 0))
     scalar_spec = pl.BlockSpec(memory_space=pl.ANY)
     counts_spec = pl.BlockSpec((q_tile,), lambda i, j: (i,))
+    stats_spec = pl.BlockSpec((1, 1, 3), lambda i, j: (i, j, 0))
+    stats_shape = jax.ShapeDtypeStruct((grid[0], grid[1], 3), jnp.int32)
+    in_specs = [q_spec, db_spec, qs_spec, dbs_spec, scalar_spec, scalar_spec]
+    operands = (q, db, q_sig, db_sig, thresh, band_t)
 
     if not with_bitmap:
+        if with_stats:
+            return pl.pallas_call(
+                _filter_count_stats_kernel,
+                grid=grid,
+                in_specs=in_specs,
+                out_specs=[counts_spec, stats_spec],
+                out_shape=[jax.ShapeDtypeStruct((nq,), jnp.int32), stats_shape],
+                interpret=interpret,
+            )(*operands)
         return pl.pallas_call(
             _filter_count_kernel,
             grid=grid,
-            in_specs=[q_spec, db_spec, qs_spec, dbs_spec, scalar_spec, scalar_spec],
+            in_specs=in_specs,
             out_specs=counts_spec,
             out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
             interpret=interpret,
-        )(q, db, q_sig, db_sig, thresh, band_t)
+        )(*operands)
 
     bitmap_spec = pl.BlockSpec((q_tile, db_tile // 32), lambda i, j: (i, j))
+    bitmap_shape = jax.ShapeDtypeStruct((nq, nd // 32), jnp.uint32)
+    if with_stats:
+        return pl.pallas_call(
+            _filter_count_bitmap_stats_kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[counts_spec, bitmap_spec, stats_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((nq,), jnp.int32), bitmap_shape, stats_shape,
+            ],
+            interpret=interpret,
+        )(*operands)
     return pl.pallas_call(
         _filter_count_bitmap_kernel,
         grid=grid,
-        in_specs=[q_spec, db_spec, qs_spec, dbs_spec, scalar_spec, scalar_spec],
+        in_specs=in_specs,
         out_specs=[counts_spec, bitmap_spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((nq,), jnp.int32),
-            jax.ShapeDtypeStruct((nq, nd // 32), jnp.uint32),
-        ],
+        out_shape=[jax.ShapeDtypeStruct((nq,), jnp.int32), bitmap_shape],
         interpret=interpret,
-    )(q, db, q_sig, db_sig, thresh, band_t)
+    )(*operands)

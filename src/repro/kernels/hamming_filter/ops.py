@@ -32,6 +32,19 @@ def _pad_rows(x: jax.Array, mult: int) -> jax.Array:
     return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
 
 
+def _tail_word_mask(n_words: int, n: int) -> jax.Array:
+    """uint32 per-word masks clearing bitmap bits for rows >= n — the
+    single definition of the LSB-first tail mask (the bitmap wrapper and
+    the sharded index plane both clear pad bits through here)."""
+    bit_valid = jnp.arange(n_words * 32) < n
+    return jnp.sum(
+        bit_valid.reshape(n_words, 32).astype(jnp.uint32)
+        << jnp.arange(32, dtype=jnp.uint32)[None, :],
+        axis=1,
+        dtype=jnp.uint32,
+    )
+
+
 def _pad_col_hits(q_sig: jax.Array, eps, t_lo, t_hi, n_pad: int) -> jax.Array:
     """Per-query hits contributed by zero-padded db rows.
 
@@ -52,7 +65,9 @@ def _pad_col_hits(q_sig: jax.Array, eps, t_lo, t_hi, n_pad: int) -> jax.Array:
     return jnp.where(passes, n_pad, 0).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("q_tile", "db_tile", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("q_tile", "db_tile", "interpret", "return_stats")
+)
 def hamming_filter_count(
     q: jax.Array,
     db: jax.Array,
@@ -65,25 +80,38 @@ def hamming_filter_count(
     q_tile: int = DEFAULT_Q_TILE,
     db_tile: int = DEFAULT_DB_TILE,
     interpret: bool | None = None,
+    return_stats: bool = False,
 ):
     """Filtered-and-verified neighbor counts; pads to tiles and subtracts
-    the padded-row hits exactly.  ``t_lo=-1`` is full-verify mode."""
+    the padded-row hits exactly.  ``t_lo=-1`` is full-verify mode.
+
+    ``return_stats=True`` returns ``(counts, stats)`` where stats is the
+    kernel's raw (q_tiles, db_tiles, 3) per-tile occupancy —
+    [sure-accepts, band candidates, rejects] over the *padded* tile
+    grid (see ``hamming_filter_pallas``); the margin auto-tuner reads
+    the band column to price the verify matmuls a margin would cost.
+    """
     if interpret is None:
         interpret = default_interpret()
     nq, nd = q.shape[0], db.shape[0]
     qp, dbp = _pad_rows(q, q_tile), _pad_rows(db, db_tile)
     qsp, dbsp = _pad_rows(q_sig, q_tile), _pad_rows(db_sig, db_tile)
-    counts = hamming_filter_pallas(
+    out = hamming_filter_pallas(
         qp, dbp, qsp, dbsp, eps, t_lo, t_hi,
         q_tile=q_tile, db_tile=db_tile, interpret=interpret,
-    )[:nq]
+        with_stats=return_stats,
+    )
+    counts, stats = out if return_stats else (out, None)
+    counts = counts[:nq]
     n_pad = dbp.shape[0] - nd
     if n_pad:
         counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, n_pad)
-    return counts
+    return (counts, stats) if return_stats else counts
 
 
-@functools.partial(jax.jit, static_argnames=("q_tile", "db_tile", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("q_tile", "db_tile", "interpret", "return_stats")
+)
 def hamming_filter_bitmap(
     q: jax.Array,
     db: jax.Array,
@@ -96,31 +124,30 @@ def hamming_filter_bitmap(
     q_tile: int = DEFAULT_Q_TILE,
     db_tile: int = DEFAULT_DB_TILE,
     interpret: bool | None = None,
+    return_stats: bool = False,
 ):
     """(counts, packed adjacency) with padded bits cleared; the bitmap
-    covers ceil(nd/32) words.  ``t_lo=-1`` is full-verify mode."""
+    covers ceil(nd/32) words.  ``t_lo=-1`` is full-verify mode.
+    ``return_stats=True`` appends the raw per-tile occupancy triple
+    (see ``hamming_filter_count``)."""
     if interpret is None:
         interpret = default_interpret()
     nq, nd = q.shape[0], db.shape[0]
     qp, dbp = _pad_rows(q, q_tile), _pad_rows(db, db_tile)
     qsp, dbsp = _pad_rows(q_sig, q_tile), _pad_rows(db_sig, db_tile)
-    counts, bitmap = hamming_filter_pallas(
+    out = hamming_filter_pallas(
         qp, dbp, qsp, dbsp, eps, t_lo, t_hi,
         q_tile=q_tile, db_tile=db_tile, interpret=interpret, with_bitmap=True,
+        with_stats=return_stats,
     )
+    counts, bitmap = out[0], out[1]
+    stats = out[2] if return_stats else None
     counts = counts[:nq]
     bitmap = bitmap[:nq]
     n_pad = dbp.shape[0] - nd
     if n_pad:
         counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, n_pad)
-        nw = bitmap.shape[1]
-        bit_idx = jnp.arange(nw * 32) < nd
-        word_mask = jnp.sum(
-            bit_idx.reshape(nw, 32).astype(jnp.uint32)
-            << jnp.arange(32, dtype=jnp.uint32)[None, :],
-            axis=1,
-            dtype=jnp.uint32,
-        )
-        bitmap = bitmap & word_mask[None, :]
+        bitmap = bitmap & _tail_word_mask(bitmap.shape[1], nd)[None, :]
     words_needed = -(-nd // 32)
-    return counts, bitmap[:, :words_needed]
+    bitmap = bitmap[:, :words_needed]
+    return (counts, bitmap, stats) if return_stats else (counts, bitmap)

@@ -1,0 +1,22 @@
+"""The launch layer's unit of work: one (arch × shape × mesh) cell,
+lowered.  Shared by the family step builders in ``steps`` and the
+clustering lowering in ``laf_cluster`` (a separate module so the LAF
+workload can build on the sharded index plane without dragging the
+model families' dependency surface along)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+__all__ = ["LoweredCell"]
+
+
+@dataclass
+class LoweredCell:
+    name: str
+    step_fn: Callable
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]

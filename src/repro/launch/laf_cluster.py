@@ -1,0 +1,195 @@
+"""LAF clustering lowering (the paper's workload), built on the sharded
+index plane.
+
+One frontier round = batched RMI cardinality prediction for the
+frontier + range counting of the whole frontier against the
+device-sharded database.  With ``backend="random_projection"`` the
+round carries the ANN index: packed sign signatures ride along
+row-sharded *with* the database (``repro.distributed.index_plane``'s
+co-sharding contract), frontier signatures are projected in-step, and
+hits follow the backend's dual-threshold band contract (sure-accept
+below ``t_lo``, exact-verify only the band).
+
+``index_device`` picks the evaluator for that predicate:
+
+* ``True``  — the fused ``hamming_filter`` Pallas tile on every mesh
+  size: single-device meshes call the wrapper directly and multi-device
+  meshes run it shard-locally through
+  :func:`repro.distributed.index_plane.sharded_band_marginals`
+  (the same tile per shard, one psum of per-query counts, partial
+  per-row counts left sharded in place).
+* ``False`` — the shardable jnp dataflow of the identical
+  :func:`repro.index.signatures.band_hits` predicate (XLA partitions
+  the matmul + popcount).
+* ``"auto"`` (default) — the fused tile whenever it earns its keep: on
+  any multi-device mesh (the sharded plane is the only evaluator that
+  keeps range queries local to the data shard) and on single-device
+  meshes backed by a real accelerator; a single CPU device keeps the
+  BLAS dataflow.  There is no single-device special case left in the
+  routing — the plane degenerates to the plain wrapper on one device.
+
+``index_axes`` ("auto" = every mesh axis, matching the database's
+row sharding) names the mesh axes the database and signature table are
+co-sharded over.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..configs.registry import ArchSpec, ShapeSpec
+from ..distributed.sharding import axis_size, named, replicated, tree_replicated
+from .cell import LoweredCell
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+__all__ = ["build_laf_cluster"]
+
+
+def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
+    from ..configs.laf_dbscan import LAFClusterConfig
+    from ..core.cardinality.rmi import RMIConfig, init_rmi, rmi_predict_counts
+
+    base: LAFClusterConfig = arch.make_config()
+    n, d = shape.meta["n_points"], shape.meta["dim"]
+    # pad the database to a device multiple (zero rows never pass the
+    # eps threshold for eps < 1, and counts subtract exactly otherwise;
+    # the fused sharded path masks zero rows inside each shard)
+    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    n = -(-n // n_dev) * n_dev
+    dtype = jnp.bfloat16 if n > 10_000_000 else F32
+    frontier = base.frontier
+    rmi_cfg = RMIConfig(input_dim=d + 1)
+    abstract_rmi = jax.eval_shape(lambda: init_rmi(jax.random.PRNGKey(0), rmi_cfg))
+    all_axes = tuple(mesh.axis_names)
+    thresh = 1.0 - base.eps
+
+    use_rp = base.backend == "random_projection"
+    use_kernel = False
+    if use_rp:
+        from ..index.signatures import hamming_band, make_projection
+        from ..kernels.hamming_filter.ops import default_interpret
+
+        n_bits = base.index_bits
+        sig_words = n_bits // 32
+        # the projection is part of the cell contract: db_sig passed in
+        # must be packed with this (index_seed, index_bits) projection —
+        # both are recorded in the cell meta below
+        proj = jnp.asarray(make_projection(d, n_bits, seed=base.index_seed))
+        t_lo, t_hi = hamming_band(base.eps, n_bits, margin=base.index_margin)
+        if base.index_verify == "full":
+            t_lo = -1
+        # which mesh axes co-shard the db rows + signature table
+        # ("auto" = all of them, i.e. exactly the db's row sharding)
+        axes = all_axes if base.index_axes == "auto" else tuple(base.index_axes)
+        n_shards = axis_size(mesh, axes)
+        if base.index_device == "auto":
+            use_kernel = n_dev > 1 or not default_interpret()
+        else:
+            use_kernel = bool(base.index_device)
+    else:
+        axes = all_axes
+        n_shards = n_dev
+
+    def cluster_step(rmi_params, db, queries, db_sig=None):
+        """One frontier round: RMI predicts frontier cardinalities; the
+        whole frontier's range counts + partial-neighbor increments are
+        computed against the device-sharded database."""
+        feats = jnp.concatenate(
+            [queries, jnp.full((queries.shape[0], 1), base.eps, queries.dtype)], axis=1
+        )
+        pred = rmi_predict_counts(rmi_params, feats.astype(F32), rmi_cfg)
+        gate = (pred >= base.alpha * base.tau).astype(F32)  # skip decisions
+
+        if use_rp and not use_kernel:
+            # caller-level padding (n rounded to a device multiple) adds
+            # zero db rows whose *signatures* are not zero (sign(0) >= 0
+            # packs to all-ones); sure-accepts bypass the dot test, so
+            # padded columns must be masked out explicitly (the sharded
+            # plane applies the same mask shard-locally)
+            db_valid = jnp.any(db != 0, axis=1)
+
+        def chunk_counts(qc):
+            if use_rp:
+                from ..index.signatures import band_hits, hamming_words, pack_bits
+
+                q_sig = pack_bits((qc.astype(F32) @ proj) >= 0.0)
+            if use_kernel:
+                from ..distributed.index_plane import sharded_band_marginals
+
+                # the fused tile, shard-local on every mesh size:
+                # popcount band split + MXU verify of band tiles only
+                # (band-free tiles skip their matmul); only per-query
+                # count psums cross the network, per-row partials stay
+                # sharded where the database lives
+                return sharded_band_marginals(
+                    qc.astype(F32), db, q_sig, db_sig, base.eps, t_hi,
+                    t_lo=t_lo, mesh=mesh, axes=axes,
+                )
+            # native-dtype MXU dot with fp32 accumulation: upcasting the
+            # database to f32 first doubles HBM traffic and halves the
+            # bf16 MXU rate (§Perf iteration on web_1b)
+            dots = jax.lax.dot_general(
+                qc, db, (((1,), (1,)), ((), ())),
+                preferred_element_type=F32,
+            )                                                  # (C, n)
+            if use_rp:
+                ham = hamming_words(q_sig, db_sig)
+                hit = band_hits(dots, ham, base.eps, t_lo, t_hi) & db_valid[None, :]
+            else:
+                hit = dots > thresh
+            return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
+
+        # bound the live (chunk, n_local) fp32 score tile to ~0.5 GiB
+        # the rp path adds a (chunk, n_local) int32 ham matrix + uint32
+        # XOR temporaries on top of the fp32 score tile: halve the budget
+        elems_budget = 0.625e8 if use_rp else 1.25e8
+        rows_budget = max(32, int(elems_budget / max(n // n_dev, 1)))
+        n_chunks = 1
+        while frontier // n_chunks > rows_budget and n_chunks < frontier:
+            n_chunks *= 2
+        qs = queries.reshape(n_chunks, frontier // n_chunks, d)
+        counts, partials = jax.lax.map(chunk_counts, qs)
+        counts = counts.reshape(frontier)
+        partial_counts = partials.sum(axis=0)
+        # masked by skip decisions (skipped queries contribute nothing)
+        counts = (counts.astype(F32) * gate).astype(I32)
+        return counts, partial_counts, pred
+
+    args = (
+        abstract_rmi,
+        jax.ShapeDtypeStruct((n, d), dtype),
+        jax.ShapeDtypeStruct((frontier, d), dtype),
+    )
+    in_sh = (
+        tree_replicated(mesh, abstract_rmi),
+        named(mesh, axes, None),       # db row-sharded over the index axes
+        replicated(mesh),
+    )
+    if use_rp:
+        # packed signatures row-sharded exactly like the database
+        args = args + (jax.ShapeDtypeStruct((n, sig_words), jnp.uint32),)
+        in_sh = in_sh + (named(mesh, axes, None),)
+    out_sh = (replicated(mesh), named(mesh, axes), replicated(mesh))
+    meta = {"kind": "cluster", "n_points": n, "dim": d, "frontier": frontier}
+    if use_rp:
+        # the db_sig contract: signatures must be packed with this exact
+        # projection (repro.index.make_projection(dim, bits, seed))
+        meta.update(
+            index_bits=base.index_bits,
+            index_seed=base.index_seed,
+            index_margin=base.index_margin,
+            index_verify=base.index_verify,
+            index_band=(t_lo, t_hi),
+            index_axes=axes,
+            n_shards=n_shards,
+            fused_kernel=use_kernel,
+            sharded=use_kernel and n_shards > 1,
+        )
+    return LoweredCell(
+        f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh, meta,
+    )

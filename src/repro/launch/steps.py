@@ -10,10 +10,6 @@ AdamW update with fp32 m/v (so memory_analysis covers optimizer state).
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,12 +18,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..configs.registry import ArchSpec, ShapeSpec, get_arch
 from ..distributed.sharding import (
     axis_size,
+    data_axes,
     named,
     param_sharding_rule,
     replicated,
     tree_param_shardings,
     tree_replicated,
 )
+from .cell import LoweredCell  # noqa: F401  (re-export: the cell contract)
+from .laf_cluster import build_laf_cluster  # noqa: F401  (re-export)
 from ..models import gnn as gnn_mod
 from ..models import recsys as rec_mod
 from ..models.layers import cross_entropy_loss
@@ -48,18 +47,11 @@ F32 = jnp.float32
 I32 = jnp.int32
 
 
-@dataclass
-class LoweredCell:
-    name: str
-    step_fn: Callable
-    args: Tuple
-    in_shardings: Tuple
-    out_shardings: Any
-    meta: Dict[str, Any]
-
-
 def _dp(mesh: Mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+    # the shared data_axes definition, collapsed to a bare name on
+    # single-axis meshes (what the P specs below historically used)
+    axes = data_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
 
 
 def _adamw_abstract_state(abstract_params, dtype=F32):
@@ -719,152 +711,6 @@ def build_recsys_retrieval(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> Lowe
         (p_shard, batch_sh, cand_sh), named(mesh, None, "model"),
         {"kind": "retrieval", "batch": b, "n_candidates": nc,
          "param_count": sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(abstract_params))},
-    )
-
-
-# ---------------------------------------------------------------------------
-# LAF clustering family (the paper's workload)
-# ---------------------------------------------------------------------------
-
-
-def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
-    from ..configs.laf_dbscan import LAFClusterConfig
-    from ..core.cardinality.rmi import RMIConfig, init_rmi, rmi_predict_counts
-
-    base: LAFClusterConfig = arch.make_config()
-    n, d = shape.meta["n_points"], shape.meta["dim"]
-    # pad the database to a device multiple (zero rows never pass the
-    # eps threshold for eps < 1, and counts subtract exactly otherwise)
-    n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
-    n = -(-n // n_dev) * n_dev
-    dtype = jnp.bfloat16 if n > 10_000_000 else F32
-    frontier = base.frontier
-    rmi_cfg = RMIConfig(input_dim=d + 1)
-    abstract_rmi = jax.eval_shape(lambda: init_rmi(jax.random.PRNGKey(0), rmi_cfg))
-    all_axes = tuple(mesh.axis_names)
-    thresh = 1.0 - base.eps
-
-    # backend="random_projection": the frontier round carries the ANN
-    # index's Hamming pre-filter — packed db signatures ride along
-    # row-sharded with the database, frontier signatures are projected
-    # in-step, and hits follow the backend's dual-threshold band
-    # contract (sure-accept below t_lo, exact-verify only the band).
-    # index_device routes the whole round through the fused
-    # hamming_filter Pallas tile when the mesh is a single device;
-    # multi-device meshes evaluate the same band_hits predicate as
-    # shardable jnp dataflow (XLA partitions the matmul + popcount).
-    use_rp = base.backend == "random_projection"
-    use_kernel = False
-    if use_rp:
-        from ..index.signatures import hamming_band, make_projection
-        from ..kernels.hamming_filter.ops import default_interpret
-
-        n_bits = base.index_bits
-        sig_words = n_bits // 32
-        # the projection is part of the cell contract: db_sig passed in
-        # must be packed with this (index_seed, index_bits) projection —
-        # both are recorded in the cell meta below
-        proj = jnp.asarray(make_projection(d, n_bits, seed=base.index_seed))
-        t_lo, t_hi = hamming_band(base.eps, n_bits, margin=base.index_margin)
-        if base.index_verify == "full":
-            t_lo = -1
-        if base.index_device == "auto":
-            use_kernel = n_dev == 1 and not default_interpret()
-        else:
-            use_kernel = n_dev == 1 and bool(base.index_device)
-
-    def cluster_step(rmi_params, db, queries, db_sig=None):
-        """One frontier round: RMI predicts frontier cardinalities; the
-        whole frontier's range counts + partial-neighbor increments are
-        computed against the device-sharded database."""
-        feats = jnp.concatenate(
-            [queries, jnp.full((queries.shape[0], 1), base.eps, queries.dtype)], axis=1
-        )
-        pred = rmi_predict_counts(rmi_params, feats.astype(F32), rmi_cfg)
-        gate = (pred >= base.alpha * base.tau).astype(F32)  # skip decisions
-
-        if use_rp:
-            # caller-level padding (n rounded to a device multiple) adds
-            # zero db rows whose *signatures* are not zero (sign(0) >= 0
-            # packs to all-ones); sure-accepts bypass the dot test, so
-            # padded columns must be masked out explicitly
-            db_valid = jnp.any(db != 0, axis=1)
-
-        def chunk_counts(qc):
-            if use_rp:
-                from ..index.signatures import band_hits, hamming_words, pack_bits, unpack_bits
-
-                q_sig = pack_bits((qc.astype(F32) @ proj) >= 0.0)
-            if use_kernel:
-                from ..kernels.hamming_filter.ops import hamming_filter_bitmap
-
-                # the fused tile: popcount band split + MXU verify of
-                # band tiles only (band-free tiles skip their matmul)
-                _, bm = hamming_filter_bitmap(
-                    qc.astype(F32), db, q_sig, db_sig, base.eps, t_hi, t_lo=t_lo
-                )
-                hit = unpack_bits(bm, db.shape[0]) & db_valid[None, :]
-                return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
-            # native-dtype MXU dot with fp32 accumulation: upcasting the
-            # database to f32 first doubles HBM traffic and halves the
-            # bf16 MXU rate (§Perf iteration on web_1b)
-            dots = jax.lax.dot_general(
-                qc, db, (((1,), (1,)), ((), ())),
-                preferred_element_type=F32,
-            )                                                  # (C, n)
-            if use_rp:
-                ham = hamming_words(q_sig, db_sig)
-                hit = band_hits(dots, ham, base.eps, t_lo, t_hi) & db_valid[None, :]
-            else:
-                hit = dots > thresh
-            return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
-
-        # bound the live (chunk, n_local) fp32 score tile to ~0.5 GiB
-        n_dev = int(np.prod(list(mesh.shape.values())))
-        # the rp path adds a (chunk, n_local) int32 ham matrix + uint32
-        # XOR temporaries on top of the fp32 score tile: halve the budget
-        elems_budget = 0.625e8 if use_rp else 1.25e8
-        rows_budget = max(32, int(elems_budget / max(n // n_dev, 1)))
-        n_chunks = 1
-        while frontier // n_chunks > rows_budget and n_chunks < frontier:
-            n_chunks *= 2
-        qs = queries.reshape(n_chunks, frontier // n_chunks, d)
-        counts, partials = jax.lax.map(chunk_counts, qs)
-        counts = counts.reshape(frontier)
-        partial_counts = partials.sum(axis=0)
-        # masked by skip decisions (skipped queries contribute nothing)
-        counts = (counts.astype(F32) * gate).astype(I32)
-        return counts, partial_counts, pred
-
-    args = (
-        abstract_rmi,
-        jax.ShapeDtypeStruct((n, d), dtype),
-        jax.ShapeDtypeStruct((frontier, d), dtype),
-    )
-    in_sh = (
-        tree_replicated(mesh, abstract_rmi),
-        named(mesh, all_axes, None),   # db row-sharded over every device
-        replicated(mesh),
-    )
-    if use_rp:
-        # packed signatures row-sharded exactly like the database
-        args = args + (jax.ShapeDtypeStruct((n, sig_words), jnp.uint32),)
-        in_sh = in_sh + (named(mesh, all_axes, None),)
-    out_sh = (replicated(mesh), named(mesh, all_axes), replicated(mesh))
-    meta = {"kind": "cluster", "n_points": n, "dim": d, "frontier": frontier}
-    if use_rp:
-        # the db_sig contract: signatures must be packed with this exact
-        # projection (repro.index.make_projection(dim, bits, seed))
-        meta.update(
-            index_bits=base.index_bits,
-            index_seed=base.index_seed,
-            index_margin=base.index_margin,
-            index_verify=base.index_verify,
-            index_band=(t_lo, t_hi),
-            fused_kernel=use_kernel,
-        )
-    return LoweredCell(
-        f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh, meta,
     )
 
 

@@ -1,7 +1,54 @@
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
 
 from repro.data.synthetic import make_angular_clusters
+
+_FORCED_PRELUDE = """
+import json, sys
+sys.path.insert(0, "src")
+"""
+
+
+@pytest.fixture(scope="session")
+def forced_device_run():
+    """Run a python snippet under ``--xla_force_host_platform_device_count=N``.
+
+    The device count is locked at first jax initialization, so the flag
+    cannot be set inside the (already jax-initialized) test process —
+    the subprocess-safe way is a fresh interpreter whose environment
+    carries the flag *before* any jax import (existing XLA_FLAGS are
+    appended, not clobbered).  The snippet reports results by printing
+    ``RESULT:`` + a json object; the fixture returns the parsed dict.
+    """
+
+    def run(code: str, n_devices: int = 4, timeout: int = 480) -> dict:
+        script = _FORCED_PRELUDE + textwrap.dedent(code)
+        env = dict(os.environ)
+        # drop any inherited force-count (e.g. CI's 4-device tier-1 run)
+        # so the requested count wins, keep every other inherited flag
+        inherited = [
+            f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")
+        ]
+        env["XLA_FLAGS"] = " ".join(
+            [f"--xla_force_host_platform_device_count={n_devices}"] + inherited
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", script],
+            capture_output=True, text=True, timeout=timeout, cwd=".", env=env,
+        )
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        lines = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")]
+        assert lines, f"snippet printed no RESULT line:\n{proc.stdout[-2000:]}"
+        return json.loads(lines[-1][len("RESULT:"):])
+
+    return run
 
 
 @pytest.fixture(scope="session")

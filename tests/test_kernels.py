@@ -275,6 +275,53 @@ def test_hamming_filter_bitmap_sweep(nq, nd, mode):
     np.testing.assert_array_equal(np.asarray(gb), np.asarray(rb))
 
 
+@pytest.mark.parametrize("mode", ["full", "band"])
+def test_hamming_filter_stats_match_hamming_occupancy(mode):
+    """return_stats=True: the per-tile [accept, band, reject] counters
+    must agree with the host Hamming occupancy of the padded tile grid,
+    sum to q_tile*db_tile per tile, and leave counts/bitmap unchanged."""
+    from repro.index.signatures import hamming_numpy
+
+    nq, nd, q_tile, db_tile = 40, 200, 32, 64
+    q, db, q_sig, db_sig = _sig_case(nq, nd, 32, 64, seed=23)
+    t_lo, t_hi = hamming_band(0.6, 64, margin=3.0)
+    if mode == "full":
+        t_lo = -1
+    plain = np.asarray(
+        hamming_filter_count(
+            q, db, q_sig, db_sig, 0.6, t_hi, t_lo=t_lo,
+            q_tile=q_tile, db_tile=db_tile, interpret=True,
+        )
+    )
+    gc, stats = hamming_filter_count(
+        q, db, q_sig, db_sig, 0.6, t_hi, t_lo=t_lo,
+        q_tile=q_tile, db_tile=db_tile, interpret=True, return_stats=True,
+    )
+    gc2, gb, stats2 = hamming_filter_bitmap(
+        q, db, q_sig, db_sig, 0.6, t_hi, t_lo=t_lo,
+        q_tile=q_tile, db_tile=db_tile, interpret=True, return_stats=True,
+    )
+    np.testing.assert_array_equal(np.asarray(gc), plain)
+    np.testing.assert_array_equal(np.asarray(gc2), plain)
+    stats, stats2 = np.asarray(stats), np.asarray(stats2)
+    np.testing.assert_array_equal(stats, stats2)
+    nqt, ndt = -(-nq // q_tile), -(-nd // db_tile)
+    assert stats.shape == (nqt, ndt, 3)
+    assert (stats.sum(axis=2) == q_tile * db_tile).all()
+
+    # host occupancy on the same zero-padded tile grid
+    qs = np.zeros((nqt * q_tile, q_sig.shape[1]), np.uint32)
+    qs[:nq] = np.asarray(q_sig)
+    ds = np.zeros((ndt * db_tile, db_sig.shape[1]), np.uint32)
+    ds[:nd] = np.asarray(db_sig)
+    ham = hamming_numpy(qs, ds)
+    accept = ham <= t_lo
+    band = (ham <= t_hi) & ~accept
+    tiled = lambda m: m.reshape(nqt, q_tile, ndt, db_tile).sum(axis=(1, 3))
+    np.testing.assert_array_equal(stats[:, :, 0], tiled(accept))
+    np.testing.assert_array_equal(stats[:, :, 1], tiled(band))
+
+
 def test_hamming_filter_open_threshold_equals_range_count():
     """t_hi = n_bits (full verify) disables the filter: the fused kernel
     must reproduce the plain range_count oracle exactly."""

@@ -74,6 +74,21 @@ SCRIPT = textwrap.dedent(
                 out_shardings=cell.out_shardings).lower(*cell.args).compile()
     results["laf_cluster"] = {"ok": True}
 
+    # LAF cluster cell, random_projection backend through the sharded
+    # index plane (index_device=True forces the shard_mapped tile on the
+    # 8-device two-axis mesh; compiles the shard_map + psum lowering)
+    red_rp = dataclasses.replace(
+        red, backend="random_projection", index_device=True
+    )
+    arch_rp = dataclasses.replace(arch, make_config=lambda: red_rp)
+    cell = S.build_laf_cluster(arch_rp, shape, mesh)
+    assert cell.meta["fused_kernel"] and cell.meta["sharded"]
+    assert cell.meta["n_shards"] == 8
+    with mesh:
+        jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings).lower(*cell.args).compile()
+    results["laf_cluster_sharded"] = {"ok": True}
+
     print("RESULT:" + json.dumps(results))
     """
 )
@@ -91,6 +106,7 @@ def test_build_cells_compile_on_8_devices():
     assert results["lm_train"]["ok"]
     assert results["recsys_forward"]["ok"]
     assert results["laf_cluster"]["ok"]
+    assert results["laf_cluster_sharded"]["ok"]
 
 
 def test_hlo_analysis_loop_correction():
