@@ -1,0 +1,151 @@
+"""Streaming ingest benchmark: amortized partial_fit vs full refit, plus
+serving-grade ``assign`` latency.
+
+Scenario (the ISSUE-4 acceptance shape): a database of ``--n0`` rows is
+already clustered; live traffic then streams ``--n - --n0`` more rows
+in ``--batches`` batches.  For each batch we time the incremental path
+(``StreamingLAF.partial_fit``: index append + new-vs-all range queries +
+promotions).  The baseline is what the repo had to do before this
+subsystem existed — a **full refit** at the final size: rebuild the
+index and recluster all n rows from scratch (timed through the same
+streaming code path, one n-row batch, so the comparison is engine-fair).
+Quality is checked by ARI between the streamed labels and the refit
+labels.  Serving latency is measured per single-query ``assign`` call
+(p50/p95 over ``--queries`` calls) against the final snapshot.
+
+  PYTHONPATH=src python -m benchmarks.stream_bench                    # 20k -> 40k, d=768
+  PYTHONPATH=src python -m benchmarks.stream_bench --n0 2000 --n 4000 --d 64 --n-bits 128
+  PYTHONPATH=src python -m benchmarks.stream_bench --json BENCH_PR4.json   # CI artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+N_CLUSTERS = 80
+NOISE_FRAC = 0.35
+
+
+def _dataset(n: int, d: int, seed: int):
+    from repro.data.synthetic import make_angular_clusters
+
+    data, _ = make_angular_clusters(
+        n, d, N_CLUSTERS, kappa=(d - 1) / 0.30, noise_frac=NOISE_FRAC, seed=seed
+    )
+    return data[np.random.default_rng(seed).permutation(n)]
+
+
+def _fresh_stream(args):
+    from repro.stream import StreamingLAF
+
+    return StreamingLAF(
+        args.eps, args.tau,
+        backend="random_projection", device=args.device,
+        n_bits=args.n_bits, seed=0,
+    )
+
+
+def run(args) -> dict:
+    from repro.core.metrics import adjusted_rand_index
+
+    data = _dataset(args.n, args.d, seed=0)
+
+    # -- streaming path: n0 warm rows, then batches to n -------------------
+    stream = _fresh_stream(args)
+    t0 = time.time()
+    stream.partial_fit(data[: args.n0])
+    warm_s = time.time() - t0
+    step = -(-(args.n - args.n0) // args.batches)
+    batches = []
+    for start in range(args.n0, args.n, step):
+        rows = data[start : start + step]
+        rep = stream.partial_fit(rows)
+        batches.append(
+            dict(
+                n_after=rep.n_points,
+                rows=len(rows),
+                seconds=rep.elapsed_s,
+                rows_per_s=len(rows) / max(rep.elapsed_s, 1e-9),
+                n_promoted=rep.n_promoted,
+            )
+        )
+        print(
+            f"  batch -> n={rep.n_points:>7d}  {len(rows)} rows in "
+            f"{rep.elapsed_s:6.2f}s  ({batches[-1]['rows_per_s']:,.0f} rows/s, "
+            f"{rep.n_promoted} promoted)"
+        )
+    stream_labels = stream.labels()
+
+    # -- baseline: full refit at the final size -----------------------------
+    refit = _fresh_stream(args)
+    t0 = time.time()
+    refit.partial_fit(data)
+    refit_s = time.time() - t0
+    refit_labels = refit.labels()
+    ari = adjusted_rand_index(stream_labels, refit_labels)
+
+    mean_batch_s = float(np.mean([b["seconds"] for b in batches]))
+    last_batch_s = batches[-1]["seconds"]
+    amortized_speedup = refit_s / mean_batch_s
+    print(
+        f"refit {args.n} rows: {refit_s:.2f}s | mean batch: {mean_batch_s:.2f}s "
+        f"(last {last_batch_s:.2f}s) -> amortized speedup {amortized_speedup:.1f}x | "
+        f"ARI stream-vs-refit {ari:.4f}"
+    )
+
+    # -- serving latency ----------------------------------------------------
+    rng = np.random.default_rng(7)
+    member = np.nonzero(stream_labels >= 0)[0]
+    qidx = rng.choice(member, size=args.queries, replace=len(member) < args.queries)
+    noise = 0.02 * rng.standard_normal((args.queries, args.d)).astype(np.float32)
+    queries = data[qidx] + noise
+    stream.snapshot()  # build the serving snapshot outside the timed region
+    lat = np.zeros(args.queries)
+    for i in range(args.queries):
+        t0 = time.time()
+        stream.assign(queries[i : i + 1])
+        lat[i] = time.time() - t0
+    p50, p95 = (float(np.percentile(lat, p) * 1e3) for p in (50, 95))
+    print(f"assign latency over {args.queries} single queries: p50 {p50:.2f} ms, p95 {p95:.2f} ms")
+
+    return dict(
+        n0=args.n0, n=args.n, d=args.d, n_bits=args.n_bits,
+        eps=args.eps, tau=args.tau, device=args.device, batches=batches,
+        warm_ingest_seconds=warm_s,
+        refit_seconds=refit_s,
+        mean_batch_seconds=mean_batch_s,
+        last_batch_seconds=last_batch_s,
+        amortized_speedup=amortized_speedup,
+        ari_stream_vs_refit=float(ari),
+        n_clusters=int(stream.n_clusters),
+        assign=dict(p50_ms=p50, p95_ms=p95, n_queries=args.queries),
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n0", type=int, default=20000, help="warm database size")
+    ap.add_argument("--n", type=int, default=40000, help="final database size")
+    ap.add_argument("--d", type=int, default=768)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--n-bits", type=int, default=512)
+    ap.add_argument("--eps", type=float, default=0.3)
+    ap.add_argument("--tau", type=int, default=5)
+    ap.add_argument("--device", default="auto")
+    ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--json", type=Path, default=None)
+    args = ap.parse_args()
+
+    payload = run(args)
+    if args.json:
+        args.json.write_text(json.dumps(payload, indent=2))
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,11 @@
-"""RecSys serving with LAF-clustered retrieval: cluster the candidate
-item embeddings offline with LAF-DBSCAN, then serve retrieval requests
-by scoring cluster centroids first and only expanding the best clusters
-— the paper's technique as a first-class serving feature.
+"""RecSys serving with LAF-clustered retrieval: ingest the candidate
+item embeddings through the **streaming** LAF-DBSCAN subsystem
+(``repro.stream``) — batches append to the signed-RP index via
+``partial_fit``, clusters are maintained online, no O(n^2) exact pass —
+then serve retrieval requests by scoring cluster centroids first and
+expanding only the best clusters (``ClusterIndex.shortlist``), plus
+cluster assignment with confidence for the user embeddings themselves
+(``stream.assign``).
 
     PYTHONPATH=src python examples/recsys_serving.py
 """
@@ -13,10 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core.laf_dbscan import laf_dbscan
-from repro.core.range_query import range_counts
 from repro.models import recsys as R
 from repro.models.recsys import retrieval_scores
+from repro.stream import StreamingLAF
 
 
 def main():
@@ -32,18 +35,22 @@ def main():
     cands = centers[genre] + 0.05 * rng.standard_normal((n_cand, d)).astype(np.float32)
     cands /= np.linalg.norm(cands, axis=1, keepdims=True)
 
-    # offline: LAF-DBSCAN clusters the candidates (oracle-free estimator:
-    # exact counts here stand in for a trained RMI — see quickstart)
-    eps, tau = 0.12, 5
+    # offline->online: the catalogue arrives in batches; the streaming
+    # subsystem appends each one to the ANN index (backend=
+    # "random_projection", device="auto") and maintains the clusters —
+    # points crossing tau promote, clusters merge, no refits
+    eps, tau, batch = 0.12, 5, 4000
+    stream = StreamingLAF(eps, tau, backend="random_projection", device="auto")
     t0 = time.time()
-    pred = np.asarray(range_counts(cands, cands, eps)).astype(float)
-    res = laf_dbscan(cands, eps, tau, 1.0, pred, seed=0)
-    print(f"offline clustering: {res.n_clusters} clusters in {time.time()-t0:.1f}s "
-          f"({np.mean(res.labels >= 0) * 100:.0f}% of items clustered)")
-    centroids = np.stack([
-        cands[res.labels == c].mean(axis=0) for c in range(res.n_clusters)
-    ])
-    centroids /= np.linalg.norm(centroids, axis=1, keepdims=True)
+    for start in range(0, n_cand, batch):
+        rep = stream.partial_fit(cands[start : start + batch])
+    labels = stream.labels()
+    print(
+        f"streaming ingest:   {stream.n_clusters} clusters in {time.time()-t0:.1f}s "
+        f"({np.mean(labels >= 0) * 100:.0f}% of items clustered, "
+        f"{n_cand // batch} batches, last batch {rep.elapsed_s*1e3:.0f} ms)"
+    )
+    snapshot = stream.snapshot()  # centroids + members + signature band
 
     # online: user query -> score centroids -> expand top clusters only
     hist = jnp.asarray(rng.integers(0, cfg.item_vocab, (4, cfg.seq_len)).astype(np.int32))
@@ -56,12 +63,10 @@ def main():
     t_full = time.time() - t0
 
     t0 = time.time()
-    cscores = q @ centroids.T                       # (B, n_clusters)
-    top_c = np.argsort(-cscores, axis=1)[:, :8]     # expand 8 best clusters
+    top_c = snapshot.shortlist(q, 8)                # expand 8 best clusters
     top_pruned = []
     for b in range(len(q)):
-        mask = np.isin(res.labels, top_c[b])
-        idx = np.nonzero(mask)[0]
+        idx = np.concatenate([snapshot.members(c) for c in top_c[b]])
         s = q[b] @ cands[idx].T
         top_pruned.append(idx[np.argsort(-s)[:10]])
     t_pruned = time.time() - t0
@@ -69,11 +74,19 @@ def main():
     recall = np.mean([
         len(set(top_full[b]) & set(top_pruned[b])) / 10 for b in range(len(q))
     ])
-    frac = np.mean([np.isin(res.labels, top_c[b]).mean() for b in range(len(q))])
+    frac = np.mean([np.isin(labels, top_c[b]).mean() for b in range(len(q))])
     print(f"full scan:          {t_full * 1e3:.1f} ms")
     print(f"cluster-pruned:     {t_pruned * 1e3:.1f} ms "
           f"(scored {frac * 100:.0f}% of candidates)")
     print(f"recall@10 vs full:  {recall * 100:.0f}%")
+
+    # serving-grade assignment: which cluster does each *user* belong
+    # to, and with what confidence (fraction of their eps-neighbors in
+    # that cluster)?  -1 = no cluster reaches this user's taste region.
+    res = stream.assign(q)
+    for b in range(len(q)):
+        print(f"user {b}: cluster {res.labels[b]:>3d}  "
+              f"confidence {res.confidence[b]:.2f}  ({res.n_hits[b]} eps-neighbors)")
 
 
 if __name__ == "__main__":

@@ -59,6 +59,7 @@ class LAFPipeline:
         self.backend = backend
         self.device = device
         self.estimator: Optional[TrainedEstimator] = None
+        self._stream = None  # StreamingLAF, created by the first partial_fit
 
     # -- estimator ---------------------------------------------------------
     def fit(self, train_vectors: np.ndarray) -> "LAFPipeline":
@@ -81,6 +82,62 @@ class LAFPipeline:
     def predict_counts(self, vectors: np.ndarray, eps: float) -> np.ndarray:
         assert self.estimator is not None, "call fit() first"
         return self.estimator.predict_counts(vectors, eps)
+
+    # -- streaming (repro.stream) ------------------------------------------
+    @property
+    def stream(self):
+        """The live ``StreamingLAF`` (None until the first ``partial_fit``)."""
+        return self._stream
+
+    def partial_fit(self, batch: np.ndarray, *, eps: float = None, tau: int = None, **kw):
+        """Ingest an embedding batch into the maintained online clustering.
+
+        The first call fixes the (eps, tau) operating point and builds a
+        ``repro.stream.StreamingLAF`` on this pipeline's backend/device;
+        a trained estimator (from ``fit``) is wired in as the ingest
+        fast path automatically (pass ``use_estimator=False`` to force
+        the exact path).  Later calls just stream batches in — the
+        maintained counts are eps-specific, so changing eps/tau
+        mid-stream is an error, not a silent no-op.  Returns the
+        per-batch ``IngestReport``.
+        """
+        if self._stream is None:
+            if eps is None or tau is None:
+                raise ValueError("the first partial_fit must fix eps= and tau=")
+            from ..stream import StreamingLAF
+
+            from ..index.base import RangeBackend
+
+            if self.estimator is not None:
+                kw.setdefault("estimator", self.estimator)
+                kw.setdefault("use_estimator", True)
+            kw.setdefault("backend", self.backend)
+            if not isinstance(kw["backend"], RangeBackend):
+                # a constructed instance keeps its own evaluator; only
+                # registry names take the pipeline's device choice
+                kw.setdefault("device", self.device)
+            self._stream = StreamingLAF(eps, tau, **kw)
+            return self._stream.partial_fit(batch)
+        if (eps is not None and eps != self._stream.eps) or (
+            tau is not None and tau != self._stream.tau
+        ):
+            raise ValueError(
+                f"stream is live at eps={self._stream.eps}, tau={self._stream.tau}; "
+                f"got eps={eps}, tau={tau} — the maintained counts are "
+                f"operating-point-specific (start a new pipeline/stream to change)"
+            )
+        if kw:
+            raise ValueError(
+                f"stream is live; constructor kwargs {sorted(kw)} cannot be "
+                f"applied after the first partial_fit"
+            )
+        return self._stream.partial_fit(batch)
+
+    def assign(self, queries: np.ndarray, **kw):
+        """Serving API: cluster ids + confidence for unseen vectors
+        against the streamed clustering (``repro.stream.serve``)."""
+        assert self._stream is not None, "call partial_fit() first"
+        return self._stream.assign(queries, **kw)
 
     # -- engines -----------------------------------------------------------
     def cluster_laf_dbscan(

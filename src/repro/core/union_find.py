@@ -85,11 +85,48 @@ def compact_labels_from_parent(
 
 
 class UnionFind:
-    """Array-based union-find with path halving + union by size."""
+    """Array-based union-find with path halving + union by size.
+
+    ``grow`` extends the element universe in place (new elements start
+    as singletons; existing components and their roots are untouched),
+    which is what lets the streaming cluster state add points without
+    rebuilding the forest.  ``parent`` is a plain array, so the
+    vectorized helpers above (``find_roots_vec`` / ``union_star``)
+    compose with it — they union by min root rather than by size, which
+    path halving tolerates (any forest stays a valid forest).
+    """
 
     def __init__(self, n: int):
         self.parent = np.arange(n, dtype=np.int64)
         self.size = np.ones(n, dtype=np.int64)
+
+    def __len__(self) -> int:
+        return len(self.parent)
+
+    def grow(self, n: int) -> None:
+        """Extend to ``n`` elements; no-op when already that large.
+
+        Amortized O(new elements): ``parent``/``size`` become views into
+        doubling capacity buffers, so per-batch growth in the streaming
+        state never recopies the whole forest.  The buffer tails are
+        pre-initialized to identity parents / unit sizes and nothing
+        ever writes past the logical length (unions and path halving
+        only touch existing elements), so exposing a longer view always
+        reveals fresh singletons.
+        """
+        old = len(self.parent)
+        if n <= old:
+            return
+        buf = getattr(self, "_parent_buf", None)
+        if buf is None or n > buf.shape[0]:
+            cap = max(2 * old, n, 64)
+            pbuf = np.arange(cap, dtype=np.int64)
+            sbuf = np.ones(cap, dtype=np.int64)
+            pbuf[:old] = self.parent
+            sbuf[:old] = self.size
+            self._parent_buf, self._size_buf = pbuf, sbuf
+        self.parent = self._parent_buf[:n]
+        self.size = self._size_buf[:n]
 
     def find(self, x: int) -> int:
         p = self.parent

@@ -40,6 +40,23 @@ class RangeBackend:
     def fit(self, data: np.ndarray) -> "RangeBackend":
         raise NotImplementedError
 
+    def partial_fit(self, rows: np.ndarray) -> "RangeBackend":
+        """Append ``rows`` to the fitted database (streaming ingest).
+
+        Row indices of the appended points are ``n_points_before ..
+        n_points_after - 1`` — existing indices never move, which is the
+        invariant the streaming cluster state builds on.  The base
+        implementation is the correct-but-quadratic fallback
+        (concatenate + refit); incremental backends override it with a
+        real append (see ``RandomProjectionBackend.partial_fit``).
+        Calling it on an unfitted backend is the same as ``fit``.
+        """
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        data = getattr(self, "_data", None)
+        if data is None:
+            return self.fit(rows)
+        return self.fit(np.concatenate([data, rows], axis=0))
+
     # -- primitives --------------------------------------------------------
     def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
         """Boolean (len(rows), n) adjacency of db[rows] against the db."""
@@ -81,6 +98,12 @@ class RangeBackend:
     def n_points(self) -> int:
         return self._data.shape[0]  # type: ignore[attr-defined]
 
+    @property
+    def data(self) -> np.ndarray:
+        """The fitted database rows (read-only view; row i is query row i)."""
+        assert getattr(self, "_data", None) is not None, "call fit() first"
+        return self._data  # type: ignore[attr-defined]
+
 
 BACKENDS: Dict[str, Type[RangeBackend]] = {}
 
@@ -111,7 +134,9 @@ def make_backend(spec: Union[str, RangeBackend], **kwargs) -> RangeBackend:
         except (TypeError, ValueError):
             pass  # not a module-path-shaped spec: fall through to KeyError
     if spec not in BACKENDS:
-        raise KeyError(f"unknown range backend {spec!r}; known: {sorted(BACKENDS)}")
+        raise ValueError(
+            f"unknown range backend {spec!r}; registered backends: {sorted(BACKENDS)}"
+        )
     return BACKENDS[spec](**kwargs)
 
 

@@ -28,11 +28,30 @@ class ExactBackend(RangeBackend):
         self.block_size = block_size
         self.device = device
         self._data: np.ndarray | None = None
+        self._buf: np.ndarray | None = None  # amortized-doubling append buffer
 
     def fit(self, data: np.ndarray) -> "ExactBackend":
         if self._data is data:
             return self
         self._data = np.ascontiguousarray(data, dtype=np.float32)
+        self._buf = None
+        return self
+
+    def partial_fit(self, rows: np.ndarray) -> "ExactBackend":
+        """Append rows in amortized O(rows): the database lives as a view
+        into a doubling buffer, so streaming ingest never re-copies the
+        whole history per batch."""
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        if self._data is None:
+            return self.fit(rows)
+        n, b = self._data.shape[0], rows.shape[0]
+        if self._buf is None or n + b > self._buf.shape[0]:
+            cap = max(2 * (n if self._buf is None else self._buf.shape[0]), n + b)
+            buf = np.zeros((cap, self._data.shape[1]), dtype=np.float32)
+            buf[:n] = self._data
+            self._buf = buf
+        self._buf[n : n + b] = rows
+        self._data = self._buf[: n + b]
         return self
 
     def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:

@@ -115,6 +115,15 @@ class RandomProjectionBackend(RangeBackend):
         self.mesh_axes = None if mesh_axes is None else tuple(mesh_axes)
         self._data: Optional[np.ndarray] = None
         self._sigs: Optional[np.ndarray] = None
+        # append buffers: ``_data``/``_sigs`` are row views into these;
+        # ``partial_fit`` grows them by amortized doubling so streaming
+        # ingest is O(batch), not O(n), per batch.  Device copies hold
+        # the *capacity*-shaped buffers (zero rows, zero signature words
+        # past ``n`` — exactly the padded-row shape ``_pad_col_hits``
+        # corrects), so the kernel and the jit'd host sweep recompile
+        # once per doubling instead of once per batch.
+        self._data_buf: Optional[np.ndarray] = None
+        self._sigs_buf: Optional[np.ndarray] = None
         self._sigs_dev = None
         self._data_dev = None
         self._plan = None
@@ -146,18 +155,69 @@ class RandomProjectionBackend(RangeBackend):
         d = data.shape[1]
         self.projection = make_projection(d, self.n_bits, self.seed)
         self._sigs = sign_signatures(data, self.projection)
-        self._sigs_dev = jnp.asarray(self._sigs)
-        self._data_dev = None  # device copy is lazy: host paths never read it
         self._data = data
-        if self.mesh is not None:
-            # co-shard the database and its signature table once — the
-            # index plane moves only per-shard counts/bitmaps afterwards
-            from ..distributed.index_plane import shard_database
-
-            self._db_plane, self._sig_plane, self._plan = shard_database(
-                self.mesh, data, self._sigs, self.mesh_axes
-            )
+        self._data_buf, self._sigs_buf = self._data, self._sigs  # cap == n
+        self._sigs_dev = None  # device copies are lazy: rebuilt on demand
+        self._data_dev = None
+        self._reshard()
         return self
+
+    def partial_fit(self, rows: np.ndarray) -> "RandomProjectionBackend":
+        """Append rows + their packed signatures (streaming ingest).
+
+        Host-side work is amortized O(rows · (d + n_bits)) per batch:
+        the new rows are signed through the *existing* projection and
+        written into the doubling buffers; nothing about the
+        already-indexed points is recomputed.  Device copies are
+        invalidated and lazily re-uploaded at capacity shape — an O(n)
+        transfer on the next device-path query (kernel *compilation*
+        stays amortized per doubling; a device-side in-place append is a
+        possible future upgrade).  Under ``mesh=`` the database and
+        signature table are likewise re-co-sharded per append through
+        ``shard_database`` / ``shard_signatures`` so the index plane
+        keeps its padded-tile invariants (zero pad rows with zero
+        signature words).
+        """
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        if self._data is None:
+            return self.fit(rows)
+        n, b = self._data.shape[0], rows.shape[0]
+        if b == 0:
+            return self
+        if n + b > self._data_buf.shape[0]:
+            # round capacity to the db tile so the capacity-padded
+            # kernel operands stay tile-aligned across doublings (the
+            # fit()-shaped index has cap == n and may alias caller
+            # memory, so the first append always lands here and copies
+            # into owned buffers)
+            cap = max(2 * self._data_buf.shape[0], n + b)
+            cap = -(-cap // self.db_tile) * self.db_tile
+            data_buf = np.zeros((cap, self._data.shape[1]), dtype=np.float32)
+            sigs_buf = np.zeros((cap, self._sigs.shape[1]), dtype=np.uint32)
+            data_buf[:n] = self._data
+            sigs_buf[:n] = self._sigs
+            self._data_buf, self._sigs_buf = data_buf, sigs_buf
+        self._data_buf[n : n + b] = rows
+        self._sigs_buf[n : n + b] = sign_signatures(rows, self.projection)
+        self._data = self._data_buf[: n + b]
+        self._sigs = self._sigs_buf[: n + b]
+        self._sigs_dev = None
+        self._data_dev = None
+        self._reshard()
+        return self
+
+    def _reshard(self) -> None:
+        """(Re-)place the database + signature table on the mesh; no-op
+        without one.  Called at fit and after every append — the plane's
+        row plan depends on n, so an append re-pads and re-places the
+        (host-resident) views in one ``device_put`` each."""
+        if self.mesh is None:
+            return
+        from ..distributed.index_plane import shard_database
+
+        self._db_plane, self._sig_plane, self._plan = shard_database(
+            self.mesh, self._data, self._sigs, self.mesh_axes
+        )
 
     @property
     def signatures(self) -> np.ndarray:
@@ -223,10 +283,20 @@ class RandomProjectionBackend(RangeBackend):
         return counts
 
     # -- device evaluation (fused Pallas tile) -----------------------------
+    @property
+    def _dev_pad(self) -> int:
+        """Zero rows past n in the capacity-shaped device operands."""
+        return self._data_buf.shape[0] - self._data.shape[0]
+
     def _device_data(self):
         if self._data_dev is None:
-            self._data_dev = jnp.asarray(self._data)
+            self._data_dev = jnp.asarray(self._data_buf)
         return self._data_dev
+
+    def _device_sigs(self):
+        if self._sigs_dev is None:
+            self._sigs_dev = jnp.asarray(self._sigs_buf)
+        return self._sigs_dev
 
     def _q_block(self, rows: np.ndarray):
         """(q, q_sig) jnp arrays for one row chunk.  Under ``mesh=`` the
@@ -236,7 +306,7 @@ class RandomProjectionBackend(RangeBackend):
         if self.mesh is not None:
             return jnp.asarray(self._data[rows]), jnp.asarray(self._sigs[rows])
         ridx = jnp.asarray(rows)
-        return self._device_data()[ridx], self._sigs_dev[ridx]
+        return self._device_data()[ridx], self._device_sigs()[ridx]
 
     def _device_hits(self, q, q_sig, db, db_sig, nd: int, eps: float) -> np.ndarray:
         """Boolean hits for one query block through
@@ -255,10 +325,15 @@ class RandomProjectionBackend(RangeBackend):
         t_lo, t_hi = self.band(eps)
         q, q_sig = self._q_block(rows)
         counts = hamming_filter_count(
-            q, self._device_data(), q_sig, self._sigs_dev,
+            q, self._device_data(), q_sig, self._device_sigs(),
             eps, t_hi, t_lo=t_lo,
             q_tile=self.q_tile, db_tile=self.db_tile, interpret=self.interpret,
         )
+        if self._dev_pad:
+            # the capacity tail past n is zero rows with zero signature
+            # words — the exact shape the kernel wrappers' padded-row
+            # correction models, applied here for the append slack
+            counts = counts - _pad_col_hits(q_sig, eps, t_lo, t_hi, self._dev_pad)
         return np.asarray(counts).astype(np.int64)
 
     # -- sharded evaluation (the index plane) ------------------------------
@@ -321,13 +396,14 @@ class RandomProjectionBackend(RangeBackend):
                 continue
             if dev:
                 q, q_sig = self._q_block(padded)
+                # nd=n truncates the capacity-pad columns off the bitmap
                 hit[start : start + len(sub)] = self._device_hits(
-                    q, q_sig, self._device_data(), self._sigs_dev, n, eps
+                    q, q_sig, self._device_data(), self._device_sigs(), n, eps
                 )[: len(sub)]
                 continue
             ham = np.asarray(
-                _hamming_sweep(self._sigs_dev[padded], self._sigs_dev)
-            )[: len(sub)]
+                _hamming_sweep(self._device_sigs()[padded], self._device_sigs())
+            )[: len(sub), :n]
             hit[start : start + len(sub)] = self._tile_hits(sub, None, ham, eps)
         return hit
 
@@ -347,7 +423,7 @@ class RandomProjectionBackend(RangeBackend):
                 db, db_sig = jnp.asarray(self._data[cols]), jnp.asarray(self._sigs[cols])
             else:
                 cidx = jnp.asarray(cols)
-                db, db_sig = self._device_data()[cidx], self._sigs_dev[cidx]
+                db, db_sig = self._device_data()[cidx], self._device_sigs()[cidx]
             for start, sub, padded in self._padded_chunks(rows):
                 q, q_sig = self._q_block(padded)
                 hit[start : start + len(sub)] = self._device_hits(
@@ -392,8 +468,8 @@ class RandomProjectionBackend(RangeBackend):
                 ]
                 continue
             ham = np.asarray(
-                _hamming_sweep(self._sigs_dev[padded], self._sigs_dev)
-            )[: len(sub)]
+                _hamming_sweep(self._device_sigs()[padded], self._device_sigs())
+            )[: len(sub), : self._data.shape[0]]
             counts[start : start + len(sub)] = self._tile_counts(sub, ham, eps)
         return counts
 
@@ -445,7 +521,13 @@ def suggest_margin(
     if dev:
         q = jnp.asarray(backend._data[rows])
         q_sig = jnp.asarray(backend._sigs[rows])
-        db, db_sig = backend._device_data(), backend._sigs_dev
+        # occupancy stats must price real pairs only, never streaming
+        # append slack — reuse the cached device buffers when they are
+        # exactly the fitted rows, upload exact-shaped copies otherwise
+        if backend._dev_pad:
+            db, db_sig = jnp.asarray(backend._data), jnp.asarray(backend._sigs)
+        else:
+            db, db_sig = backend._device_data(), backend._device_sigs()
     else:
         ham = hamming_numpy(backend._sigs[rows], backend._sigs)
 

@@ -1,0 +1,16 @@
+"""``repro.stream`` — incremental LAF-DBSCAN: online ingest, cluster
+maintenance, and a serving-grade assignment API.
+
+* :class:`~repro.stream.ingest.StreamingLAF` — the batch driver:
+  ``partial_fit(rows)`` appends to the index and maintains the clusters
+  (new-vs-all range queries only; old points promote to core off the
+  transposed hits), ``assign(queries)`` serves unseen vectors.
+* :class:`~repro.stream.state.StreamingClusterState` — counts, core
+  mask, growable union-find, and the min-core-neighbor border rule.
+* :class:`~repro.stream.serve.ClusterIndex` — the immutable serving
+  snapshot (centroid shortlist + band-verified assignment).
+"""
+
+from .ingest import IngestReport, StreamingLAF  # noqa: F401
+from .serve import AssignResult, ClusterIndex  # noqa: F401
+from .state import StreamingClusterState  # noqa: F401

@@ -1,0 +1,280 @@
+"""Streaming LAF-DBSCAN: the batch ingest driver.
+
+``StreamingLAF`` owns a range-query backend (``repro.index``) and a
+:class:`~repro.stream.state.StreamingClusterState`, and turns embedding
+batches into maintained clusters:
+
+1. ``backend.partial_fit(batch)`` appends the rows + packed signatures
+   (amortized doubling — no index rebuild);
+2. **only the new rows** are ranged against the database (new-vs-all
+   through the fused tile / host band evaluator); old points' counts are
+   bumped from the transposed hits, so a point crossing tau *promotes*
+   to core and merges clusters without recomputing a single old edge;
+3. optional learned-estimator fast path: new rows predicted below
+   ``alpha * tau`` skip their full range query (they are verified
+   against the current core set only — the online analog of the paper's
+   partial-neighbor map 𝓔) and promote later if their partial count
+   crosses tau;
+4. a ``decay`` hook can evict rows per batch; deletions that demote or
+   kill a core point trigger a rebuild (union-find cannot split).
+
+With the estimator disabled the maintained partition is **identical**
+to a from-scratch batch run on the accumulated data (same counts, same
+core set, same core-graph components, same min-core-neighbor border
+rule) — see ``tests/test_stream.py`` for the ARI == 1.0 parity checks.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..configs.laf_dbscan import StreamConfig
+from ..core.range_query import pack_bitmap, unpack_bitmap
+from ..index import make_backend
+from .state import StreamingClusterState
+
+__all__ = ["StreamingLAF", "IngestReport"]
+
+
+@dataclass
+class IngestReport:
+    """Per-batch accounting (the streaming analog of ``DBSCANResult.extras``)."""
+
+    n_new: int
+    n_executed: int          # new rows that paid a full range query
+    n_skipped: int           # new rows on the estimator fast path
+    n_promoted: int          # old/skipped points that crossed tau this batch
+    n_points: int            # database size after the batch
+    n_clusters: int
+    elapsed_s: float
+    rebuilt: bool = False
+    extras: dict = field(default_factory=dict)
+
+
+class StreamingLAF:
+    """Incremental LAF-DBSCAN over an append-mostly embedding stream.
+
+    Args:
+      eps, tau: the DBSCAN operating point (fixed per stream — the
+        maintained counts are eps-specific).
+      backend: ``repro.index`` spec — a registry name (fresh instance)
+        or a constructed ``RangeBackend`` (which keeps its own index
+        configuration — passing extra index kwargs alongside one is an
+        error).  A *pre-fitted* instance warm-starts the stream: its
+        rows are absorbed as batch zero, so ``fit`` offline then stream
+        online just works.  ``partial_fit`` must append without moving
+        existing row indices (all shipped backends do).
+      estimator: optional cardinality estimator for the ingest fast
+        path — either a ``TrainedEstimator`` (``predict_counts(v, eps)``)
+        or any callable ``(vectors) -> predicted_counts``.
+      config: a :class:`repro.configs.laf_dbscan.StreamConfig` supplying
+        defaults for the remaining knobs; explicit kwargs win.
+      decay: optional per-batch eviction hook ``(state) -> indices`` —
+        whatever it returns is evicted after the batch is absorbed.
+    """
+
+    def __init__(
+        self,
+        eps: float,
+        tau: int,
+        *,
+        backend="random_projection",
+        device=None,
+        estimator=None,
+        config: Optional[StreamConfig] = None,
+        alpha: Optional[float] = None,
+        use_estimator: Optional[bool] = None,
+        block_size: Optional[int] = None,
+        decay: Optional[Callable] = None,
+        max_dead_frac: Optional[float] = None,
+        **backend_kwargs,
+    ):
+        cfg = config or StreamConfig()
+        self.eps = float(eps)
+        self.tau = int(tau)
+        self.alpha = cfg.alpha if alpha is None else float(alpha)
+        self.use_estimator = (
+            cfg.use_estimator if use_estimator is None else bool(use_estimator)
+        )
+        self.block_size = cfg.batch_rows if block_size is None else block_size
+        self.decay = decay
+        self.max_dead_frac = cfg.max_dead_frac if max_dead_frac is None else max_dead_frac
+        self.config = cfg
+        self.estimator = estimator
+        from ..index.base import RangeBackend
+
+        if isinstance(backend, RangeBackend):
+            # an instance keeps its own configuration (make_backend's
+            # passthrough) — silently dropping these would mean serving
+            # on a different index than the caller specified
+            dropped = sorted(backend_kwargs) + (["device"] if device is not None else [])
+            if dropped:
+                raise ValueError(
+                    f"backend is a constructed instance; index kwargs {dropped} "
+                    f"would be ignored — configure the instance instead, or "
+                    f"pass the registry name"
+                )
+        self.backend = make_backend(
+            backend,
+            block_size=self.block_size,
+            device="auto" if device is None else device,
+            **backend_kwargs,
+        )
+        self.state = StreamingClusterState(eps, tau)
+        self._serve = None  # ClusterIndex snapshot, keyed on state.version
+        if getattr(self.backend, "_data", None) is not None and self.backend.n_points:
+            # warm start from a pre-fitted index: absorb its rows into
+            # the cluster state so state indices stay aligned with
+            # backend rows (fit offline, stream online)
+            self._absorb(np.ascontiguousarray(self.backend.data))
+
+    # -- estimator glue ----------------------------------------------------
+    def _predict(self, vectors: np.ndarray) -> Optional[np.ndarray]:
+        if self.estimator is None or not self.use_estimator:
+            return None
+        if hasattr(self.estimator, "predict_counts"):
+            return np.asarray(self.estimator.predict_counts(vectors, self.eps))
+        return np.asarray(self.estimator(vectors))
+
+    # -- ingest ------------------------------------------------------------
+    def partial_fit(self, batch: np.ndarray) -> IngestReport:
+        """Absorb one embedding batch; returns the batch report."""
+        batch = np.ascontiguousarray(batch, dtype=np.float32)
+        if batch.ndim != 2 or batch.shape[0] == 0:
+            raise ValueError(f"batch must be (rows, d) with rows >= 1, got {batch.shape}")
+        t0 = time.time()
+        self.backend.partial_fit(batch)
+        rep = self._absorb(batch)
+        rebuilt = False
+        if self.decay is not None:
+            idx = self.decay(self.state)
+            if idx is not None and len(idx):
+                rebuilt = self.evict(idx)
+        rep.rebuilt = rebuilt
+        rep.elapsed_s = time.time() - t0
+        # refresh state-derived fields after the decay hook: an eviction
+        # (or rebuild) changes the database the report describes
+        rep.n_points = self.state.n
+        rep.n_clusters = self.state.n_clusters
+        return rep
+
+    def _absorb(self, batch: np.ndarray) -> IngestReport:
+        """Cluster-maintenance pass for rows the backend already holds."""
+        state, bk, eps = self.state, self.backend, self.eps
+        pre_core = np.nonzero(state.core[: state.n] & state.alive[: state.n])[0]
+        new_idx = state.extend(batch.shape[0])
+
+        pred = self._predict(batch)
+        exec_mask = (
+            np.ones(len(new_idx), dtype=bool)
+            if pred is None
+            else pred >= self.alpha * self.tau
+        )
+        skip_idx = new_idx[~exec_mask]
+        if len(skip_idx):
+            # fast path: verify skipped rows against the core set only
+            # (the online 𝓔 lower bound — O(|cores|) instead of O(n))
+            hit_cores = (
+                bk.query_hits_subset(skip_idx, pre_core, eps)
+                if len(pre_core)
+                else np.zeros((len(skip_idx), 0), dtype=bool)
+            )
+            state.seed_skipped(skip_idx, pre_core, hit_cores)
+
+        exec_idx = new_idx[exec_mask]
+        packed: list[tuple[np.ndarray, np.ndarray]] = []
+        for start in range(0, len(exec_idx), self.block_size):
+            rows = exec_idx[start : start + self.block_size]
+            hit = bk.query_hits(rows, eps)
+            # exclude the whole executed set from the transposed bumps:
+            # a same-batch pair split across two blocks would otherwise
+            # double-count for the earlier block's endpoint
+            state.ingest_rows(rows, hit, exclude=exec_idx)
+            packed.append((rows, pack_bitmap(hit)))
+
+        # one promotion round closes the core set: new executed rows are
+        # core straight from their counts; old/skipped points crossing
+        # tau are re-queried for their exact counts + core-core edges
+        promoted = state.take_promotions()
+        requery = promoted[~np.isin(promoted, exec_idx, assume_unique=True)]
+        for start in range(0, len(requery), self.block_size):
+            rows = requery[start : start + self.block_size]
+            state.promote(rows, bk.query_hits(rows, eps))
+        for rows, pk in packed:
+            state.apply_core_rows(rows, unpack_bitmap(pk, state.n))
+
+        self._serve = None
+        return IngestReport(
+            n_new=len(new_idx),
+            n_executed=len(exec_idx),
+            n_skipped=len(skip_idx),
+            n_promoted=len(requery),
+            n_points=state.n,
+            n_clusters=-1,  # filled by partial_fit after decay runs
+            elapsed_s=0.0,
+        )
+
+    # -- deletion ----------------------------------------------------------
+    def evict(self, idx: np.ndarray) -> bool:
+        """Tombstone rows; rebuilds when required.  Returns True iff a
+        rebuild happened (a core died/demoted, or tombstones piled past
+        ``max_dead_frac``)."""
+        idx = np.asarray(idx, dtype=np.int64)
+        hit = self.backend.query_hits(idx, self.eps)
+        need = self.state.evict(idx, hit)
+        state = self.state
+        if need or state.n_dead > self.max_dead_frac * max(state.n, 1):
+            self.rebuild()
+            return True
+        self._serve = None
+        return False
+
+    def rebuild(self) -> None:
+        """Compact tombstones away: refit the backend on the live rows
+        and replay them through the exact ingest path in one batch.
+        O(n_live^2) — the price of deletions in density clustering; the
+        driver amortizes it behind ``max_dead_frac``."""
+        live = np.nonzero(self.state.alive[: self.state.n])[0]
+        data = np.ascontiguousarray(self.backend.data[live])
+        self.backend.fit(data)
+        self.state = StreamingClusterState(self.eps, self.tau)
+        self._serve = None
+        if len(data):
+            est, self.use_estimator = self.use_estimator, False
+            try:
+                self._absorb(data)
+            finally:
+                self.use_estimator = est
+
+    # -- serving -----------------------------------------------------------
+    def snapshot(self):
+        """Current :class:`~repro.stream.serve.ClusterIndex` (cached per
+        state version — ingest invalidates it)."""
+        from .serve import ClusterIndex
+
+        if self._serve is None or self._serve.version != self.state.version:
+            self._serve = ClusterIndex.from_stream(self)
+        return self._serve
+
+    def assign(self, queries: np.ndarray, **kw):
+        """Serving-grade assignment of unseen vectors — see
+        :meth:`repro.stream.serve.ClusterIndex.assign`."""
+        kw.setdefault("shortlist", self.config.shortlist)
+        kw.setdefault("min_hits", self.config.min_hits)
+        return self.snapshot().assign(queries, **kw)
+
+    # -- views -------------------------------------------------------------
+    def labels(self) -> np.ndarray:
+        return self.state.labels()
+
+    @property
+    def n_points(self) -> int:
+        return self.state.n
+
+    @property
+    def n_clusters(self) -> int:
+        return self.state.n_clusters

@@ -1,0 +1,161 @@
+"""Serving-grade cluster assignment for unseen vectors.
+
+The clustering engines label points *of the database*; serving needs
+the other direction — given live-traffic query embeddings that are not
+in the database, which maintained cluster does each belong to, and how
+sure are we?  ``ClusterIndex`` is an immutable snapshot built from a
+:class:`~repro.stream.ingest.StreamingLAF` (or any labels + data pair):
+
+1. **centroid shortlist** — score the query against the per-cluster
+   centroids (one small matmul) and expand only the best ``shortlist``
+   clusters, the retrieval trick ``examples/recsys_serving.py`` serves;
+2. **band-verified range query** — inside the shortlist, candidates are
+   pruned with the same signed-RP Hamming band the index uses (signature
+   XOR+popcount, sure-accept below ``t_lo``, exact dot only for the
+   band), so per-query cost is |shortlist members| signature words plus
+   a handful of dots — never an O(n·d) scan;
+3. **assignment** — the query joins the cluster holding the plurality
+   of its eps-neighbors (DBSCAN's border rule, generalized to ties);
+   confidence is the fraction of its found eps-neighbors in that
+   cluster.  No eps-neighbor in the shortlist => noise (-1), confidence
+   0 — exactly how DBSCAN treats a point no core reaches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..index.signatures import band_hits, hamming_numpy, sign_signatures
+
+__all__ = ["AssignResult", "ClusterIndex"]
+
+
+@dataclass
+class AssignResult:
+    labels: np.ndarray       # (q,) int64: cluster id or -1 (noise/unmatched)
+    confidence: np.ndarray   # (q,) float32 in [0, 1]
+    n_hits: np.ndarray       # (q,) int64: eps-neighbors found in the shortlist
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+
+class ClusterIndex:
+    """Immutable serving snapshot: centroids + per-cluster members (+ the
+    signature table when the backing index is signed-RP)."""
+
+    def __init__(
+        self,
+        data: np.ndarray,
+        labels: np.ndarray,
+        eps: float,
+        *,
+        sigs: Optional[np.ndarray] = None,
+        projection: Optional[np.ndarray] = None,
+        band: Optional[tuple[int, int]] = None,
+        version: int = 0,
+    ):
+        self.eps = float(eps)
+        self.version = version
+        self._data = data
+        self._sigs = sigs
+        self._projection = projection
+        self._band = band
+        labels = np.asarray(labels)
+        self.n_clusters = int(labels.max()) + 1 if labels.size and labels.max() >= 0 else 0
+        # members grouped by label: one argsort, then slice per cluster
+        mask = labels >= 0
+        idx = np.nonzero(mask)[0]
+        order = np.argsort(labels[idx], kind="stable")
+        self._members = idx[order]
+        self._offsets = np.searchsorted(labels[idx][order], np.arange(self.n_clusters + 1))
+        cents = np.zeros((self.n_clusters, data.shape[1]), dtype=np.float32)
+        for c in range(self.n_clusters):
+            cents[c] = data[self.members(c)].mean(axis=0)
+        norms = np.linalg.norm(cents, axis=1, keepdims=True)
+        self.centroids = cents / np.maximum(norms, 1e-12)
+
+    @classmethod
+    def from_stream(cls, stream) -> "ClusterIndex":
+        bk = stream.backend
+        return cls(
+            bk.data,
+            stream.state.labels(),
+            stream.eps,
+            sigs=getattr(bk, "signatures", None),
+            projection=getattr(bk, "projection", None),
+            band=bk.band(stream.eps) if hasattr(bk, "band") else None,
+            version=stream.state.version,
+        )
+
+    def members(self, c: int) -> np.ndarray:
+        """Database row indices of cluster ``c``."""
+        return self._members[self._offsets[c] : self._offsets[c + 1]]
+
+    def shortlist(self, queries: np.ndarray, k: int) -> np.ndarray:
+        """(q, k) best cluster ids by centroid cosine score."""
+        q = _unit_rows(queries)
+        k = min(k, self.n_clusters)
+        scores = q @ self.centroids.T
+        top = np.argpartition(-scores, k - 1, axis=1)[:, :k]
+        # order the shortlist best-first (argpartition is unordered)
+        row = np.arange(len(q))[:, None]
+        return top[row, np.argsort(-scores[row, top], axis=1)]
+
+    def assign(
+        self, queries: np.ndarray, *, shortlist: int = 8, min_hits: int = 1
+    ) -> AssignResult:
+        """Cluster ids + confidence for unseen query vectors."""
+        queries = np.ascontiguousarray(queries, dtype=np.float32)
+        if queries.ndim == 1:
+            queries = queries[None, :]
+        nq = queries.shape[0]
+        labels = np.full(nq, -1, dtype=np.int64)
+        conf = np.zeros(nq, dtype=np.float32)
+        hits_out = np.zeros(nq, dtype=np.int64)
+        if self.n_clusters == 0:
+            return AssignResult(labels, conf, hits_out)
+        q = _unit_rows(queries)
+        top = self.shortlist(q, shortlist)
+        q_sig = (
+            sign_signatures(q, self._projection)
+            if self._sigs is not None and self._projection is not None and self._band is not None
+            else None
+        )
+        thresh = 1.0 - self.eps
+        cluster_of = np.empty(len(self._data), dtype=np.int64)
+        cluster_of[self._members] = np.repeat(
+            np.arange(self.n_clusters), np.diff(self._offsets)
+        )
+        for i in range(nq):
+            cand = np.concatenate([self.members(c) for c in top[i]])
+            if q_sig is not None:
+                # the one shared dual-threshold predicate (band_hits):
+                # dots are only materialized for the ambiguous band
+                t_lo, t_hi = self._band
+                ham = hamming_numpy(q_sig[i : i + 1], self._sigs[cand])[0]
+                dots = np.zeros(len(cand), dtype=np.float32)
+                bi = np.nonzero((ham <= t_hi) & (ham > t_lo))[0]
+                if len(bi):
+                    dots[bi] = self._data[cand[bi]] @ q[i]
+                hit = band_hits(dots, ham, self.eps, t_lo, t_hi)
+            else:
+                hit = (self._data[cand] @ q[i]) > thresh
+            hit_members = cand[hit]
+            total = len(hit_members)
+            hits_out[i] = total
+            if total < max(min_hits, 1):
+                continue
+            tally = np.bincount(cluster_of[hit_members], minlength=self.n_clusters)
+            best = int(tally.argmax())
+            labels[i] = best
+            conf[i] = tally[best] / total
+        return AssignResult(labels, conf, hits_out)
+
+
+def _unit_rows(x: np.ndarray) -> np.ndarray:
+    x = np.ascontiguousarray(x, dtype=np.float32)
+    return x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-12)

@@ -1,0 +1,252 @@
+"""Incremental LAF-DBSCAN cluster state.
+
+The batch engines recompute the whole eps-graph per run; this module
+keeps just enough state to maintain the *same partition* online:
+
+* exact per-point neighbor counts (``counts``) — for points whose range
+  query was executed; a lower bound for skipped (predicted-stop) points,
+  mirroring the paper's partial-neighbor map |𝓔| semantics;
+* the core mask and a growable :class:`~repro.core.union_find.UnionFind`
+  over the core-core eps-graph;
+* per-point border ownership (``owner``) — the **minimum-index core
+  neighbor**, which is exactly the "first core finder" rule both batch
+  engines implement (they scan core rows in ascending index order), so
+  streaming labels match a from-scratch run point for point, not just
+  up to border ties.
+
+Correctness invariant (why one pass per batch suffices): every eps-pair
+is observed exactly once, by the *later* arrival's range query (new
+rows query old + new); a pair between two old points was observed when
+the younger of them arrived.  Core-core union edges are therefore
+closed under three events — a new core's own row, an old point whose
+count crosses tau (``promote`` re-queries it against everything), and
+nothing else — because an edge between two points that were both
+already core was unioned when the younger one arrived or promoted.
+
+Deletion is the hard direction (union-find cannot split): ``evict``
+tombstones rows and decrements neighbor counts, and reports whether the
+removal demoted a core point or killed one — the caller (the ingest
+driver) must rebuild then.  That asymmetry is inherent to density
+clustering, not an implementation shortcut (cf. streaming metric-DBSCAN
+literature: inserts are cheap, deletes force re-verification).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..core.union_find import UnionFind, compact_labels_from_parent, union_star
+
+__all__ = ["StreamingClusterState"]
+
+
+def _grow_to(arr: np.ndarray, n: int, fill) -> np.ndarray:
+    """Amortized-doubling growth of a 1-d state array to >= n entries."""
+    if arr.shape[0] >= n:
+        return arr
+    cap = max(2 * arr.shape[0], n, 64)
+    out = np.full(cap, fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+class StreamingClusterState:
+    """Cluster bookkeeping for one (eps, tau) operating point.
+
+    The driver (``repro.stream.ingest``) owns the range-query backend
+    and feeds hit rows in; this class never touches vectors.  All hit
+    rows handed in are boolean over the *current* ``n`` points and are
+    masked by ``alive`` internally, so tombstoned rows neither count nor
+    union.
+    """
+
+    def __init__(self, eps: float, tau: int):
+        self.eps = float(eps)
+        self.tau = int(tau)
+        self.n = 0
+        self.counts = np.zeros(0, dtype=np.int64)
+        self.core = np.zeros(0, dtype=bool)
+        self.alive = np.zeros(0, dtype=bool)
+        self.queried = np.zeros(0, dtype=bool)  # False => counts is a lower bound
+        self.owner = np.full(0, -1, dtype=np.int64)  # min-index core neighbor
+        self.uf = UnionFind(0)
+        self.version = 0  # bumped per mutation epoch; serving snapshots key on it
+
+    # -- growth ------------------------------------------------------------
+    def extend(self, k: int) -> np.ndarray:
+        """Register k new points; returns their (contiguous) indices."""
+        new = np.arange(self.n, self.n + k, dtype=np.int64)
+        self.n += k
+        self.counts = _grow_to(self.counts, self.n, 0)
+        self.core = _grow_to(self.core, self.n, False)
+        self.alive = _grow_to(self.alive, self.n, False)
+        self.queried = _grow_to(self.queried, self.n, False)
+        self.owner = _grow_to(self.owner, self.n, -1)
+        self.alive[new] = True
+        self.uf.grow(self.n)
+        self.version += 1
+        return new
+
+    # -- per-batch updates (driven by ingest) ------------------------------
+    def _masked(self, hit: np.ndarray) -> np.ndarray:
+        return hit & self.alive[: hit.shape[1]][None, :]
+
+    def ingest_rows(
+        self, rows: np.ndarray, hit: np.ndarray, exclude: Optional[np.ndarray] = None
+    ) -> None:
+        """Count update for newly added, *executed* rows.
+
+        ``hit`` is (len(rows), n) — each row's complete adjacency against
+        every current point (old + this batch + itself).  Own counts are
+        the row sums; every other point's count is bumped by the
+        transposed hits, **except** the points in ``exclude`` — the whole
+        batch's executed set (defaults to ``rows``).  Each eps-pair must
+        land exactly once per endpoint: an executed point's count comes
+        from its own complete row, so a bump from a *same-batch* peer's
+        row (possibly processed in a different block) would double-count
+        the pair; callers chunking one batch over several calls must
+        pass the full executed set.
+        """
+        hit = self._masked(hit)
+        self.counts[rows] = hit.sum(axis=1, dtype=np.int64)
+        self.queried[rows] = True
+        bump = hit.sum(axis=0, dtype=np.int64)
+        bump[rows if exclude is None else exclude] = 0
+        self.counts[: len(bump)] += bump
+
+    def seed_skipped(self, rows: np.ndarray, core_idx: np.ndarray, hit_cores: np.ndarray) -> None:
+        """Count lower bound + ownership for skipped (predicted-stop) rows.
+
+        ``hit_cores`` is (len(rows), len(core_idx)) against the current
+        core set only — the online analog of the paper's map 𝓔: a
+        skipped point accrues neighbors only from core/executed queries,
+        never pays a full range query, and promotes through
+        ``promote`` if its lower bound crosses tau.  Nothing is bumped
+        transposed (core points are already core; non-core old points
+        keep the executed-only semantics of |𝓔|).
+        """
+        if len(core_idx) == 0:
+            self.counts[rows] = 0
+            return
+        self.counts[rows] = hit_cores.sum(axis=1, dtype=np.int64)
+        any_hit = hit_cores.any(axis=1)
+        first = core_idx[hit_cores.argmax(axis=1)]  # min core idx (core_idx sorted)
+        self.owner[rows[any_hit]] = first[any_hit]
+
+    def take_promotions(self) -> np.ndarray:
+        """Alive non-core points whose count has crossed tau.
+
+        Marks them core immediately (so the promotion re-queries union
+        promoted-promoted edges) and returns their indices; the driver
+        must follow up with ``promote`` rows for each.
+        """
+        idx = np.nonzero(self.alive & ~self.core & (self.counts >= self.tau))[0]
+        self.core[idx] = True
+        return idx
+
+    def promote(self, rows: np.ndarray, hit: np.ndarray) -> None:
+        """Full re-query rows of freshly promoted points.
+
+        Sets their exact counts (the re-query sees everything, including
+        points their lower bound missed), unions them with every core
+        neighbor, and claims their non-core neighbors — **without**
+        bumping anyone else's count: every pair in these rows was either
+        already counted by the younger endpoint's arrival or is
+        deliberately excluded by the skip semantics.
+        """
+        hit = self._masked(hit)
+        self.counts[rows] = hit.sum(axis=1, dtype=np.int64)
+        self.queried[rows] = True
+        self.apply_core_rows(rows, hit)
+
+    def apply_core_rows(self, rows: np.ndarray, hit: np.ndarray) -> None:
+        """Union + ownership from the hit rows of core points.
+
+        For each core row r: star-union {r} ∪ (N(r) ∩ core), and offer r
+        as owner to its non-core neighbors (min-index rule).  Rows that
+        are not core only pick up their own ownership (their core
+        neighbors are in their row).
+        """
+        hit = self._masked(hit)
+        core = self.core[: hit.shape[1]]
+        hit_core = hit & core[None, :]
+        row_core = self.core[rows]
+        for bi in np.nonzero(row_core)[0]:
+            union_star(self.uf.parent, np.nonzero(hit_core[bi])[0])
+        # ownership offers: min over {core rows in this block} ∪ {min
+        # core neighbor in each non-core row's own adjacency}
+        sub = hit[row_core]
+        if sub.shape[0]:
+            subrows = rows[row_core]
+            claimed = sub.any(axis=0)
+            cand = claimed & ~core
+            if cand.any():
+                first = subrows[sub[:, cand].argmax(axis=0)]
+                # subrows ascend, but keep an explicit min for safety
+                cur = self.owner[: hit.shape[1]][cand]
+                best = np.where((cur < 0) | (first < cur), first, cur)
+                self.owner[np.nonzero(cand)[0]] = best
+        nc = ~row_core
+        if nc.any():
+            ncrows = rows[nc]
+            own_core = hit_core[nc]
+            any_hit = own_core.any(axis=1)
+            first = own_core.argmax(axis=1)
+            cur = self.owner[ncrows]
+            best = np.where(any_hit & ((cur < 0) | (first < cur)), first, cur)
+            self.owner[ncrows] = best
+        self.version += 1
+
+    # -- deletion ----------------------------------------------------------
+    def evict(self, rows: np.ndarray, hit: np.ndarray) -> bool:
+        """Tombstone rows; returns True when a rebuild is required.
+
+        ``hit`` is the evicted rows' adjacency against all current
+        points (queried *before* tombstoning).  Counts of surviving
+        points are decremented so future promotions stay sound.  A
+        rebuild is required when the eviction kills a core point or
+        demotes one (union-find cannot split) — the driver handles it.
+        """
+        rows = np.asarray(rows, dtype=np.int64)
+        rows, first = np.unique(rows, return_index=True)  # dedupe: a repeated
+        hit = hit[first]                                  # index must decrement once
+        live = self.alive[rows]
+        rows, hit = rows[live], hit[live]  # drop already-dead rows *and*
+        if len(rows) == 0:                 # their hit rows, else survivors
+            return False                   # get decremented twice
+        killed_core = bool(self.core[rows].any())
+        hit = self._masked(hit)
+        dec = hit.sum(axis=0, dtype=np.int64)
+        dec[rows] = 0
+        self.alive[rows] = False
+        self.counts[: len(dec)] -= dec
+        demoted = self.alive[: self.n] & self.core[: self.n] & (
+            self.counts[: self.n] < self.tau
+        )
+        self.version += 1
+        return killed_core or bool(demoted.any())
+
+    @property
+    def n_dead(self) -> int:
+        return int(self.n - self.alive[: self.n].sum())
+
+    # -- extraction --------------------------------------------------------
+    def labels(self) -> np.ndarray:
+        """(n,) labels: -1 noise/dead, clusters 0..k-1 (compacted by
+        smallest member, the batch engines' convention)."""
+        active = self.core[: self.n] & self.alive[: self.n]
+        labels = compact_labels_from_parent(self.uf.parent[: self.n].copy(), active)
+        border = self.alive[: self.n] & ~self.core[: self.n] & (self.owner[: self.n] >= 0)
+        bidx = np.nonzero(border)[0]
+        if len(bidx):
+            owners = self.owner[bidx]
+            ok = self.alive[owners] & self.core[owners]
+            labels[bidx[ok]] = labels[owners[ok]]
+        return labels
+
+    @property
+    def n_clusters(self) -> int:
+        labels = self.labels()
+        return int(labels.max()) + 1 if labels.size and labels.max() >= 0 else 0

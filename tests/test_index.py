@@ -169,8 +169,117 @@ def test_query_counts_chunking_consistent(fixture_data):
 
 
 def test_make_backend_unknown_name():
-    with pytest.raises(KeyError):
+    """Unknown names raise ValueError listing the registered backends
+    (not the bare KeyError the lazy-registry change used to leak)."""
+    with pytest.raises(ValueError, match=r"unknown range backend 'faiss'.*exact"):
         as_fitted("faiss", np.zeros((4, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# partial_fit: streaming append == one-shot fit, on every evaluator
+# ---------------------------------------------------------------------------
+
+
+def test_partial_fit_exact_matches_full_fit(fixture_data):
+    full = ExactBackend().fit(fixture_data)
+    inc = ExactBackend()
+    for start in range(0, len(fixture_data), 400):
+        inc.partial_fit(fixture_data[start : start + 400])
+    assert inc.n_points == len(fixture_data)
+    rows = np.arange(0, len(fixture_data), 13)
+    np.testing.assert_array_equal(
+        inc.query_hits(rows, EPS), full.query_hits(rows, EPS)
+    )
+    np.testing.assert_array_equal(
+        inc.query_counts(rows, EPS), full.query_counts(rows, EPS)
+    )
+
+
+@pytest.mark.parametrize("device", [False, True])
+def test_partial_fit_rp_matches_full_fit(fixture_data, device):
+    """Appended rows + packed signatures reproduce the one-shot index
+    bit for bit: same projection, same signatures, same hit sets, on
+    the host path and through the fused tile (whose capacity-padded
+    operands exercise the zero-row correction)."""
+    cfg = dict(n_bits=64, margin=3.0, seed=3, chunk=64)
+    if device:
+        cfg.update(device=True, interpret=True, q_tile=32, db_tile=128)
+    else:
+        cfg.update(device=False)
+    full = RandomProjectionBackend(**cfg).fit(fixture_data)
+    inc = RandomProjectionBackend(**cfg)
+    for start in range(0, len(fixture_data), 379):  # ragged batches
+        inc.partial_fit(fixture_data[start : start + 379])
+    np.testing.assert_array_equal(inc.signatures, full.signatures)
+    rows = np.arange(0, len(fixture_data), 11)
+    np.testing.assert_array_equal(inc.query_hits(rows, EPS), full.query_hits(rows, EPS))
+    np.testing.assert_array_equal(
+        inc.query_counts(rows, EPS), full.query_counts(rows, EPS)
+    )
+    cols = np.arange(3, 1100, 7)
+    np.testing.assert_array_equal(
+        inc.query_hits_subset(rows, cols, EPS),
+        full.query_hits_subset(rows, cols, EPS),
+    )
+
+
+def test_partial_fit_rp_eps_gt_one_capacity_correction(fixture_data):
+    """eps > 1 makes the zero rows in the append slack pass the dot
+    test — the capacity-pad correction must subtract them exactly."""
+    data = fixture_data[:700]
+    cfg = dict(n_bits=64, seed=3, chunk=64, device=True, interpret=True,
+               q_tile=32, db_tile=128)
+    full = RandomProjectionBackend(**cfg).fit(data)
+    inc = RandomProjectionBackend(**cfg)
+    inc.partial_fit(data[:450])
+    inc.partial_fit(data[450:])
+    rows = np.arange(40)
+    np.testing.assert_array_equal(
+        inc.query_counts(rows, 1.2), full.query_counts(rows, 1.2)
+    )
+    np.testing.assert_array_equal(
+        inc.query_hits(rows, 1.2), full.query_hits(rows, 1.2)
+    )
+
+
+def test_partial_fit_on_unfitted_backend_is_fit(fixture_data):
+    bk = RandomProjectionBackend(n_bits=64, seed=3)
+    bk.partial_fit(fixture_data[:300])
+    ref = RandomProjectionBackend(n_bits=64, seed=3).fit(fixture_data[:300])
+    np.testing.assert_array_equal(bk.signatures, ref.signatures)
+
+
+def test_partial_fit_resharding_on_mesh(forced_device_run):
+    """Sharded append: partial_fit under mesh= re-co-shards the rows +
+    signature table and the plane's sweeps stay parity with the host
+    oracle at every growth step (incl. non-shard-multiple sizes)."""
+    out = forced_device_run(
+        """
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        from repro.data.synthetic import make_angular_clusters
+        from repro.index import RandomProjectionBackend
+
+        data, _ = make_angular_clusters(610, 32, 8, kappa=200, noise_frac=0.3, seed=2)
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        cfg = dict(n_bits=64, seed=3, chunk=64, q_tile=32, db_tile=128,
+                   device=True, interpret=True)
+        inc = RandomProjectionBackend(mesh=mesh, **cfg)
+        host = RandomProjectionBackend(device=False, n_bits=64, seed=3, chunk=64)
+        checks = []
+        for cut in [(0, 230), (230, 450), (450, 610)]:
+            inc.partial_fit(data[cut[0]:cut[1]])
+            host.fit(np.ascontiguousarray(data[:cut[1]]))
+            rows = np.arange(0, cut[1], 9)
+            checks.append(bool(
+                np.array_equal(inc.query_hits(rows, 0.55), host.query_hits(rows, 0.55))
+                and np.array_equal(inc.query_counts(rows, 0.55), host.query_counts(rows, 0.55))
+            ))
+        print("RESULT:" + __import__("json").dumps({"parity": checks}))
+        """
+    )
+    assert out["parity"] == [True, True, True]
 
 
 def test_neighbor_lists_backend_dispatch(fixture_data):

@@ -1,0 +1,366 @@
+"""repro.stream: streaming ingest parity vs from-scratch batch runs,
+cluster-merge and core-promotion events, the estimator fast path,
+eviction semantics, and the serving assignment API.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dbscan import dbscan_parallel
+from repro.core.laf_dbscan import laf_dbscan
+from repro.core.metrics import adjusted_rand_index
+from repro.core.pipeline import LAFPipeline
+from repro.data.synthetic import make_angular_clusters
+from repro.index import ExactBackend
+from repro.stream import StreamingLAF, StreamingClusterState
+
+EPS, TAU = 0.35, 5
+
+
+@pytest.fixture(scope="module")
+def stream_data():
+    data, _ = make_angular_clusters(1500, 32, 12, kappa=200, noise_frac=0.3, seed=1)
+    # shuffled arrival order (the ISSUE's k >= 4 shuffled batches)
+    return data[np.random.default_rng(0).permutation(len(data))]
+
+
+@pytest.fixture(scope="module")
+def batch_reference(stream_data):
+    """From-scratch LAF-DBSCAN on the full data, oracle estimator."""
+    oracle = (
+        ExactBackend()
+        .fit(stream_data)
+        .query_counts(np.arange(len(stream_data)), EPS)
+        .astype(float)
+    )
+    return laf_dbscan(stream_data, EPS, TAU, 1.0, oracle, seed=0), oracle
+
+
+def _ingest(data, k, **kw):
+    s = StreamingLAF(EPS, TAU, block_size=512, **kw)
+    step = -(-len(data) // k)
+    for start in range(0, len(data), step):
+        s.partial_fit(data[start : start + step])
+    return s
+
+
+# ---------------------------------------------------------------------------
+# parity: streaming over k shuffled batches == from-scratch batch run
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_parity_exact_backend(stream_data, batch_reference):
+    ref, _ = batch_reference
+    s = _ingest(stream_data, 5, backend="exact")
+    labels = s.labels()
+    assert adjusted_rand_index(labels, ref.labels) == 1.0
+    # stronger than ARI: the maintained partition is point-identical
+    # (same counts, same core set, same min-core-neighbor border rule)
+    np.testing.assert_array_equal(labels, ref.labels)
+    np.testing.assert_array_equal(s.state.core[: s.state.n], ref.core)
+
+
+def test_streaming_parity_random_projection(stream_data, batch_reference):
+    ref, _ = batch_reference
+    s = _ingest(stream_data, 4, backend="random_projection")
+    assert adjusted_rand_index(s.labels(), ref.labels) >= 0.99
+
+
+def test_streaming_matches_dbscan_parallel(stream_data):
+    ref = dbscan_parallel(stream_data, EPS, TAU)
+    s = _ingest(stream_data, 6, backend="exact")
+    np.testing.assert_array_equal(s.labels(), ref.labels)
+
+
+def test_batch_count_invariance(stream_data):
+    """The maintained state must not depend on how the stream is cut."""
+    a = _ingest(stream_data, 4, backend="exact")
+    b = _ingest(stream_data, 9, backend="exact")
+    np.testing.assert_array_equal(a.labels(), b.labels())
+    np.testing.assert_array_equal(
+        a.state.counts[: a.state.n], b.state.counts[: b.state.n]
+    )
+
+
+def test_multi_block_batch_counts_exact(stream_data):
+    """Regression: one batch larger than block_size is chunked over
+    several query blocks — same-batch pairs spanning two blocks must not
+    double-count for the earlier block's endpoint."""
+    data = stream_data[:600]
+    s = StreamingLAF(EPS, TAU, backend="exact", block_size=50)
+    s.partial_fit(data)  # 12 blocks in one batch
+    exact = ExactBackend().fit(data).query_counts(np.arange(len(data)), EPS)
+    np.testing.assert_array_equal(s.state.counts[: s.state.n], exact)
+    ref = dbscan_parallel(data, EPS, TAU)
+    np.testing.assert_array_equal(s.labels(), ref.labels)
+
+
+# ---------------------------------------------------------------------------
+# structural events: cluster merge, border -> core promotion
+# ---------------------------------------------------------------------------
+
+
+def _on_circle(angles_deg, d=8):
+    """Unit vectors at the given angles on a great circle (degrees)."""
+    a = np.deg2rad(np.asarray(angles_deg, dtype=np.float64))
+    out = np.zeros((len(a), d), dtype=np.float32)
+    out[:, 0] = np.cos(a)
+    out[:, 1] = np.sin(a)
+    return out
+
+
+def test_bridge_batch_merges_clusters():
+    # eps=0.1 -> angular threshold arccos(0.9) ~ 25.8 degrees
+    eps, tau = 0.1, 3
+    s = StreamingLAF(eps, tau, backend="exact")
+    s.partial_fit(_on_circle([0, 5, 10, 15, 20]))     # cluster A
+    s.partial_fit(_on_circle([90, 95, 100, 105, 110]))  # cluster B
+    assert s.n_clusters == 2
+    lab = s.labels()
+    assert lab[0] != lab[5]
+    s.partial_fit(_on_circle([35, 50, 65, 80]))       # the bridge
+    assert s.n_clusters == 1
+    lab = s.labels()
+    assert lab.min() == 0 and np.all(lab == 0)
+    # parity with a from-scratch run on the accumulated data
+    full = np.concatenate(
+        [_on_circle([0, 5, 10, 15, 20]), _on_circle([90, 95, 100, 105, 110]),
+         _on_circle([35, 50, 65, 80])]
+    )
+    ref = dbscan_parallel(full, eps, tau)
+    np.testing.assert_array_equal(lab, ref.labels)
+
+
+def test_batch_promotes_border_to_core():
+    eps, tau = 0.1, 3
+    s = StreamingLAF(eps, tau, backend="exact")
+    # 0 and 40 are borders of 20's cluster (2 neighbors incl. self);
+    # 20 is the only core (3 neighbors incl. self)
+    s.partial_fit(_on_circle([0, 20, 40]))
+    lab0 = s.labels()
+    assert list(s.state.core[:3]) == [False, True, False]
+    assert lab0[2] == lab0[1] >= 0  # 40 is a border, labeled via 20
+    # 45 lands within eps of 40 (and 20): 40's count crosses tau -> core
+    rep = s.partial_fit(_on_circle([45]))
+    assert rep.n_promoted >= 1
+    assert bool(s.state.core[2])
+    ref = dbscan_parallel(_on_circle([0, 20, 40, 45]), eps, tau)
+    np.testing.assert_array_equal(s.labels(), ref.labels)
+
+
+# ---------------------------------------------------------------------------
+# estimator fast path (online skip rule)
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_fast_path_skips_and_stays_exact(stream_data, batch_reference):
+    ref, oracle = batch_reference
+    lookup = {stream_data[i].tobytes(): oracle[i] for i in range(len(stream_data))}
+    est = lambda v: np.array([lookup[r.tobytes()] for r in v])
+    s = _ingest(
+        stream_data, 5, backend="exact",
+        estimator=est, use_estimator=True, alpha=1.0,
+    )
+    skipped = int((~s.state.queried[: s.state.n]).sum())
+    assert skipped > 0, "oracle at alpha=1 must skip the predicted-noise points"
+    # with an oracle, skips are exactly the non-core points -> partition intact
+    assert adjusted_rand_index(s.labels(), ref.labels) == 1.0
+
+
+def test_estimator_fast_path_counts_are_lower_bounds(stream_data):
+    est = lambda v: np.zeros(len(v))  # predict everything as noise
+    s = _ingest(stream_data, 4, backend="exact", estimator=est, use_estimator=True)
+    exact = ExactBackend().fit(stream_data).query_counts(np.arange(len(stream_data)), EPS)
+    state_counts = s.state.counts[: s.state.n]
+    assert np.all(state_counts <= exact), "skipped counts must never overcount"
+
+
+# ---------------------------------------------------------------------------
+# eviction / decay
+# ---------------------------------------------------------------------------
+
+
+def test_evict_noise_is_cheap_and_preserves_labels(stream_data):
+    s = _ingest(stream_data, 4, backend="exact")
+    before = s.labels()
+    noise = np.nonzero(before < 0)[0][:25]
+    rebuilt = s.evict(noise)
+    assert not rebuilt
+    after = s.labels()
+    assert np.all(after[noise] == -1)
+    keep = np.ones(len(before), dtype=bool)
+    keep[noise] = False
+    np.testing.assert_array_equal(after[keep], before[keep])
+
+
+def test_evict_core_triggers_rebuild(stream_data):
+    s = _ingest(stream_data, 4, backend="exact")
+    core = np.nonzero(s.state.core[: s.state.n])[0][:5]
+    live_before = np.nonzero(s.state.alive[: s.state.n])[0]
+    rebuilt = s.evict(core)
+    assert rebuilt
+    # post-rebuild state is a from-scratch run on the surviving rows
+    survivors = np.setdiff1d(live_before, core)
+    ref = dbscan_parallel(stream_data[survivors], EPS, TAU)
+    np.testing.assert_array_equal(s.labels(), ref.labels)
+
+
+def test_re_evicting_dead_rows_is_idempotent(stream_data):
+    """Regression: indices already tombstoned must not decrement the
+    survivors' counts a second time when passed to evict again."""
+    s = _ingest(stream_data, 4, backend="exact")
+    noise = np.nonzero(s.labels() < 0)[0][:10]
+    s.evict(noise[:5])
+    counts_after = s.state.counts[: s.state.n].copy()
+    s.evict(noise)  # overlaps the first five
+    expect = counts_after.copy()
+    # only the five newly evicted rows' hits may decrement anything
+    fresh = noise[5:]
+    dec = ExactBackend().fit(stream_data).query_hits(fresh, EPS).sum(axis=0)
+    dec[fresh] = 0
+    dec[noise[:5]] = 0  # columns already dead are masked out
+    np.testing.assert_array_equal(s.state.counts[: s.state.n], expect - dec)
+
+
+def test_evict_with_duplicate_indices_decrements_once(stream_data):
+    s = _ingest(stream_data, 4, backend="exact")
+    noise = np.nonzero(s.labels() < 0)[0][:4]
+    t = _ingest(stream_data, 4, backend="exact")
+    s.evict(np.repeat(noise, 3))  # [a,a,a,b,b,b,...]
+    t.evict(noise)
+    np.testing.assert_array_equal(
+        s.state.counts[: s.state.n], t.state.counts[: t.state.n]
+    )
+
+
+def test_decay_hook_runs_per_batch(stream_data):
+    calls = []
+
+    def decay(state):
+        calls.append(state.n)
+        return None
+
+    _ingest(stream_data[:600], 3, backend="exact", decay=decay)
+    assert calls == [200, 400, 600]
+
+
+# ---------------------------------------------------------------------------
+# serving: assign()
+# ---------------------------------------------------------------------------
+
+
+def test_assign_members_and_noise(stream_data):
+    s = _ingest(stream_data, 4, backend="random_projection")
+    lab = s.labels()
+    members = np.nonzero(lab >= 0)[0][:60]
+    res = s.assign(stream_data[members])
+    np.testing.assert_array_equal(res.labels, lab[members])
+    assert np.all((res.confidence >= 0) & (res.confidence <= 1))
+    assert np.all(res.n_hits[res.labels >= 0] >= 1)
+    # a query with no eps-neighbor anywhere must come back noise
+    far = np.zeros((1, stream_data.shape[1]), np.float32)
+    far[0, -1] = 1.0
+    assert not np.any(stream_data @ far[0] > 1.0 - EPS), "fixture drift: pick another far vector"
+    r = s.assign(far)
+    assert r.labels[0] == -1 and r.confidence[0] == 0.0 and r.n_hits[0] == 0
+
+
+def test_assign_perturbed_members_match_exact_backend(stream_data):
+    s = _ingest(stream_data, 4, backend="exact")
+    lab = s.labels()
+    members = np.nonzero(lab >= 0)[0][:40]
+    rng = np.random.default_rng(3)
+    q = stream_data[members] + 0.01 * rng.standard_normal((40, 32)).astype(np.float32)
+    res = s.assign(q)
+    assert np.mean(res.labels == lab[members]) >= 0.95
+
+
+def test_assign_snapshot_invalidated_by_ingest(stream_data):
+    s = _ingest(stream_data[:800], 2, backend="exact")
+    snap1 = s.snapshot()
+    assert s.snapshot() is snap1  # cached while the state is unchanged
+    s.partial_fit(stream_data[800:1000])
+    assert s.snapshot() is not snap1
+
+
+def test_prefit_backend_warm_starts_the_stream(stream_data):
+    """A constructed, already-fitted backend must not desync row indices
+    — its rows are absorbed as batch zero."""
+    bk = ExactBackend().fit(stream_data[:900])
+    s = StreamingLAF(EPS, TAU, backend=bk)
+    assert s.n_points == 900
+    s.partial_fit(stream_data[900:1200])
+    ref = dbscan_parallel(stream_data[:1200], EPS, TAU)
+    np.testing.assert_array_equal(s.labels(), ref.labels)
+
+
+def test_instance_backend_rejects_index_kwargs(stream_data):
+    from repro.index import RandomProjectionBackend
+
+    with pytest.raises(ValueError, match="constructed instance"):
+        StreamingLAF(EPS, TAU, backend=RandomProjectionBackend(), n_bits=128)
+    with pytest.raises(ValueError, match="constructed instance"):
+        StreamingLAF(EPS, TAU, backend=RandomProjectionBackend(), device=False)
+
+
+def test_pipeline_accepts_instance_backend(stream_data):
+    """Regression: the pipeline must not forward its device default into
+    a constructed backend instance (which keeps its own evaluator)."""
+    pipe = LAFPipeline(backend=ExactBackend())
+    rep = pipe.partial_fit(stream_data[:400], eps=EPS, tau=TAU)
+    assert rep.n_points == 400
+    ref = dbscan_parallel(stream_data[:400], EPS, TAU)
+    np.testing.assert_array_equal(pipe.stream.labels(), ref.labels)
+
+
+# ---------------------------------------------------------------------------
+# LAFPipeline surface
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_partial_fit_assign(stream_data):
+    pipe = LAFPipeline(backend="exact")
+    with pytest.raises(ValueError):
+        pipe.partial_fit(stream_data[:100])  # eps/tau must be fixed first
+    for start in range(0, 1000, 250):
+        rep = pipe.partial_fit(stream_data[start : start + 250], eps=EPS, tau=TAU)
+    assert rep.n_points == 1000
+    ref = dbscan_parallel(stream_data[:1000], EPS, TAU)
+    np.testing.assert_array_equal(pipe.stream.labels(), ref.labels)
+    members = np.nonzero(ref.labels >= 0)[0][:10]
+    res = pipe.assign(stream_data[members])
+    np.testing.assert_array_equal(res.labels, ref.labels[members])
+    # changing the operating point mid-stream must be loud, not silent
+    with pytest.raises(ValueError, match="operating-point-specific"):
+        pipe.partial_fit(stream_data[1000:1100], eps=0.9, tau=2)
+    with pytest.raises(ValueError, match="cannot be applied"):
+        pipe.partial_fit(stream_data[1000:1100], eps=EPS, tau=TAU, block_size=64)
+
+
+# ---------------------------------------------------------------------------
+# state-level invariants
+# ---------------------------------------------------------------------------
+
+
+def test_state_grows_in_amortized_chunks():
+    st = StreamingClusterState(0.3, 4)
+    st.extend(10)
+    cap0 = st.counts.shape[0]
+    st.extend(5)
+    assert st.n == 15
+    assert st.counts.shape[0] >= 15
+    # doubling: few reallocations across many tiny extends
+    for _ in range(100):
+        st.extend(1)
+    assert st.counts.shape[0] >= st.n >= 115 and cap0 < st.counts.shape[0] <= 4 * 115
+
+
+@pytest.mark.slow
+def test_streaming_parity_large_random_projection():
+    data, _ = make_angular_clusters(6000, 64, 30, kappa=420, noise_frac=0.35, seed=5)
+    data = data[np.random.default_rng(1).permutation(len(data))]
+    ref = dbscan_parallel(data, 0.4, 6, backend="random_projection")
+    s = StreamingLAF(0.4, 6, backend="random_projection")
+    for start in range(0, len(data), 1000):
+        s.partial_fit(data[start : start + 1000])
+    assert adjusted_rand_index(s.labels(), ref.labels) >= 0.99

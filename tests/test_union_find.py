@@ -1,0 +1,115 @@
+"""Direct coverage for ``core.union_find.UnionFind`` incremental
+semantics — the streaming cluster state leans on interleaved
+``union``/``find`` (path compression must not corrupt the forest),
+``grow`` (existing components and their roots must survive the
+universe expanding), and composition with the vectorized helpers
+(``union_star`` mutates ``uf.parent`` in place).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.union_find import (
+    UnionFind,
+    compact_labels_from_parent,
+    find_roots_vec,
+    union_star,
+)
+
+
+def _partition(uf: UnionFind) -> dict:
+    """root -> frozenset(members), independent of representative choice."""
+    groups = {}
+    for i in range(len(uf)):
+        groups.setdefault(uf.find(i), set()).add(i)
+    return {min(v): frozenset(v) for v in groups.values()}
+
+
+def test_interleaved_union_find_matches_reference():
+    """Random interleave of unions and finds vs a naive set-merge model."""
+    rng = np.random.default_rng(0)
+    n = 200
+    uf = UnionFind(n)
+    ref = {i: {i} for i in range(n)}  # representative -> members
+    where = {i: i for i in range(n)}  # element -> representative
+    for _ in range(500):
+        a, b = rng.integers(0, n, 2)
+        if rng.random() < 0.5:
+            uf.union(int(a), int(b))
+            ra, rb = where[int(a)], where[int(b)]
+            if ra != rb:
+                ref[ra] |= ref.pop(rb)
+                for m in ref[ra]:
+                    where[m] = ra
+        else:
+            # find mid-stream: same-set iff same root, and idempotent
+            same = uf.find(int(a)) == uf.find(int(b))
+            assert same == (where[int(a)] == where[int(b)])
+            assert uf.find(int(a)) == uf.find(int(a))
+    got = {frozenset(v) for v in _partition(uf).values()}
+    want = {frozenset(v) for v in ref.values()}
+    assert got == want
+
+
+def test_path_compression_flattens_chain():
+    uf = UnionFind(64)
+    # build a deliberate chain 0 <- 1 <- 2 ... by direct parent edits
+    uf.parent[1:] = np.arange(63)
+    root = uf.find(63)
+    assert root == 0
+    # path halving must have shortened the traversed path
+    assert uf.parent[63] != 62
+    # every element on the chain still resolves to the same root
+    assert all(uf.find(i) == 0 for i in range(64))
+
+
+def test_roots_stability_after_growth():
+    uf = UnionFind(10)
+    uf.union(0, 1)
+    uf.union(2, 3)
+    uf.union(1, 3)
+    before = uf.roots()
+    uf.grow(20)
+    assert len(uf) == 20
+    after = uf.roots()
+    # old components untouched: identical root structure on 0..9
+    np.testing.assert_array_equal(after[:10], before)
+    # new elements are singletons
+    np.testing.assert_array_equal(after[10:], np.arange(10, 20))
+    # growth is idempotent / monotone
+    uf.grow(5)
+    assert len(uf) == 20
+    # unions across the old/new boundary work
+    uf.union(3, 15)
+    assert uf.find(15) == uf.find(0)
+    assert uf.size[uf.find(0)] == 5
+
+
+def test_grow_interleaved_with_union_star():
+    """The streaming state's exact usage: star-unions on ``uf.parent``
+    interleaved with growth, labels via compact_labels_from_parent."""
+    uf = UnionFind(6)
+    union_star(uf.parent, np.array([0, 2, 4]))
+    uf.grow(12)
+    union_star(uf.parent, np.array([4, 7, 11]))
+    union_star(uf.parent, np.array([1, 3]))
+    active = np.ones(12, dtype=bool)
+    active[[5, 6, 8, 9, 10]] = False
+    labels = compact_labels_from_parent(uf.parent.copy(), active)
+    # {0,2,4,7,11} one cluster, {1,3} another; inactive -1
+    assert labels[0] == labels[2] == labels[4] == labels[7] == labels[11]
+    assert labels[1] == labels[3] != labels[0]
+    assert set(labels[[5, 6, 8, 9, 10]]) == {-1}
+    # find() agrees with the vectorized multi-find after external edits
+    roots = find_roots_vec(uf.parent, np.arange(12))
+    assert roots[7] == uf.find(0)
+
+
+def test_union_by_size_and_find_bounds():
+    uf = UnionFind(4)
+    uf.union(0, 1)   # size 2 at root 0
+    uf.union(2, 0)   # smaller (2) attaches under larger root
+    assert uf.find(2) == uf.find(0)
+    assert uf.size[uf.find(0)] == 3
+    with pytest.raises(IndexError):
+        uf.find(99)
