@@ -15,6 +15,10 @@ isolates the index, not the estimator.
       --n 2000 --d 64 --device device --json BENCH_PR2.json        # CI trajectory
   PYTHONPATH=src python -m benchmarks.index_bench \
       --n 2000 --d 64 --mesh 4 --json BENCH_PR3.json  # sharded index plane
+  PYTHONPATH=src python -m benchmarks.index_bench \
+      --n 40000 --d 768 --sweep --json BENCH_PR5.json # sweep engine
+  PYTHONPATH=src python -m benchmarks.index_bench \
+      --n 2000 --d 64 --sweep --mesh 4 --json BENCH_PR5.json
 
 ``--device device`` routes the ANN backend through the fused Pallas
 ``hamming_filter`` tile (interpret mode off-accelerator), so the CI
@@ -25,6 +29,14 @@ deferred into the functions) and runs the same sweep through the
 shard_mapped index plane — the row payload then carries both the
 sharded and single-device fused sweep times plus per-device shard
 numbers.
+
+``--sweep`` benchmarks the device-resident sweep engine
+(``repro.index.sweep``) instead: the legacy per-chunk dispatch loop
+(one kernel launch + one synchronous device→host round-trip per chunk)
+vs the one-launch engine on a whole-database sweep, plus — under
+``--mesh N`` — the serialized plane vs the double-buffered
+(software-pipelined) plane, with LAF-DBSCAN end-to-end ARI vs the
+exact backend through the engine-backed index in the same payload.
 """
 
 from __future__ import annotations
@@ -162,6 +174,139 @@ def bench_point(
     return row
 
 
+def bench_sweep_point(
+    n: int,
+    d: int,
+    eps: float,
+    tau: int,
+    *,
+    n_bits: int = 512,
+    margin: float = 3.0,
+    mesh_devices: int = 0,
+    seed: int = 0,
+    block: int = 2048,
+    chunks_per_launch: int = 8,
+    with_ari: bool = True,
+    chunk: int = 256,
+    q_tile: int = 128,
+    db_tile: int = 256,
+) -> dict:
+    """Per-chunk loop vs one-launch sweep (vs the pipelined plane under
+    ``--mesh``) on one whole-database query sweep.
+
+    ``chunk``/``q_tile``/``db_tile`` apply to *both* variants (the
+    comparison is per-chunk dispatch vs one launch at identical tiling);
+    off-accelerator the interpreter's per-tile-step overhead dominates,
+    so CPU runs of the big operating points should raise the tiles
+    (e.g. ``--chunk 1024 --q-tile 256 --db-tile 2048``).
+    """
+    from repro.core.laf_dbscan import laf_dbscan
+    from repro.core.metrics import adjusted_rand_index
+    from repro.index import ExactBackend, RandomProjectionBackend
+
+    data, _ = _dataset(n, d, seed)
+    mesh = None
+    if mesh_devices > 1:
+        import jax
+
+        mesh = jax.make_mesh((mesh_devices,), ("data",))
+    cfg = dict(
+        n_bits=n_bits, margin=margin, seed=seed, device=True, mesh=mesh,
+        chunk=chunk, q_tile=q_tile, db_tile=db_tile,
+    )
+    variants = {
+        "per_chunk": RandomProjectionBackend(sweep=False, **cfg),
+        "one_launch": RandomProjectionBackend(
+            sweep=True, chunks_per_launch=chunks_per_launch, pipeline_depth=1, **cfg
+        ),
+    }
+    if mesh is not None:
+        # under a mesh "one_launch" is the serialized (depth-1) plane;
+        # the pipelined variant double-buffers chunk k's psum against
+        # chunk k+1's shard-local popcount+verify
+        variants["pipelined"] = RandomProjectionBackend(
+            sweep=True, chunks_per_launch=chunks_per_launch, pipeline_depth=2, **cfg
+        )
+    times = {}
+    for name, bk in variants.items():
+        bk.fit(data)
+        bk.query_hits(np.arange(min(block, n)), eps)  # warm/compile
+        t0 = time.perf_counter()
+        for start in range(0, n, block):
+            rows = np.arange(start, min(start + block, n))
+            bk.query_hits(rows, eps)
+        times[name] = time.perf_counter() - t0
+        print(f"  sweep[{name}]: {times[name]:.2f}s", flush=True)
+
+    row = {
+        "n": n, "d": d, "eps": eps, "tau": tau,
+        "n_bits": n_bits, "margin": margin, "mesh": mesh_devices,
+        "chunks_per_launch": chunks_per_launch,
+        "chunk": chunk, "q_tile": q_tile, "db_tile": db_tile,
+        "sweep_per_chunk_s": times["per_chunk"],
+        "sweep_one_launch_s": times["one_launch"],
+        "one_launch_speedup": times["per_chunk"] / times["one_launch"],
+    }
+    if mesh is not None:
+        row["sweep_pipelined_s"] = times["pipelined"]
+        row["pipelined_speedup"] = times["per_chunk"] / times["pipelined"]
+        row["pipelined_vs_serial_launch"] = times["one_launch"] / times["pipelined"]
+    if with_ari:
+        # LAF e2e through the engine-backed index, oracle estimator —
+        # the sweep rewiring must not move a single label
+        exact = ExactBackend().fit(data)
+        pred = exact.query_counts(np.arange(n), eps)
+        res_ex = laf_dbscan(data, eps, tau, 1.0, pred, seed=seed, backend=exact)
+        eng = variants["pipelined" if mesh is not None else "one_launch"]
+        res_sw = laf_dbscan(data, eps, tau, 1.0, pred, seed=seed, backend=eng)
+        row["ari_sweep_vs_exact"] = adjusted_rand_index(res_ex.labels, res_sw.labels)
+    return row
+
+
+def run_sweep(
+    *,
+    ns=(40000,),
+    ds=(768,),
+    epss=(0.55,),
+    tau: int = 5,
+    n_bits: int = 512,
+    margin: float = 3.0,
+    mesh_devices: int = 0,
+    seed: int = 0,
+    with_ari: bool = True,
+    chunk: int = 256,
+    q_tile: int = 128,
+    db_tile: int = 256,
+):
+    from .common import save_json
+
+    rows = []
+    for n in ns:
+        for d in ds:
+            for eps in epss:
+                row = bench_sweep_point(
+                    n, d, eps, tau, n_bits=n_bits, margin=margin,
+                    mesh_devices=mesh_devices, seed=seed, with_ari=with_ari,
+                    chunk=chunk, q_tile=q_tile, db_tile=db_tile,
+                )
+                rows.append(row)
+                extra = (
+                    f" pipelined x{row['pipelined_speedup']:.2f}"
+                    if "pipelined_speedup" in row else ""
+                )
+                ari = (
+                    f" ARI={row['ari_sweep_vs_exact']:.4f}"
+                    if "ari_sweep_vs_exact" in row else ""
+                )
+                print(
+                    f"  n={n} d={d} eps={eps}: one-launch "
+                    f"x{row['one_launch_speedup']:.2f}{extra}{ari}",
+                    flush=True,
+                )
+    save_json("index_bench_sweep", rows)
+    return rows
+
+
 def run(
     profile: str = "standard",
     *,
@@ -253,6 +398,23 @@ def main(argv=None):
         "--grid", action="store_true",
         help="sweep n in {5000, 20000}, d in {256, 768}, eps in {0.5, 0.55, 0.6}",
     )
+    ap.add_argument(
+        "--sweep", action="store_true",
+        help="benchmark the device-resident sweep engine: per-chunk loop "
+        "vs one-launch (vs the double-buffered plane under --mesh), with "
+        "LAF e2e ARI vs exact in the payload (BENCH_PR5.json)",
+    )
+    ap.add_argument(
+        "--no-ari", action="store_true",
+        help="--sweep only: skip the exact-backend LAF e2e ARI pass "
+        "(the O(n^2) part of the sweep benchmark)",
+    )
+    ap.add_argument("--chunk", type=int, default=256,
+                    help="--sweep only: query rows per kernel pass")
+    ap.add_argument("--q-tile", type=int, default=128,
+                    help="--sweep only: kernel query tile")
+    ap.add_argument("--db-tile", type=int, default=256,
+                    help="--sweep only: kernel db tile")
     args = ap.parse_args(argv)
     if args.mesh > 1:
         # must land before the first jax import anywhere in the process
@@ -271,6 +433,29 @@ def main(argv=None):
     ns, ds, epss = tuple(args.n), tuple(args.d), tuple(args.eps)
     if args.grid:
         ns, ds, epss = (5000, 20000), (256, 768), (0.5, 0.55, 0.6)
+    if args.sweep:
+        rows = run_sweep(
+            ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,
+            margin=args.margin, mesh_devices=args.mesh, seed=args.seed,
+            with_ari=not args.no_ari,
+            chunk=args.chunk, q_tile=args.q_tile, db_tile=args.db_tile,
+        )
+        if args.json is not None:
+            payload = {
+                "rows": rows,
+                "best_one_launch_speedup": max(
+                    r["one_launch_speedup"] for r in rows
+                ),
+            }
+            if args.mesh > 1:
+                payload["best_pipelined_speedup"] = max(
+                    r["pipelined_speedup"] for r in rows
+                )
+            if not args.no_ari:
+                payload["worst_ari"] = min(r["ari_sweep_vs_exact"] for r in rows)
+            args.json.write_text(json.dumps(payload, indent=2, default=float))
+            print(f"wrote {args.json}")
+        return
     rows = run(
         ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,
         margin=args.margin, verify=args.verify, device=args.device,

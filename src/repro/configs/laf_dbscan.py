@@ -62,6 +62,10 @@ class LAFClusterConfig:
     # lone CPU device keeps the shardable jnp dataflow of the same
     # predicate).  index_axes names the mesh axes the db rows +
     # signature table are co-sharded over ("auto" = every mesh axis).
+    # index_pipeline sets the frontier sweep's software-pipeline depth
+    # through the sharded plane: 2 (default) double-buffers chunks so
+    # chunk k's cross-shard count psum overlaps chunk k+1's shard-local
+    # popcount+verify; 1 serializes them (the parity baseline).
     backend: str = "exact"
     index_bits: int = 512
     index_seed: int = 0
@@ -69,6 +73,7 @@ class LAFClusterConfig:
     index_verify: str = "band"
     index_device: object = "auto"
     index_axes: object = "auto"
+    index_pipeline: int = 2
     # streaming subsystem (repro.stream): online ingest + serving knobs
     stream: StreamConfig = StreamConfig()
 

@@ -61,6 +61,8 @@ __all__ = [
     "sharded_hamming_count",
     "sharded_hamming_bitmap",
     "sharded_band_marginals",
+    "sharded_sweep_launch",
+    "sharded_sweep_marginals",
 ]
 
 I32 = jnp.int32
@@ -90,12 +92,17 @@ class ShardPlan:
         return self.n_padded - self.n
 
 
-def shard_plan(mesh: Mesh, n: int, axes=None) -> ShardPlan:
+def shard_plan(mesh: Mesh, n: int, axes=None, *, tile: int = 32) -> ShardPlan:
     """Row plan for an ``n``-row database sharded over ``axes`` (default:
-    the mesh's data axes)."""
+    the mesh's data axes).  ``tile`` (a multiple of 32, e.g. the kernel
+    db tile) additionally aligns every shard's row count to that
+    multiple, so shard-local kernel calls never re-pad per launch —
+    what the sweep engine's one-launch scans rely on."""
     axes = data_axes(mesh) if axes is None else tuple(axes)
     n_shards = axis_size(mesh, axes)
-    mult = 32 * n_shards
+    if tile % 32:
+        raise ValueError(f"tile must be a multiple of 32, got {tile}")
+    mult = max(32, tile) * n_shards
     return ShardPlan(axes, n_shards, n, -(-n // mult) * mult)
 
 
@@ -104,15 +111,16 @@ def _pad_rows_to(x, n_padded: int):
     return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
 
 
-def shard_database(mesh: Mesh, data, sigs, axes=None):
+def shard_database(mesh: Mesh, data, sigs, axes=None, *, tile: int = 32):
     """Co-shard a database and its packed signature table.
 
     Returns ``(db, db_sig, plan)`` where both arrays are padded to
     ``plan.n_padded`` zero rows / zero signature words and placed with
     ``P(axes, None)`` — one ``device_put`` each at fit time, so queries
-    never move the table again.
+    never move the table again.  ``tile`` aligns every shard to the
+    kernel db tile (see :func:`shard_plan`).
     """
-    plan = shard_plan(mesh, data.shape[0], axes)
+    plan = shard_plan(mesh, data.shape[0], axes, tile=tile)
     spec = P(plan.axes, None)
     db = jax.device_put(
         _pad_rows_to(jnp.asarray(data, jnp.float32), plan.n_padded),
@@ -285,3 +293,240 @@ def sharded_band_marginals(
         jnp.asarray(q), db, jnp.asarray(q_sig, jnp.uint32), db_sig, eps_op, band
     )
     return counts, partial[:nd] if plan.n_pad else partial
+
+
+# ---------------------------------------------------------------------------
+# device-resident sweeps: all chunks of a launch inside one shard_map,
+# software-pipelined so chunk k's psum overlaps chunk k+1's popcount
+# ---------------------------------------------------------------------------
+
+
+def _pipeline(local, combine, items, depth: int):
+    """Run ``combine(local(item))`` per item as a lax.scan.
+
+    ``depth >= 2`` double-buffers: iteration *k* computes
+    ``local(items[k])`` while combining ``local(items[k-1])`` — the two
+    have no data dependence, so the compiler is free to overlap the
+    previous chunk's collective with the next chunk's shard-local
+    popcount+verify.  ``depth == 1`` keeps the serialized
+    compute→combine chain per chunk (the parity/latency baseline).
+    Items is a pytree of stacked leading-axis operands; local may
+    return a pytree, combine maps local results to outputs.
+    """
+    n_items = jax.tree_util.tree_leaves(items)[0].shape[0]
+    if depth >= 2 and n_items > 1:
+        head = jax.tree_util.tree_map(lambda x: x[0], items)
+        tail = jax.tree_util.tree_map(lambda x: x[1:], items)
+
+        def step(carry, xs):
+            return local(xs), combine(carry)
+
+        last, outs = jax.lax.scan(step, local(head), tail)
+        return jax.tree_util.tree_map(
+            lambda o, l: jnp.concatenate([o, l[None]], axis=0), outs, combine(last)
+        )
+    return jax.lax.map(lambda xs: combine(local(xs)), items)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sweep_plane_fn(
+    mesh: Mesh, axes, kind: str, chunk: int, q_tile: int, db_tile: int,
+    interpret: bool, depth: int,
+):
+    """One-launch sharded sweep, cached per (mesh, axes, variant, tiles,
+    chunk, pipeline depth).  The launch's query rows arrive stacked
+    ``(cpl * chunk, ...)`` replicated; the db + signature table arrive
+    row-sharded (the plane arrays from ``shard_database``)."""
+    rep = P(None, None)
+    row_sharded = P(axes, None)
+    kw = dict(q_tile=q_tile, db_tile=db_tile, interpret=interpret)
+
+    if kind == "count":
+
+        def body(q, qs, db, dbs, eps, band):
+            cpl = q.shape[0] // chunk
+            items = (q.reshape(cpl, chunk, -1), qs.reshape(cpl, chunk, -1))
+
+            def local(xs):
+                return hamming_filter_count(
+                    xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0], **kw
+                )
+
+            outs = _pipeline(local, lambda c: jax.lax.psum(c, axes), items, depth)
+            return outs.reshape(cpl * chunk)
+
+        out_specs = P(None)
+    else:  # bitmap
+
+        def body(q, qs, db, dbs, eps, band):
+            cpl = q.shape[0] // chunk
+            items = (q.reshape(cpl, chunk, -1), qs.reshape(cpl, chunk, -1))
+
+            def local(xs):
+                return hamming_filter_bitmap(
+                    xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0], **kw
+                )
+
+            # only the per-chunk count psum crosses the network; the
+            # word-aligned bitmap blocks stay shard-local until the
+            # out_specs gather at launch end
+            outs_c, outs_bm = _pipeline(
+                local, lambda cb: (jax.lax.psum(cb[0], axes), cb[1]), items, depth
+            )
+            return (
+                outs_c.reshape(cpl * chunk),
+                outs_bm.reshape(cpl * chunk, outs_bm.shape[-1]),
+            )
+
+        out_specs = (P(None), P(None, axes))
+
+    # jit the shard_map'd sweep so the launch program (the whole chunk
+    # scan) is traced once per shape and every later sweep is a single
+    # cached dispatch — eager shard_map re-traces per call, which would
+    # cost more than the sweep itself
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(rep, rep, row_sharded, row_sharded, P(None), P(None)),
+            out_specs=out_specs,
+            check_rep=False,
+        )
+    )
+
+
+def sharded_sweep_launch(
+    kind: str,
+    q,
+    q_sig,
+    db,
+    db_sig,
+    eps_op,
+    band_op,
+    *,
+    mesh: Mesh,
+    axes,
+    chunk: int,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: bool = False,
+    depth: int = 2,
+    n: int,
+):
+    """One launch of the device-resident sharded sweep (driven by
+    :mod:`repro.index.sweep`): ``(result, n_pad)`` where ``n_pad`` is
+    the plane's zero-row column slack the driver corrects once per
+    sweep.  ``db``/``db_sig`` are the plane-sharded arrays; each shard's
+    rows should be db-tile aligned (``shard_database(..., tile=)``) so
+    the scanned kernel calls never re-pad inside the loop."""
+    axes = data_axes(mesh) if axes is None else tuple(axes)
+    f = _build_sweep_plane_fn(
+        mesh, axes, kind, chunk, q_tile, db_tile, interpret, depth
+    )
+    out = f(q, jnp.asarray(q_sig, jnp.uint32), db, db_sig, eps_op, band_op)
+    return out, db.shape[0] - n
+
+
+def sharded_sweep_marginals(
+    qs,
+    db,
+    q_sigs,
+    db_sig,
+    eps,
+    t_hi,
+    *,
+    mesh: Mesh,
+    t_lo=-1,
+    axes=None,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret: Optional[bool] = None,
+    depth: int = 2,
+):
+    """One-launch, software-pipelined form of
+    :func:`sharded_band_marginals` over pre-chunked frontiers.
+
+    ``qs``/``q_sigs`` are the whole frontier stacked ``(n_chunks, C,
+    ·)`` — signatures packed once per sweep, not once per chunk.  The
+    per-chunk count psum is double-buffered against the next chunk's
+    shard-local popcount+verify (``depth=2``); per-row partials
+    accumulate in the scan carry and stay sharded ``P(axes)``.  Returns
+    ``(counts (n_chunks, C) replicated, partial (n,) sharded)``.
+    """
+    nd = db.shape[0]
+    plan = shard_plan(mesh, nd, axes, tile=db_tile)
+    if interpret is None:
+        interpret = default_interpret()
+    db = _pad_rows_to(jnp.asarray(db), plan.n_padded)
+    db_sig = _pad_rows_to(jnp.asarray(db_sig, jnp.uint32), plan.n_padded)
+    eps_op = jnp.asarray([eps], jnp.float32)
+    band = jnp.stack([jnp.asarray(t_lo, I32), jnp.asarray(t_hi, I32)])
+    f = _build_sweep_marginals_fn(
+        mesh, plan.axes, q_tile, db_tile, interpret, depth
+    )
+    counts, partial = f(
+        jnp.asarray(qs), jnp.asarray(q_sigs, jnp.uint32), db, db_sig, eps_op, band
+    )
+    return counts, partial[:nd] if plan.n_pad else partial
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sweep_marginals_fn(
+    mesh: Mesh, axes, q_tile: int, db_tile: int, interpret: bool, depth: int
+):
+    kw = dict(q_tile=q_tile, db_tile=db_tile, interpret=interpret)
+
+    def body(qs, qss, db, dbs, eps, band):
+        # all-zero db rows are padding by construction (unit-norm data
+        # never has a zero row) — computed once per sweep, masked per
+        # chunk (see sharded_band_marginals for why signatures alone
+        # cannot be trusted on pad rows)
+        db_valid = jnp.any(db != 0, axis=1)
+
+        def local(xs):
+            _, bm = hamming_filter_bitmap(
+                xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0], **kw
+            )
+            hit = unpack_bits(bm, db.shape[0]) & db_valid[None, :]
+            return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
+
+        if depth >= 2 and qs.shape[0] > 1:
+            c0, p0 = local((qs[0], qss[0]))
+
+            def step(carry, xs):
+                c_prev, p_acc = carry
+                c_k, p_k = local(xs)
+                # psum of the *previous* chunk's per-query counts: no
+                # data dependence on this chunk's popcount+verify, so
+                # the collective and the compute overlap
+                return (c_k, p_acc + p_k), jax.lax.psum(c_prev, axes)
+
+            (c_last, partial), counts = jax.lax.scan(
+                step, (c0, p0), (qs[1:], qss[1:])
+            )
+            counts = jnp.concatenate(
+                [counts, jax.lax.psum(c_last, axes)[None]], axis=0
+            )
+        else:
+
+            def step(p_acc, xs):
+                c_k, p_k = local(xs)
+                return p_acc + p_k, jax.lax.psum(c_k, axes)
+
+            partial, counts = jax.lax.scan(
+                step, jnp.zeros((db.shape[0],), I32), (qs, qss)
+            )
+        return counts, partial
+
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                P(None, None, None), P(None, None, None),
+                P(axes, None), P(axes, None), P(None), P(None),
+            ),
+            out_specs=(P(None, None), P(axes)),
+            check_rep=False,
+        )
+    )

@@ -68,6 +68,27 @@ class RangeBackend:
         """Boolean (len(rows), len(cols)) adjacency against db[cols]."""
         return self.query_hits(rows, eps)[:, cols]
 
+    @property
+    def packs_natively(self) -> bool:
+        """True when ``query_hits_packed`` produces packed words without
+        materializing (and re-packing) the boolean hit matrix — callers
+        that need *both* forms (streaming ingest) branch on this so the
+        host paths never pay an unpack→repack round-trip."""
+        return False
+
+    def query_hits_packed(self, rows: np.ndarray, eps: float):
+        """(counts int64 (len(rows),), packed uint32 bitmap of the hit
+        rows in ``repro.core.range_query.pack_bitmap`` bit order).
+
+        Streaming ingest stores and replays adjacency packed; backends
+        whose evaluator produces packed words natively (the sweep
+        engine) override this to skip the unpack→repack round-trip.
+        """
+        from ..core.range_query import pack_bitmap
+
+        hit = self.query_hits(rows, eps)
+        return hit.sum(axis=1, dtype=np.int64), pack_bitmap(hit)
+
     def query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
         """Neighbor counts |N_eps(db[i])| for i in rows (int64).
 

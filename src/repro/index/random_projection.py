@@ -38,6 +38,19 @@ Execution paths — **one contract, three evaluators**:
   per-shard counts/bitmap words.  Column-subset queries gather their
   (small) column side to one device and reuse the plain kernel.
 
+Device evaluation runs through the **device-resident sweep engine**
+(``repro.index.sweep``, ``sweep=True``, the default): all chunks of a
+query sweep execute inside one jitted launch (``chunks_per_launch``
+chunks per compiled program, results synced to host exactly once), with
+the db tile padding and the padded-row corrections applied once per
+sweep.  Under ``mesh=`` the engine software-pipelines the plane:
+chunk k's cross-shard psum overlaps chunk k+1's shard-local
+popcount+verify (``pipeline_depth=2``; ``1`` serializes — the parity
+baseline).  ``sweep=False`` keeps the legacy per-chunk dispatch loop
+(one launch + one synchronous device→host round-trip per chunk) as the
+measured comparison baseline — see ``benchmarks/index_bench.py
+--sweep``.
+
 All paths evaluate :func:`repro.index.signatures.band_hits`, so hit
 sets are identical (up to fp summation order on exact-boundary dots).
 """
@@ -66,6 +79,7 @@ from .signatures import (
     make_projection,
     sign_signatures,
 )
+from .sweep import DEFAULT_CHUNKS_PER_LAUNCH, sweep_bitmap, sweep_counts
 
 __all__ = ["RandomProjectionBackend", "suggest_margin"]
 
@@ -93,6 +107,10 @@ class RandomProjectionBackend(RangeBackend):
         db_tile: int = DEFAULT_DB_TILE,
         mesh=None,
         mesh_axes=None,
+        sweep: bool = True,
+        chunks_per_launch: int = DEFAULT_CHUNKS_PER_LAUNCH,
+        pipeline_depth: int = 2,
+        donate="auto",
     ):
         if verify not in ("band", "full"):
             raise ValueError(f"verify must be 'band' or 'full', got {verify!r}")
@@ -113,6 +131,13 @@ class RandomProjectionBackend(RangeBackend):
         # host path ignores it (the oracle stays single-process)
         self.mesh = mesh
         self.mesh_axes = None if mesh_axes is None else tuple(mesh_axes)
+        # sweep=True: device queries run through the one-launch sweep
+        # engine (repro.index.sweep); False keeps the legacy per-chunk
+        # dispatch loop as the measured baseline
+        self.sweep = bool(sweep)
+        self.chunks_per_launch = int(chunks_per_launch)
+        self.pipeline_depth = int(pipeline_depth)
+        self.donate = donate
         self._data: Optional[np.ndarray] = None
         self._sigs: Optional[np.ndarray] = None
         # append buffers: ``_data``/``_sigs`` are row views into these;
@@ -126,6 +151,11 @@ class RandomProjectionBackend(RangeBackend):
         self._sigs_buf: Optional[np.ndarray] = None
         self._sigs_dev = None
         self._data_dev = None
+        # sweep-engine caches: db-tile-padded capacity operands (device
+        # path) and the host-view signature upload (host path) — both
+        # invalidated with the raw device copies
+        self._sweep_dev = None
+        self._host_sigs_dev = None
         self._plan = None
         self.projection: Optional[np.ndarray] = None
 
@@ -159,6 +189,8 @@ class RandomProjectionBackend(RangeBackend):
         self._data_buf, self._sigs_buf = self._data, self._sigs  # cap == n
         self._sigs_dev = None  # device copies are lazy: rebuilt on demand
         self._data_dev = None
+        self._sweep_dev = None
+        self._host_sigs_dev = None
         self._reshard()
         return self
 
@@ -203,6 +235,8 @@ class RandomProjectionBackend(RangeBackend):
         self._sigs = self._sigs_buf[: n + b]
         self._sigs_dev = None
         self._data_dev = None
+        self._sweep_dev = None
+        self._host_sigs_dev = None
         self._reshard()
         return self
 
@@ -215,8 +249,10 @@ class RandomProjectionBackend(RangeBackend):
             return
         from ..distributed.index_plane import shard_database
 
+        # tile= aligns every shard to the kernel db tile so the sweep
+        # engine's scanned kernel calls never re-pad inside the loop
         self._db_plane, self._sig_plane, self._plan = shard_database(
-            self.mesh, self._data, self._sigs, self.mesh_axes
+            self.mesh, self._data, self._sigs, self.mesh_axes, tile=self.db_tile
         )
 
     @property
@@ -279,7 +315,12 @@ class RandomProjectionBackend(RangeBackend):
             counts += (band & (dots > thresh)).sum(axis=1, dtype=np.int64)
         elif len(pi):
             dots = np.einsum("ij,ij->i", data[rows[pi]], data[pj], optimize=True)
-            np.add.at(counts, pi, (dots > thresh).astype(np.int64))
+            # bincount over the verified rows beats np.add.at by an
+            # order of magnitude (ufunc.at is unbuffered scalar-at-a-
+            # time); this is the host oracle's band-accumulation loop
+            counts += np.bincount(
+                pi[dots > thresh], minlength=counts.shape[0]
+            ).astype(np.int64)
         return counts
 
     # -- device evaluation (fused Pallas tile) -----------------------------
@@ -297,6 +338,101 @@ class RandomProjectionBackend(RangeBackend):
         if self._sigs_dev is None:
             self._sigs_dev = jnp.asarray(self._sigs_buf)
         return self._sigs_dev
+
+    def _host_sigs(self):
+        """Signature operand for the jit'd host-path Hamming sweep.
+
+        For a fitted index (cap == n, the nominal host/batch case) this
+        is the host ``_sigs`` view uploaded once — never the
+        capacity-shaped device buffers.  With append slack (host-path
+        streaming) it falls back to the capacity buffers on purpose:
+        exact-n views would change shape every ``partial_fit`` and
+        re-trace the jit'd sweep per batch, where the capacity shape
+        amortizes recompiles to once per doubling (callers slice the
+        slack columns off with ``[:, :n]``)."""
+        if self._sigs_buf is not self._sigs:
+            return self._device_sigs()
+        if self._host_sigs_dev is None:
+            self._host_sigs_dev = jnp.asarray(self._sigs)
+        return self._host_sigs_dev
+
+    # -- device-resident sweep engine (repro.index.sweep) ------------------
+    def _sweep_db(self):
+        """Capacity-shaped operands pre-padded to the db tile, cached so
+        a sweep never re-pads.  Tile-aligned capacity (the partial_fit
+        shape) shares the plain device copies; otherwise the padded
+        copies are built straight from the host buffers so sweep mode
+        holds ONE device-resident database, never padded + unpadded."""
+        if self._sweep_dev is None:
+            pad = (-self._data_buf.shape[0]) % self.db_tile
+            if pad == 0:
+                self._sweep_dev = (self._device_data(), self._device_sigs())
+            else:
+                db = np.zeros(
+                    (self._data_buf.shape[0] + pad, self._data_buf.shape[1]),
+                    dtype=np.float32,
+                )
+                db[: self._data_buf.shape[0]] = self._data_buf
+                dbs = np.zeros(
+                    (self._sigs_buf.shape[0] + pad, self._sigs_buf.shape[1]),
+                    dtype=np.uint32,
+                )
+                dbs[: self._sigs_buf.shape[0]] = self._sigs_buf
+                self._sweep_dev = (jnp.asarray(db), jnp.asarray(dbs))
+        return self._sweep_dev
+
+    def _sweep_q(self, rows: np.ndarray):
+        """(q, q_sig) for a whole sweep — one gather, not one per chunk.
+        Single-device gathers index the padded sweep operands (row
+        indices are < n, so values are identical) instead of forcing a
+        second, unpadded device copy into the cache."""
+        if self.mesh is not None:
+            return jnp.asarray(self._data[rows]), jnp.asarray(self._sigs[rows])
+        db, dbs = self._sweep_db()
+        ridx = jnp.asarray(rows)
+        return db[ridx], dbs[ridx]
+
+    def _sweep_kw(self):
+        return dict(
+            chunk=self.chunk,
+            chunks_per_launch=self.chunks_per_launch,
+            q_tile=self.q_tile,
+            db_tile=self.db_tile,
+            interpret=self.interpret,
+            donate=self.donate,
+        )
+
+    def _sweep_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        _, bitmap = self._sweep_hits_packed(rows, eps)
+        from ..core.range_query import unpack_bitmap
+
+        return unpack_bitmap(bitmap, self._data.shape[0])
+
+    def _sweep_hits_packed(self, rows: np.ndarray, eps: float):
+        t_lo, t_hi = self.band(eps)
+        q, q_sig = self._sweep_q(rows)
+        n = self._data.shape[0]
+        if self.mesh is not None:
+            return sweep_bitmap(
+                q, q_sig, self._db_plane, self._sig_plane, n, eps, t_lo, t_hi,
+                mesh=self.mesh, axes=self._plan.axes, depth=self.pipeline_depth,
+                **self._sweep_kw(),
+            )
+        db, dbs = self._sweep_db()
+        return sweep_bitmap(q, q_sig, db, dbs, n, eps, t_lo, t_hi, **self._sweep_kw())
+
+    def _sweep_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        t_lo, t_hi = self.band(eps)
+        q, q_sig = self._sweep_q(rows)
+        n = self._data.shape[0]
+        if self.mesh is not None:
+            return sweep_counts(
+                q, q_sig, self._db_plane, self._sig_plane, n, eps, t_lo, t_hi,
+                mesh=self.mesh, axes=self._plan.axes, depth=self.pipeline_depth,
+                **self._sweep_kw(),
+            )
+        db, dbs = self._sweep_db()
+        return sweep_counts(q, q_sig, db, dbs, n, eps, t_lo, t_hi, **self._sweep_kw())
 
     def _q_block(self, rows: np.ndarray):
         """(q, q_sig) jnp arrays for one row chunk.  Under ``mesh=`` the
@@ -385,9 +521,13 @@ class RandomProjectionBackend(RangeBackend):
         assert self._data is not None, "call fit() first"
         rows = np.asarray(rows, dtype=np.int64)
         n = self._data.shape[0]
-        hit = np.zeros((len(rows), n), dtype=bool)
         dev = self.use_device
+        if dev and self.sweep:
+            return self._sweep_hits(rows, eps)
+        hit = np.zeros((len(rows), n), dtype=bool)
         plane = dev and self.mesh is not None
+        if not dev:
+            sigs = self._host_sigs()
         for start, sub, padded in self._padded_chunks(rows):
             if plane:
                 hit[start : start + len(sub)] = self._plane_hits(padded, eps)[
@@ -401,11 +541,24 @@ class RandomProjectionBackend(RangeBackend):
                     q, q_sig, self._device_data(), self._device_sigs(), n, eps
                 )[: len(sub)]
                 continue
-            ham = np.asarray(
-                _hamming_sweep(self._device_sigs()[padded], self._device_sigs())
-            )[: len(sub), :n]
+            ham = np.asarray(_hamming_sweep(sigs[padded], sigs))[: len(sub), :n]
             hit[start : start + len(sub)] = self._tile_hits(sub, None, ham, eps)
         return hit
+
+    @property
+    def packs_natively(self) -> bool:
+        return self.use_device and self.sweep
+
+    def query_hits_packed(self, rows: np.ndarray, eps: float):
+        """(counts, packed bitmap) — the sweep engine's native output;
+        streaming ingest stores/replays adjacency packed, so this skips
+        an unpack→repack round-trip per batch.  Falls back to packing
+        the boolean hits on the non-sweep paths."""
+        assert self._data is not None, "call fit() first"
+        rows = np.asarray(rows, dtype=np.int64)
+        if self.packs_natively:
+            return self._sweep_hits_packed(rows, eps)
+        return super().query_hits_packed(rows, eps)
 
     def query_hits_subset(
         self, rows: np.ndarray, cols: np.ndarray, eps: float
@@ -413,7 +566,6 @@ class RandomProjectionBackend(RangeBackend):
         assert self._data is not None and self._sigs is not None
         rows = np.asarray(rows, dtype=np.int64)
         cols = np.asarray(cols, dtype=np.int64)
-        hit = np.zeros((len(rows), len(cols)), dtype=bool)
         if self.use_device:
             # gather the column side once, not per row chunk; subset
             # queries stay single-device even under mesh= (the gathered
@@ -421,9 +573,24 @@ class RandomProjectionBackend(RangeBackend):
             # on whole-database sweeps)
             if self.mesh is not None:
                 db, db_sig = jnp.asarray(self._data[cols]), jnp.asarray(self._sigs[cols])
+            elif self.sweep:
+                sdb, sdbs = self._sweep_db()
+                cidx = jnp.asarray(cols)
+                db, db_sig = sdb[cidx], sdbs[cidx]
             else:
                 cidx = jnp.asarray(cols)
                 db, db_sig = self._device_data()[cidx], self._device_sigs()[cidx]
+            if self.sweep:
+                from ..core.range_query import unpack_bitmap
+
+                t_lo, t_hi = self.band(eps)
+                q, q_sig = self._sweep_q(rows)
+                _, bitmap = sweep_bitmap(
+                    q, q_sig, db, db_sig, len(cols), eps, t_lo, t_hi,
+                    **self._sweep_kw(),
+                )
+                return unpack_bitmap(bitmap, len(cols))
+            hit = np.zeros((len(rows), len(cols)), dtype=bool)
             for start, sub, padded in self._padded_chunks(rows):
                 q, q_sig = self._q_block(padded)
                 hit[start : start + len(sub)] = self._device_hits(
@@ -433,6 +600,7 @@ class RandomProjectionBackend(RangeBackend):
         # tile both axes: the host popcount materializes a
         # (rows, cols, words) XOR tensor, so keep tiles bounded even
         # when cols is a large core set
+        hit = np.zeros((len(rows), len(cols)), dtype=bool)
         col_tile = 2048
         for rs in range(0, len(rows), self.chunk):
             rsub = rows[rs : rs + self.chunk]
@@ -453,9 +621,13 @@ class RandomProjectionBackend(RangeBackend):
         """
         assert self._data is not None, "call fit() first"
         rows = np.asarray(rows, dtype=np.int64)
-        counts = np.zeros(len(rows), dtype=np.int64)
         dev = self.use_device
+        if dev and self.sweep:
+            return self._sweep_counts(rows, eps)
+        counts = np.zeros(len(rows), dtype=np.int64)
         plane = dev and self.mesh is not None
+        if not dev:
+            sigs = self._host_sigs()
         for start, sub, padded in self._padded_chunks(rows):
             if plane:
                 counts[start : start + len(sub)] = self._plane_counts(padded, eps)[
@@ -467,9 +639,9 @@ class RandomProjectionBackend(RangeBackend):
                     : len(sub)
                 ]
                 continue
-            ham = np.asarray(
-                _hamming_sweep(self._device_sigs()[padded], self._device_sigs())
-            )[: len(sub), : self._data.shape[0]]
+            ham = np.asarray(_hamming_sweep(sigs[padded], sigs))[
+                : len(sub), : self._data.shape[0]
+            ]
             counts[start : start + len(sub)] = self._tile_counts(sub, ham, eps)
         return counts
 
@@ -528,6 +700,16 @@ def suggest_margin(
             db, db_sig = jnp.asarray(backend._data), jnp.asarray(backend._sigs)
         else:
             db, db_sig = backend._device_data(), backend._device_sigs()
+        # the kernel's counters run on the *padded* tile grid; pad rows
+        # and cols are zero-signature pairs whose Hamming distance to a
+        # real row is that row's signature popcount — classify those
+        # popcounts per band and subtract, so the table prices real
+        # pairs only and agrees with the host table on any n
+        zero = np.zeros((1, backend._sigs.shape[1]), np.uint32)
+        q_pop = hamming_numpy(backend._sigs[rows], zero)[:, 0].astype(np.int64)
+        db_pop = hamming_numpy(backend._sigs, zero)[:, 0].astype(np.int64)
+        q_pad = (-len(rows)) % backend.q_tile
+        db_pad = (-n) % backend.db_tile
     else:
         ham = hamming_numpy(backend._sigs[rows], backend._sigs)
 
@@ -543,8 +725,21 @@ def suggest_margin(
                 interpret=backend.interpret, return_stats=True,
             )
             stats = np.asarray(stats, dtype=np.int64).sum(axis=(0, 1))
-            total = stats.sum()
-            acc_frac, band_frac = stats[0] / total, stats[1] / total
+            acc, bnd = int(stats[0]), int(stats[1])
+            if q_pad or db_pad:
+                # real q rows vs zero-padded db cols
+                acc -= db_pad * int((q_pop <= t_lo).sum())
+                bnd -= db_pad * int(((q_pop > t_lo) & (q_pop <= t_hi)).sum())
+                # zero-padded q rows vs real db rows
+                acc -= q_pad * int((db_pop <= t_lo).sum())
+                bnd -= q_pad * int(((db_pop > t_lo) & (db_pop <= t_hi)).sum())
+                # pad-vs-pad corner: Hamming distance 0
+                if t_lo >= 0:
+                    acc -= q_pad * db_pad
+                else:
+                    bnd -= q_pad * db_pad
+            total = len(rows) * n
+            acc_frac, band_frac = acc / total, bnd / total
         else:
             accept = ham <= t_lo
             band = (ham <= t_hi) & ~accept

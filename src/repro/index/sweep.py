@@ -1,0 +1,365 @@
+"""Device-resident sweep engine: one launch per query sweep.
+
+The per-chunk query paths dispatch one kernel launch plus one
+synchronous device->host round-trip *per 256-row chunk* — at 40k rows
+that is ~160 dispatches and ~160 pipeline stalls for a single
+whole-database sweep, with the band thresholds, the db tile padding,
+and the padded-row correction re-materialized every chunk.  This module
+replaces that loop with a device-resident sweep:
+
+* all query chunks of a launch run inside one jitted
+  ``lax.fori_loop`` over the capacity-shaped operands, each iteration
+  writing its chunk's counts (and packed bitmap words) into
+  preallocated output slabs;
+* the slabs are **donated** back into every subsequent launch
+  (``donate_argnums``) so a multi-launch sweep threads one buffer
+  through the whole sweep instead of copying it per launch —
+  ``donate=False`` is the opt-out for backends that reject aliasing;
+* the db-side tile padding, the dual-threshold padded-row correction
+  (``_pad_col_hits``) and the bitmap tail mask are computed **once per
+  sweep**, not once per chunk;
+* results are synced to host exactly once, via a single ``device_get``
+  at sweep end — every launch in between is dispatched asynchronously.
+
+Launch shapes are quantized so compilation stays amortized: a sweep is
+cut into launches of ``chunks_per_launch`` fixed-size chunks (the tail
+launch is padded with zero query rows, which are sliced off after the
+final sync), so the engine compiles one program per
+``(chunk, chunks_per_launch, n, d)`` signature regardless of how many
+rows a caller sweeps.
+
+Under ``mesh=`` the same driver routes each launch through the sharded
+index plane's pipelined evaluator
+(:func:`repro.distributed.index_plane.sharded_sweep_launch`): chunks
+are software-pipelined through a ``lax.scan`` carry so chunk *k*'s
+cross-shard ``psum`` overlaps chunk *k+1*'s shard-local
+popcount+verify (the plane's double-buffer — ``depth=1`` serializes
+them, the parity baseline).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.hamming_filter.kernel import (
+    DEFAULT_DB_TILE,
+    DEFAULT_Q_TILE,
+    hamming_filter_pallas,
+)
+from ..kernels.hamming_filter.ops import (
+    _pad_col_hits,
+    _tail_word_mask,
+    default_interpret,
+)
+
+__all__ = ["SweepPlan", "plan_sweep", "sweep_counts", "sweep_bitmap"]
+
+DEFAULT_CHUNKS_PER_LAUNCH = 8
+
+
+@dataclass(frozen=True)
+class SweepPlan:
+    """Launch layout of one query sweep.
+
+    ``chunk`` is the caller's chunk rounded up to the q-tile multiple;
+    a launch processes ``cpl`` chunks, and the sweep issues
+    ``n_launches`` launches whose last one is padded with zero query
+    rows up to ``nq_padded``.
+    """
+
+    nq: int
+    chunk: int
+    cpl: int
+    n_launches: int
+
+    @property
+    def rows_per_launch(self) -> int:
+        return self.chunk * self.cpl
+
+    @property
+    def nq_padded(self) -> int:
+        return self.n_launches * self.rows_per_launch
+
+
+def plan_sweep(
+    nq: int,
+    chunk: int,
+    q_tile: int = DEFAULT_Q_TILE,
+    chunks_per_launch: int = DEFAULT_CHUNKS_PER_LAUNCH,
+) -> SweepPlan:
+    chunk = -(-max(chunk, 1) // q_tile) * q_tile
+    n_chunks = max(1, -(-nq // chunk))
+    cpl = max(1, min(chunks_per_launch, n_chunks))
+    n_launches = -(-n_chunks // cpl)
+    return SweepPlan(nq, chunk, cpl, n_launches)
+
+
+# ---------------------------------------------------------------------------
+# launch bodies: fori_loop over chunks, slab accumulators
+# ---------------------------------------------------------------------------
+
+
+def _counts_launch_impl(
+    out, start, q, q_sig, db, db_sig, eps, band, *, chunk, q_tile, db_tile, interpret
+):
+    """One launch: ``cpl`` chunks of band-contract counts written into
+    the (donated) ``out`` slab at ``start``."""
+    cpl = q.shape[0] // chunk
+    qs = q.reshape(cpl, chunk, q.shape[1])
+    qss = q_sig.reshape(cpl, chunk, q_sig.shape[1])
+
+    def body(k, acc):
+        qk = jax.lax.dynamic_index_in_dim(qs, k, 0, keepdims=False)
+        qsk = jax.lax.dynamic_index_in_dim(qss, k, 0, keepdims=False)
+        c = hamming_filter_pallas(
+            qk, db, qsk, db_sig, eps[0], band[0], band[1],
+            q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+        )
+        return jax.lax.dynamic_update_slice(acc, c, (start + k * chunk,))
+
+    return jax.lax.fori_loop(0, cpl, body, out)
+
+
+def _bitmap_launch_impl(
+    out, bm_out, start, q, q_sig, db, db_sig, eps, band,
+    *, chunk, q_tile, db_tile, interpret,
+):
+    cpl = q.shape[0] // chunk
+    qs = q.reshape(cpl, chunk, q.shape[1])
+    qss = q_sig.reshape(cpl, chunk, q_sig.shape[1])
+
+    def body(k, carry):
+        acc, bm = carry
+        qk = jax.lax.dynamic_index_in_dim(qs, k, 0, keepdims=False)
+        qsk = jax.lax.dynamic_index_in_dim(qss, k, 0, keepdims=False)
+        c, w = hamming_filter_pallas(
+            qk, db, qsk, db_sig, eps[0], band[0], band[1],
+            q_tile=q_tile, db_tile=db_tile, interpret=interpret, with_bitmap=True,
+        )
+        acc = jax.lax.dynamic_update_slice(acc, c, (start + k * chunk,))
+        bm = jax.lax.dynamic_update_slice(bm, w, (start + k * chunk, 0))
+        return acc, bm
+
+    return jax.lax.fori_loop(0, cpl, body, (out, bm_out))
+
+
+_STATIC = ("chunk", "q_tile", "db_tile", "interpret")
+_counts_launch = jax.jit(_counts_launch_impl, static_argnames=_STATIC)
+_counts_launch_donated = jax.jit(
+    _counts_launch_impl, static_argnames=_STATIC, donate_argnums=(0,)
+)
+_bitmap_launch = jax.jit(_bitmap_launch_impl, static_argnames=_STATIC)
+_bitmap_launch_donated = jax.jit(
+    _bitmap_launch_impl, static_argnames=_STATIC, donate_argnums=(0, 1)
+)
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+
+
+def _resolve_donate(donate) -> bool:
+    # "auto" donates everywhere: XLA aliases the slabs in place on every
+    # current backend (incl. CPU), so a multi-launch sweep threads one
+    # buffer through all launches instead of copying it per launch;
+    # donate=False is the escape hatch for backends that reject aliasing
+    return True if donate == "auto" else bool(donate)
+
+
+def _pad_q(q, q_sig, nq_padded: int):
+    """Zero query rows up to the launch multiple (results sliced off)."""
+    q = jnp.asarray(q, jnp.float32)
+    q_sig = jnp.asarray(q_sig, jnp.uint32)
+    pad = nq_padded - q.shape[0]
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        q_sig = jnp.pad(q_sig, ((0, pad), (0, 0)))
+    return q, q_sig
+
+
+def _pad_db(db, db_sig, db_tile: int):
+    db = jnp.asarray(db)
+    db_sig = jnp.asarray(db_sig, jnp.uint32)
+    pad = (-db.shape[0]) % db_tile
+    if pad:
+        db = jnp.pad(db, ((0, pad), (0, 0)))
+        db_sig = jnp.pad(db_sig, ((0, pad), (0, 0)))
+    return db, db_sig
+
+
+@functools.partial(jax.jit, static_argnames=("n_pad",))
+def _count_correction(q_sig, eps, band, n_pad: int):
+    return _pad_col_hits(q_sig, eps[0], band[0], band[1], n_pad)
+
+
+def _prep(nq, eps, t_lo, t_hi, chunk, q_tile, chunks_per_launch, interpret):
+    if interpret is None:
+        interpret = default_interpret()
+    plan = plan_sweep(nq, chunk, q_tile, chunks_per_launch)
+    eps_op = jnp.asarray([eps], jnp.float32)
+    band_op = jnp.stack(
+        [jnp.asarray(t_lo, jnp.int32), jnp.asarray(t_hi, jnp.int32)]
+    )
+    return plan, eps_op, band_op, interpret
+
+
+def _sweep(
+    kind: str,
+    q,
+    q_sig,
+    db,
+    db_sig,
+    n: int,
+    eps,
+    t_lo,
+    t_hi,
+    *,
+    chunk: int,
+    chunks_per_launch: int,
+    q_tile: int,
+    db_tile: int,
+    interpret,
+    donate,
+    mesh,
+    axes,
+    depth: int,
+):
+    """Shared driver for both sweep variants — one place owns the
+    launch loop, the donate selection, the pad corrections, and the
+    single end-of-sweep host sync."""
+    nq = q.shape[0]
+    plan, eps_op, band_op, interpret = _prep(
+        nq, eps, t_lo, t_hi, chunk, q_tile, chunks_per_launch, interpret
+    )
+    q, q_sig = _pad_q(q, q_sig, plan.nq_padded)
+    bitmap = kind == "bitmap"
+    if mesh is not None:
+        from ..distributed.index_plane import sharded_sweep_launch
+
+        n_pad, parts = None, []
+        for L in range(plan.n_launches):
+            sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
+            part, n_pad = sharded_sweep_launch(
+                kind, q[sl], q_sig[sl], db, db_sig, eps_op, band_op,
+                mesh=mesh, axes=axes, chunk=plan.chunk, q_tile=q_tile,
+                db_tile=db_tile, interpret=interpret, depth=depth, n=n,
+            )
+            parts.append(part if bitmap else (part,))
+        outs = tuple(
+            jnp.concatenate(p) if len(p) > 1 else p[0] for p in zip(*parts)
+        )
+    else:
+        db, db_sig = _pad_db(db, db_sig, db_tile)
+        n_pad = db.shape[0] - n
+        donated = _resolve_donate(donate)
+        if bitmap:
+            launch = _bitmap_launch_donated if donated else _bitmap_launch
+            outs = (
+                jnp.zeros((plan.nq_padded,), jnp.int32),
+                jnp.zeros((plan.nq_padded, db.shape[0] // 32), jnp.uint32),
+            )
+        else:
+            launch = _counts_launch_donated if donated else _counts_launch
+            outs = (jnp.zeros((plan.nq_padded,), jnp.int32),)
+        for L in range(plan.n_launches):
+            sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
+            outs = launch(
+                *outs, jnp.int32(L * plan.rows_per_launch), q[sl], q_sig[sl],
+                db, db_sig, eps_op, band_op,
+                chunk=plan.chunk, q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            )
+            if not bitmap:
+                outs = (outs,)
+    out = outs[0]
+    words_needed = -(-n // 32)
+    if n_pad:
+        out = out - _count_correction(q_sig, eps_op, band_op, n_pad)
+    if not bitmap:
+        return np.asarray(jax.device_get(out)[:nq]).astype(np.int64)
+    bm_out = outs[1]
+    if n_pad:
+        bm_out = bm_out[:, :words_needed] & _tail_word_mask(words_needed, n)[None, :]
+    counts, bm = jax.device_get((out, bm_out))
+    return (
+        np.asarray(counts)[:nq].astype(np.int64),
+        np.ascontiguousarray(np.asarray(bm)[:nq, :words_needed]),
+    )
+
+
+def sweep_counts(
+    q,
+    q_sig,
+    db,
+    db_sig,
+    n: int,
+    eps,
+    t_lo,
+    t_hi,
+    *,
+    chunk: int = 256,
+    chunks_per_launch: int = DEFAULT_CHUNKS_PER_LAUNCH,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret=None,
+    donate="auto",
+    mesh=None,
+    axes=None,
+    depth: int = 2,
+) -> np.ndarray:
+    """Band-contract neighbor counts of every query row against the
+    first ``n`` db rows, as one device-resident sweep.
+
+    ``db``/``db_sig`` may carry capacity slack past ``n`` — rows there
+    must be zero vectors with zero signature words (the streaming append
+    shape); tile padding and the dual-threshold correction for *all*
+    pad rows are applied once per sweep.  Under ``mesh=`` they must be
+    the plane-sharded arrays from ``shard_database`` and each launch
+    runs the pipelined sharded evaluator instead.  Returns int64
+    ``(nq,)`` counts after exactly one host sync.
+    """
+    return _sweep(
+        "count", q, q_sig, db, db_sig, n, eps, t_lo, t_hi,
+        chunk=chunk, chunks_per_launch=chunks_per_launch, q_tile=q_tile,
+        db_tile=db_tile, interpret=interpret, donate=donate,
+        mesh=mesh, axes=axes, depth=depth,
+    )
+
+
+def sweep_bitmap(
+    q,
+    q_sig,
+    db,
+    db_sig,
+    n: int,
+    eps,
+    t_lo,
+    t_hi,
+    *,
+    chunk: int = 256,
+    chunks_per_launch: int = DEFAULT_CHUNKS_PER_LAUNCH,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret=None,
+    donate="auto",
+    mesh=None,
+    axes=None,
+    depth: int = 2,
+):
+    """(counts int64 ``(nq,)``, packed adjacency uint32
+    ``(nq, ceil(n/32))``) for every query row vs the first ``n`` db
+    rows — the one-launch counterpart of the per-chunk
+    ``hamming_filter_bitmap`` loop; pad bits are cleared and results
+    sync to host exactly once.
+    """
+    return _sweep(
+        "bitmap", q, q_sig, db, db_sig, n, eps, t_lo, t_hi,
+        chunk=chunk, chunks_per_launch=chunks_per_launch, q_tile=q_tile,
+        db_tile=db_tile, interpret=interpret, donate=donate,
+        mesh=mesh, axes=axes, depth=depth,
+    )

@@ -98,7 +98,9 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
     def cluster_step(rmi_params, db, queries, db_sig=None):
         """One frontier round: RMI predicts frontier cardinalities; the
         whole frontier's range counts + partial-neighbor increments are
-        computed against the device-sharded database."""
+        computed against the device-sharded database, as one
+        device-resident sweep (frontier signatures packed once, chunks
+        software-pipelined through the plane)."""
         feats = jnp.concatenate(
             [queries, jnp.full((queries.shape[0], 1), base.eps, queries.dtype)], axis=1
         )
@@ -113,37 +115,6 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
             # plane applies the same mask shard-locally)
             db_valid = jnp.any(db != 0, axis=1)
 
-        def chunk_counts(qc):
-            if use_rp:
-                from ..index.signatures import band_hits, hamming_words, pack_bits
-
-                q_sig = pack_bits((qc.astype(F32) @ proj) >= 0.0)
-            if use_kernel:
-                from ..distributed.index_plane import sharded_band_marginals
-
-                # the fused tile, shard-local on every mesh size:
-                # popcount band split + MXU verify of band tiles only
-                # (band-free tiles skip their matmul); only per-query
-                # count psums cross the network, per-row partials stay
-                # sharded where the database lives
-                return sharded_band_marginals(
-                    qc.astype(F32), db, q_sig, db_sig, base.eps, t_hi,
-                    t_lo=t_lo, mesh=mesh, axes=axes,
-                )
-            # native-dtype MXU dot with fp32 accumulation: upcasting the
-            # database to f32 first doubles HBM traffic and halves the
-            # bf16 MXU rate (§Perf iteration on web_1b)
-            dots = jax.lax.dot_general(
-                qc, db, (((1,), (1,)), ((), ())),
-                preferred_element_type=F32,
-            )                                                  # (C, n)
-            if use_rp:
-                ham = hamming_words(q_sig, db_sig)
-                hit = band_hits(dots, ham, base.eps, t_lo, t_hi) & db_valid[None, :]
-            else:
-                hit = dots > thresh
-            return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
-
         # bound the live (chunk, n_local) fp32 score tile to ~0.5 GiB
         # the rp path adds a (chunk, n_local) int32 ham matrix + uint32
         # XOR temporaries on top of the fp32 score tile: halve the budget
@@ -153,7 +124,52 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         while frontier // n_chunks > rows_budget and n_chunks < frontier:
             n_chunks *= 2
         qs = queries.reshape(n_chunks, frontier // n_chunks, d)
-        counts, partials = jax.lax.map(chunk_counts, qs)
+
+        if use_rp:
+            from ..index.signatures import band_hits, hamming_words, pack_bits
+
+            # signatures for the *whole frontier* packed once per sweep
+            # (one matmul + one pack), not once per chunk
+            q_sig_all = pack_bits((queries.astype(F32) @ proj) >= 0.0)
+            q_sigs = q_sig_all.reshape(n_chunks, frontier // n_chunks, sig_words)
+
+        if use_kernel:
+            from ..distributed.index_plane import sharded_sweep_marginals
+
+            # the fused tile, shard-local on every mesh size, all
+            # chunks in one launch: popcount band split + MXU verify of
+            # band tiles only (band-free tiles skip their matmul); only
+            # per-query count psums cross the network — double-buffered
+            # against the next chunk's popcount+verify at
+            # index_pipeline >= 2 — and per-row partials stay sharded
+            # where the database lives
+            counts, partial_counts = sharded_sweep_marginals(
+                qs.astype(F32), db, q_sigs, db_sig, base.eps, t_hi,
+                t_lo=t_lo, mesh=mesh, axes=axes, depth=base.index_pipeline,
+            )
+            counts = counts.reshape(frontier)
+            counts = (counts.astype(F32) * gate).astype(I32)
+            return counts, partial_counts, pred
+
+        def chunk_counts(xs):
+            qc = xs[0] if use_rp else xs
+            # native-dtype MXU dot with fp32 accumulation: upcasting the
+            # database to f32 first doubles HBM traffic and halves the
+            # bf16 MXU rate (§Perf iteration on web_1b)
+            dots = jax.lax.dot_general(
+                qc, db, (((1,), (1,)), ((), ())),
+                preferred_element_type=F32,
+            )                                                  # (C, n)
+            if use_rp:
+                ham = hamming_words(xs[1], db_sig)
+                hit = band_hits(dots, ham, base.eps, t_lo, t_hi) & db_valid[None, :]
+            else:
+                hit = dots > thresh
+            return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
+
+        counts, partials = jax.lax.map(
+            chunk_counts, (qs, q_sigs) if use_rp else qs
+        )
         counts = counts.reshape(frontier)
         partial_counts = partials.sum(axis=0)
         # masked by skip decisions (skipped queries contribute nothing)
@@ -189,6 +205,7 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
             n_shards=n_shards,
             fused_kernel=use_kernel,
             sharded=use_kernel and n_shards > 1,
+            index_pipeline=base.index_pipeline,
         )
     return LoweredCell(
         f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh, meta,

@@ -187,14 +187,25 @@ class StreamingLAF:
 
         exec_idx = new_idx[exec_mask]
         packed: list[tuple[np.ndarray, np.ndarray]] = []
+        native = getattr(bk, "packs_natively", False)
         for start in range(0, len(exec_idx), self.block_size):
             rows = exec_idx[start : start + self.block_size]
-            hit = bk.query_hits(rows, eps)
+            # replay storage keeps adjacency packed; the sweep engine
+            # emits packed words natively (one launch per block, one
+            # host sync), so on that path only the ingest-side unpack
+            # is paid — host backends keep the boolean-first order so
+            # they never pay an unpack→repack round-trip
+            if native:
+                _, pk = bk.query_hits_packed(rows, eps)
+                hit = unpack_bitmap(pk, state.n)
+            else:
+                hit = bk.query_hits(rows, eps)
+                pk = pack_bitmap(hit)
             # exclude the whole executed set from the transposed bumps:
             # a same-batch pair split across two blocks would otherwise
             # double-count for the earlier block's endpoint
             state.ingest_rows(rows, hit, exclude=exec_idx)
-            packed.append((rows, pack_bitmap(hit)))
+            packed.append((rows, pk))
 
         # one promotion round closes the core set: new executed rows are
         # core straight from their counts; old/skipped points crossing

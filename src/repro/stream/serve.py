@@ -13,7 +13,12 @@ sure are we?  ``ClusterIndex`` is an immutable snapshot built from a
    pruned with the same signed-RP Hamming band the index uses (signature
    XOR+popcount, sure-accept below ``t_lo``, exact dot only for the
    band), so per-query cost is |shortlist members| signature words plus
-   a handful of dots — never an O(n·d) scan;
+   a handful of dots — never an O(n·d) scan.  On device this runs
+   through the shared sweep engine (``repro.index.sweep``): a block of
+   queries is verified against the union of its shortlisted clusters'
+   members in **one** launch (``device="auto"`` routes through it
+   whenever a real accelerator backs JAX; the host numpy band loop is
+   retained as the oracle);
 3. **assignment** — the query joins the cluster holding the plurality
    of its eps-neighbors (DBSCAN's border rule, generalized to ties);
    confidence is the fraction of its found eps-neighbors in that
@@ -57,9 +62,18 @@ class ClusterIndex:
         projection: Optional[np.ndarray] = None,
         band: Optional[tuple[int, int]] = None,
         version: int = 0,
+        device="auto",
+        sweep_kw: Optional[dict] = None,
     ):
+        if device not in (True, False, "auto"):
+            raise ValueError(f"device must be True, False, or 'auto', got {device!r}")
         self.eps = float(eps)
         self.version = version
+        self.device = device
+        # kernel/engine knobs (chunk, q_tile, db_tile, interpret, ...)
+        # forwarded to repro.index.sweep — from_stream copies them off
+        # the backing index so serving verifies on the same evaluator
+        self.sweep_kw = dict(sweep_kw or {})
         self._data = data
         self._sigs = sigs
         self._projection = projection
@@ -81,6 +95,15 @@ class ClusterIndex:
     @classmethod
     def from_stream(cls, stream) -> "ClusterIndex":
         bk = stream.backend
+        sweep_kw = {
+            k: getattr(bk, a)
+            for k, a in (
+                ("chunk", "chunk"), ("q_tile", "q_tile"), ("db_tile", "db_tile"),
+                ("interpret", "interpret"), ("chunks_per_launch", "chunks_per_launch"),
+                ("donate", "donate"),
+            )
+            if hasattr(bk, a)
+        }
         return cls(
             bk.data,
             stream.state.labels(),
@@ -89,6 +112,8 @@ class ClusterIndex:
             projection=getattr(bk, "projection", None),
             band=bk.band(stream.eps) if hasattr(bk, "band") else None,
             version=stream.state.version,
+            device=getattr(bk, "device", "auto"),
+            sweep_kw=sweep_kw,
         )
 
     def members(self, c: int) -> np.ndarray:
@@ -130,6 +155,11 @@ class ClusterIndex:
         cluster_of[self._members] = np.repeat(
             np.arange(self.n_clusters), np.diff(self._offsets)
         )
+        if q_sig is not None and self._use_engine():
+            self._assign_engine(
+                q, q_sig, top, cluster_of, labels, conf, hits_out, min_hits
+            )
+            return AssignResult(labels, conf, hits_out)
         for i in range(nq):
             cand = np.concatenate([self.members(c) for c in top[i]])
             if q_sig is not None:
@@ -145,15 +175,100 @@ class ClusterIndex:
             else:
                 hit = (self._data[cand] @ q[i]) > thresh
             hit_members = cand[hit]
-            total = len(hit_members)
-            hits_out[i] = total
-            if total < max(min_hits, 1):
-                continue
-            tally = np.bincount(cluster_of[hit_members], minlength=self.n_clusters)
-            best = int(tally.argmax())
-            labels[i] = best
-            conf[i] = tally[best] / total
+            self._record(
+                i, cluster_of[hit_members], labels, conf, hits_out, min_hits
+            )
         return AssignResult(labels, conf, hits_out)
+
+    def _record(self, i, hit_clusters, labels, conf, hits_out, min_hits) -> None:
+        """Plurality cluster + confidence from one query's eps-neighbor
+        cluster ids — the single definition both the host loop and the
+        engine path record through, so they stay label-identical."""
+        total = len(hit_clusters)
+        hits_out[i] = total
+        if total < max(min_hits, 1):
+            return
+        tally = np.bincount(hit_clusters, minlength=self.n_clusters)
+        best = int(tally.argmax())
+        labels[i] = best
+        conf[i] = tally[best] / total
+
+    # -- device-resident assignment (the shared sweep engine) --------------
+    def _use_engine(self) -> bool:
+        if self.device == "auto":
+            from ..kernels.hamming_filter.ops import default_interpret
+
+            return not default_interpret()
+        return bool(self.device)
+
+    def _assign_engine(
+        self, q, q_sig, top, cluster_of, labels, conf, hits_out, min_hits
+    ) -> None:
+        """Batch the band verification: one sweep launch per query block
+        against the union of the block's shortlisted clusters' members
+        (per-query results are then restricted to that query's own
+        shortlist, so labels/confidence are identical to the per-query
+        host loop)."""
+        from ..core.range_query import unpack_bitmap
+        from ..index.sweep import sweep_bitmap
+
+        t_lo, t_hi = self._band
+        sizes = np.diff(self._offsets)
+
+        def verify(s: int, e: int) -> None:
+            ids = np.unique(top[s:e])
+            n_cand = int(sizes[ids].sum())
+            if n_cand == 0:
+                return
+            # the block shares one launch over the union of its
+            # shortlisted clusters; low-overlap traffic would inflate a
+            # query's verified set from |own shortlist| to |union|, so
+            # split the block until the shared work stays within ~4x
+            # the per-query shortlist totals
+            if e - s > 8 and n_cand * (e - s) > 4 * int(sizes[top[s:e]].sum()):
+                mid = (s + e) // 2
+                verify(s, mid)
+                verify(mid, e)
+                return
+            cand = np.concatenate([self.members(c) for c in ids])
+            # bucket the candidate side to a power-of-two row count, no
+            # smaller than the kernel db tile (the padding quantum the
+            # engine applies anyway; zero rows + zero signatures are
+            # exactly the capacity-slack shape its pad correction
+            # handles) so the jitted launch compiles O(log n) shapes,
+            # not one per shortlist union size — the serving hot path
+            kw = dict(self.sweep_kw)
+            db_tile = kw.get("db_tile", 256)
+            bucket = max(db_tile, 1 << int(np.ceil(np.log2(len(cand)))))
+            db = np.zeros((bucket, self._data.shape[1]), dtype=np.float32)
+            db[: len(cand)] = self._data[cand]
+            db_sig = np.zeros((bucket, self._sigs.shape[1]), dtype=np.uint32)
+            db_sig[: len(cand)] = self._sigs[cand]
+            # clamp the query chunk to the (power-of-two bucketed) leaf
+            # size: a split-down leaf of 8 queries must not pad to a
+            # full 256-row kernel pass
+            kw["chunk"] = min(
+                kw.get("chunk", 256),
+                max(kw.get("q_tile", 128), 1 << int(np.ceil(np.log2(e - s)))),
+            )
+            _, bm = sweep_bitmap(
+                q[s:e], q_sig[s:e], db, db_sig,
+                len(cand), self.eps, t_lo, t_hi, **kw,
+            )
+            hit = unpack_bitmap(bm, len(cand))
+            cl = cluster_of[cand]
+            for bi in range(e - s):
+                i = s + bi
+                sel = cl[hit[bi]]
+                # restrict to the query's own shortlist (<= `shortlist`
+                # ids) — isin over the few hits, never an O(n_clusters)
+                # mask per query
+                self._record(
+                    i, sel[np.isin(sel, top[i])], labels, conf, hits_out, min_hits
+                )
+
+        for s in range(0, q.shape[0], 256):
+            verify(s, min(s + 256, q.shape[0]))
 
 
 def _unit_rows(x: np.ndarray) -> np.ndarray:

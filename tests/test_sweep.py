@@ -1,0 +1,292 @@
+"""The device-resident sweep engine (``repro.index.sweep``).
+
+Bit-exact parity of the one-launch sweep against the retained
+per-chunk paths (the host numpy oracle and the legacy per-chunk device
+dispatch loop), across the shapes that exercise every padding layer:
+non-chunk-multiple row counts (launch-tail padding), eps > 1 (zero pad
+rows passing the dot test), capacity-padded post-``partial_fit``
+operands (append slack), and the 4-device forced-host mesh (the
+double-buffered sharded plane, both pipeline depths).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.range_query import unpack_bitmap
+from repro.data.synthetic import make_angular_clusters
+from repro.index import RandomProjectionBackend, suggest_margin
+from repro.index.sweep import plan_sweep
+
+EPS = 0.55
+
+
+@pytest.fixture(scope="module")
+def sweep_data():
+    # 613: not a multiple of the chunk, the kernel tiles, or 32 — every
+    # query sweeps through launch-tail, tile, and bitmap-word padding
+    data, _ = make_angular_clusters(613, 32, 8, kappa=120, noise_frac=0.3, seed=2)
+    return data
+
+
+CFG = dict(n_bits=64, margin=3.0, seed=3, chunk=64, q_tile=32, db_tile=64)
+
+
+def _host(data):
+    return RandomProjectionBackend(device=False, **CFG).fit(data)
+
+
+def _engine(data, **kw):
+    cfg = dict(CFG, device=True, interpret=True, sweep=True)
+    cfg.update(kw)
+    return RandomProjectionBackend(**cfg).fit(data)
+
+
+# ---------------------------------------------------------------------------
+# launch planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_sweep_quantizes_launches():
+    p = plan_sweep(613, chunk=60, q_tile=32, chunks_per_launch=4)
+    assert p.chunk == 64  # rounded to the q tile
+    assert p.cpl == 4 and p.rows_per_launch == 256
+    assert p.n_launches == 3 and p.nq_padded == 768  # tail launch padded
+    # small sweeps shrink the launch instead of padding 8x
+    tiny = plan_sweep(40, chunk=64, q_tile=32, chunks_per_launch=8)
+    assert tiny.cpl == 1 and tiny.n_launches == 1 and tiny.nq_padded == 64
+
+
+# ---------------------------------------------------------------------------
+# single device: one-launch == legacy per-chunk == host oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cpl", [1, 3, 8])
+def test_sweep_matches_host_and_per_chunk(sweep_data, cpl):
+    host = _host(sweep_data)
+    legacy = RandomProjectionBackend(
+        device=True, interpret=True, sweep=False, **CFG
+    ).fit(sweep_data)
+    eng = _engine(sweep_data, chunks_per_launch=cpl)
+    rows = np.arange(0, 613, 2)  # 307 rows: not a chunk multiple
+    hh = host.query_hits(rows, EPS)
+    np.testing.assert_array_equal(legacy.query_hits(rows, EPS), hh)
+    np.testing.assert_array_equal(eng.query_hits(rows, EPS), hh)
+    np.testing.assert_array_equal(eng.query_counts(rows, EPS), hh.sum(axis=1))
+    cols = np.arange(5, 600, 7)
+    np.testing.assert_array_equal(
+        eng.query_hits_subset(rows, cols, EPS), hh[:, cols]
+    )
+
+
+def test_sweep_eps_gt_one_pad_correction(sweep_data):
+    """eps > 1 makes every zero pad row pass the dot test — the sweep's
+    once-per-sweep correction must subtract tile pads exactly."""
+    host, eng = _host(sweep_data), _engine(sweep_data)
+    rows = np.arange(0, 613, 5)
+    hh = host.query_hits(rows, 1.2)
+    np.testing.assert_array_equal(eng.query_hits(rows, 1.2), hh)
+    np.testing.assert_array_equal(eng.query_counts(rows, 1.2), hh.sum(axis=1))
+
+
+@pytest.mark.parametrize("eps", [EPS, 1.2])
+def test_sweep_capacity_padded_operands(sweep_data, eps):
+    """Post-``partial_fit`` the device operands are capacity-shaped
+    (append slack of zero rows); the sweep corrects that slack together
+    with the tile pad, once per sweep."""
+    host = _host(sweep_data)
+    inc = RandomProjectionBackend(device=True, interpret=True, sweep=True, **CFG)
+    for start in range(0, 613, 379):  # ragged batches force capacity slack
+        inc.partial_fit(sweep_data[start : start + 379])
+    assert inc._dev_pad or inc._data_buf.shape[0] % CFG["db_tile"] == 0
+    rows = np.arange(0, 613, 3)
+    np.testing.assert_array_equal(
+        inc.query_hits(rows, eps), host.query_hits(rows, eps)
+    )
+    np.testing.assert_array_equal(
+        inc.query_counts(rows, eps), host.query_counts(rows, eps)
+    )
+
+
+def test_query_hits_packed_is_sweep_native(sweep_data):
+    host, eng = _host(sweep_data), _engine(sweep_data)
+    rows = np.arange(0, 613, 4)
+    hh = host.query_hits(rows, EPS)
+    counts, pk = eng.query_hits_packed(rows, EPS)
+    np.testing.assert_array_equal(unpack_bitmap(pk, 613), hh)
+    np.testing.assert_array_equal(counts, hh.sum(axis=1))
+    # host backends fall back to packing the boolean hits
+    counts_h, pk_h = host.query_hits_packed(rows, EPS)
+    np.testing.assert_array_equal(pk_h, pk)
+    np.testing.assert_array_equal(counts_h, counts)
+
+
+# ---------------------------------------------------------------------------
+# margin auto-tune: device occupancy priced on real pairs only
+# ---------------------------------------------------------------------------
+
+
+def test_suggest_margin_tables_agree_on_padded_grid(sweep_data):
+    """The kernel counters run on the padded tile grid; after the pad
+    correction the device table must equal the host table exactly on a
+    non-tile-multiple n (613 % 64 != 0)."""
+    host = _host(sweep_data)
+    dev = RandomProjectionBackend(device=True, interpret=True, **CFG).fit(sweep_data)
+    m_h, tab_h = suggest_margin(host, EPS, report=True)
+    m_d, tab_d = suggest_margin(dev, EPS, report=True)
+    assert m_h == m_d
+    for rh, rd in zip(tab_h, tab_d):
+        assert rh["margin"] == rd["margin"]
+        assert rh["band_frac"] == pytest.approx(rd["band_frac"], abs=1e-12)
+        assert rh["accept_frac"] == pytest.approx(rd["accept_frac"], abs=1e-12)
+
+
+def test_tile_counts_bincount_matches_hits(sweep_data):
+    """The host counts fast-path (bincount band accumulation) must equal
+    the materialized hit-matrix row sums."""
+    host = _host(sweep_data)
+    rows = np.arange(0, 613, 2)
+    np.testing.assert_array_equal(
+        host.query_counts(rows, EPS), host.query_hits(rows, EPS).sum(axis=1)
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving: assignment through the shared engine
+# ---------------------------------------------------------------------------
+
+
+def test_serve_assign_engine_matches_host_loop(sweep_data):
+    from repro.stream import StreamingLAF
+    from repro.stream.serve import ClusterIndex
+
+    s = StreamingLAF(
+        EPS, 5, backend="random_projection", device=True, interpret=True,
+        n_bits=64, seed=3, chunk=64, q_tile=32, db_tile=64,
+    )
+    for start in range(0, 613, 250):
+        s.partial_fit(sweep_data[start : start + 250])
+    kw = dict(
+        sigs=s.backend.signatures, projection=s.backend.projection,
+        band=s.backend.band(EPS),
+    )
+    labels = s.state.labels()
+    host_ix = ClusterIndex(s.backend.data, labels, EPS, device=False, **kw)
+    dev_ix = ClusterIndex(
+        s.backend.data, labels, EPS, device=True,
+        sweep_kw=dict(chunk=64, q_tile=32, db_tile=64, interpret=True), **kw,
+    )
+    rng = np.random.default_rng(1)
+    q = rng.standard_normal((300, 32)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    a, b = host_ix.assign(q), dev_ix.assign(q)
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.n_hits, b.n_hits)
+    np.testing.assert_allclose(a.confidence, b.confidence)
+    assert (a.labels >= 0).any()
+
+
+# ---------------------------------------------------------------------------
+# forced 4-host-device mesh: the double-buffered plane
+# ---------------------------------------------------------------------------
+
+
+def test_plane_sweep_4dev_pipelined_parity(forced_device_run):
+    """Pipelined (depth 2) and serialized (depth 1) plane sweeps both
+    reproduce the host oracle bit-for-bit on a non-shard-multiple n,
+    incl. eps > 1 and a partial_fit growth step."""
+    out = forced_device_run(
+        """
+        import numpy as np, jax
+        from repro.data.synthetic import make_angular_clusters
+        from repro.index import RandomProjectionBackend
+
+        data, _ = make_angular_clusters(613, 32, 8, kappa=120, noise_frac=0.3, seed=2)
+        mesh = jax.make_mesh((4,), ("data",))
+        cfg = dict(n_bits=64, margin=3.0, seed=3, chunk=64, q_tile=32, db_tile=64)
+        host = RandomProjectionBackend(device=False, **cfg).fit(data)
+        rows = np.arange(0, 613, 2)
+        ok = {}
+        for depth in (1, 2):
+            plane = RandomProjectionBackend(
+                device=True, interpret=True, mesh=mesh, sweep=True,
+                pipeline_depth=depth, chunks_per_launch=3, **cfg
+            ).fit(data)
+            assert plane._plan.n_shards == 4
+            assert plane._plan.n_local % cfg["db_tile"] == 0  # tile-aligned shards
+            for eps in (0.55, 1.2):
+                hh = host.query_hits(rows, eps)
+                np.testing.assert_array_equal(plane.query_hits(rows, eps), hh)
+                np.testing.assert_array_equal(
+                    plane.query_counts(rows, eps), hh.sum(axis=1)
+                )
+            inc = RandomProjectionBackend(
+                device=True, interpret=True, mesh=mesh, sweep=True,
+                pipeline_depth=depth, **cfg
+            )
+            inc.partial_fit(data[:230]); inc.partial_fit(data[230:])
+            np.testing.assert_array_equal(
+                inc.query_hits(rows, 0.55), host.query_hits(rows, 0.55)
+            )
+            ok[str(depth)] = True
+        print("RESULT:" + __import__("json").dumps(ok))
+        """
+    )
+    assert out["1"] and out["2"]
+
+
+def test_laf_lowering_pipelined_sweep_4dev(forced_device_run):
+    """The lowering's one-launch pipelined frontier round (depth 2)
+    reproduces the serialized round (depth 1) and the jnp dataflow
+    bit-for-bit on the 4-device mesh."""
+    out = forced_device_run(
+        """
+        import dataclasses
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs.registry import get_arch
+        from repro.data.synthetic import sample_uniform_sphere
+        from repro.index.signatures import make_projection, sign_signatures
+        from repro.launch import laf_cluster as L
+
+        arch = get_arch("laf_dbscan")
+        base = arch.make_reduced_config()
+        shape = dataclasses.replace(
+            arch.shapes["nyt_150k"], meta={"n_points": 512, "dim": 32}
+        )
+        mesh = jax.make_mesh((4,), ("data",))
+
+        def cell_for(index_device, depth=2):
+            red = dataclasses.replace(
+                base, backend="random_projection", index_device=index_device,
+                index_pipeline=depth,
+            )
+            a = dataclasses.replace(arch, make_config=lambda: red)
+            return L.build_laf_cluster(a, shape, mesh)
+
+        pipe_cell = cell_for(True, 2)
+        serial_cell = cell_for(True, 1)
+        flow_cell = cell_for(False)
+        assert pipe_cell.meta["index_pipeline"] == 2
+
+        rng = np.random.default_rng(1)
+        data = sample_uniform_sphere(rng, 512, 32)
+        queries = data[: base.frontier]
+        db_sig = sign_signatures(data, make_projection(32, base.index_bits, seed=0))
+        params = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), pipe_cell.args[0]
+        )
+        args = (params, data, queries, jnp.asarray(db_sig))
+        with mesh:
+            pipe = [np.asarray(o) for o in pipe_cell.step_fn(*args)]
+            serial = [np.asarray(o) for o in serial_cell.step_fn(*args)]
+            flow = [np.asarray(o) for o in flow_cell.step_fn(*args)]
+        assert pipe[1].sum() > 0
+        np.testing.assert_array_equal(pipe[0], serial[0])
+        np.testing.assert_array_equal(pipe[1], serial[1])
+        np.testing.assert_array_equal(pipe[0], flow[0])
+        np.testing.assert_array_equal(pipe[1], flow[1])
+        print("RESULT:" + __import__("json").dumps({"ok": True}))
+        """,
+        timeout=600,
+    )
+    assert out["ok"]
