@@ -20,6 +20,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.dbscan import DBSCANResult, dbscan_parallel
 from repro.core.metrics import adjusted_mutual_info, adjusted_rand_index
 from repro.core.pipeline import LAFPipeline
@@ -94,10 +95,21 @@ def quality(labels, gt_labels) -> Dict[str, float]:
     }
 
 
-def timed(fn: Callable, *args, **kw) -> Tuple[float, object]:
-    t0 = time.time()
-    out = fn(*args, **kw)
-    return time.time() - t0, out
+def timed(fn: Callable, *args, _name: str = "bench.timed", **kw) -> Tuple[float, object]:
+    """Synced wall time of one call.
+
+    JAX dispatch is asynchronous: a bare ``perf_counter`` bracket around
+    a device call measures *dispatch*, not execution.  This rides an obs
+    span in ``force`` mode — it always measures (blocking on the
+    returned pytree's jax leaves before closing) and, when tracing is
+    enabled, the measurement also lands in the exported trace under
+    ``_name``.
+    """
+    sp = obs.span(_name, force=True)
+    with sp:
+        out = fn(*args, **kw)
+        sp.sync_on(out)
+    return sp.dur, out
 
 
 def save_json(name: str, obj) -> Path:

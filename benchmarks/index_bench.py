@@ -44,7 +44,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 from pathlib import Path
 
 import numpy as np
@@ -81,6 +80,8 @@ def bench_point(
     from repro.core.metrics import adjusted_rand_index
     from repro.index import ExactBackend, RandomProjectionBackend
 
+    from .common import timed
+
     data, _ = _dataset(n, d, seed)
     exact = ExactBackend().fit(data)
     mesh = None
@@ -88,13 +89,14 @@ def bench_point(
         import jax
 
         mesh = jax.make_mesh((mesh_devices,), ("data",))
-    t0 = time.perf_counter()
-    rp = RandomProjectionBackend(
-        n_bits=n_bits, margin=margin, verify=verify, seed=seed,
-        # the plane is a device evaluator: --mesh implies the fused tile
-        device=True if mesh is not None else (device == "device"), mesh=mesh,
-    ).fit(data)
-    build_s = time.perf_counter() - t0
+    build_s, rp = timed(
+        lambda: RandomProjectionBackend(
+            n_bits=n_bits, margin=margin, verify=verify, seed=seed,
+            # the plane is a device evaluator: --mesh implies the fused tile
+            device=True if mesh is not None else (device == "device"), mesh=mesh,
+        ).fit(data),
+        _name="bench.build",
+    )
     # same index configuration WITHOUT the mesh: the single-device fused
     # tile, so the sharded-vs-single sweep delta isolates the plane
     rp_single = None
@@ -109,16 +111,15 @@ def bench_point(
     t_exact = t_rp = t_rp_single = 0.0
     for start in range(0, n, block):
         rows = np.arange(start, min(start + block, n))
-        t0 = time.perf_counter()
-        h_ex = exact.query_hits(rows, eps)
-        t_exact += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        h_rp = rp.query_hits(rows, eps)
-        t_rp += time.perf_counter() - t0
+        dt, h_ex = timed(exact.query_hits, rows, eps, _name="bench.sweep_exact")
+        t_exact += dt
+        dt, h_rp = timed(rp.query_hits, rows, eps, _name="bench.sweep_rp")
+        t_rp += dt
         if rp_single is not None:
-            t0 = time.perf_counter()
-            rp_single.query_hits(rows, eps)
-            t_rp_single += time.perf_counter() - t0
+            dt, _ = timed(
+                rp_single.query_hits, rows, eps, _name="bench.sweep_rp_single"
+            )
+            t_rp_single += dt
             # per-device hit totals: slice the hit matrix at the plane's
             # shard boundaries (rows n_local*k .. n_local*(k+1) live on
             # device k)
@@ -133,12 +134,14 @@ def bench_point(
         pred += int(h_rp.sum())
 
     # end-to-end LAF-DBSCAN, oracle estimator, backend is the only delta
-    t0 = time.perf_counter()
-    res_ex = laf_dbscan(data, eps, tau, 1.0, counts, seed=seed, backend=exact)
-    t_laf_exact = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    res_rp = laf_dbscan(data, eps, tau, 1.0, counts, seed=seed, backend=rp)
-    t_laf_rp = time.perf_counter() - t0
+    t_laf_exact, res_ex = timed(
+        laf_dbscan, data, eps, tau, 1.0, counts,
+        seed=seed, backend=exact, _name="bench.laf_exact",
+    )
+    t_laf_rp, res_rp = timed(
+        laf_dbscan, data, eps, tau, 1.0, counts,
+        seed=seed, backend=rp, _name="bench.laf_rp",
+    )
 
     row = {
         "n": n, "d": d, "eps": eps, "tau": tau,
@@ -204,6 +207,8 @@ def bench_sweep_point(
     from repro.core.metrics import adjusted_rand_index
     from repro.index import ExactBackend, RandomProjectionBackend
 
+    from .common import timed
+
     data, _ = _dataset(n, d, seed)
     mesh = None
     if mesh_devices > 1:
@@ -231,11 +236,13 @@ def bench_sweep_point(
     for name, bk in variants.items():
         bk.fit(data)
         bk.query_hits(np.arange(min(block, n)), eps)  # warm/compile
-        t0 = time.perf_counter()
-        for start in range(0, n, block):
-            rows = np.arange(start, min(start + block, n))
-            bk.query_hits(rows, eps)
-        times[name] = time.perf_counter() - t0
+
+        def _sweep_all(bk=bk):
+            for start in range(0, n, block):
+                rows = np.arange(start, min(start + block, n))
+                bk.query_hits(rows, eps)
+
+        times[name], _ = timed(_sweep_all, _name=f"bench.sweep_{name}")
         print(f"  sweep[{name}]: {times[name]:.2f}s", flush=True)
 
     row = {

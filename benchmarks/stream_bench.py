@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from pathlib import Path
 
 import numpy as np
@@ -51,15 +50,16 @@ def _fresh_stream(args):
 
 
 def run(args) -> dict:
+    from repro import obs
     from repro.core.metrics import adjusted_rand_index
+
+    from .common import timed
 
     data = _dataset(args.n, args.d, seed=0)
 
     # -- streaming path: n0 warm rows, then batches to n -------------------
     stream = _fresh_stream(args)
-    t0 = time.time()
-    stream.partial_fit(data[: args.n0])
-    warm_s = time.time() - t0
+    warm_s, _ = timed(stream.partial_fit, data[: args.n0], _name="bench.warm_ingest")
     step = -(-(args.n - args.n0) // args.batches)
     batches = []
     for start in range(args.n0, args.n, step):
@@ -83,9 +83,7 @@ def run(args) -> dict:
 
     # -- baseline: full refit at the final size -----------------------------
     refit = _fresh_stream(args)
-    t0 = time.time()
-    refit.partial_fit(data)
-    refit_s = time.time() - t0
+    refit_s, _ = timed(refit.partial_fit, data, _name="bench.refit")
     refit_labels = refit.labels()
     ari = adjusted_rand_index(stream_labels, refit_labels)
 
@@ -105,13 +103,23 @@ def run(args) -> dict:
     noise = 0.02 * rng.standard_normal((args.queries, args.d)).astype(np.float32)
     queries = data[qidx] + noise
     stream.snapshot()  # build the serving snapshot outside the timed region
-    lat = np.zeros(args.queries)
+    # latency percentiles come from the obs log-bucket histogram that
+    # serve.assign feeds (the serving process's own SLO instrument),
+    # not a benchmark-side sample array
+    was_on = obs.metrics_enabled()
+    obs.metrics.enable()
+    hist = obs.metrics.histogram("serve.assign.latency_s")
+    hist._reset()
     for i in range(args.queries):
-        t0 = time.time()
         stream.assign(queries[i : i + 1])
-        lat[i] = time.time() - t0
-    p50, p95 = (float(np.percentile(lat, p) * 1e3) for p in (50, 95))
-    print(f"assign latency over {args.queries} single queries: p50 {p50:.2f} ms, p95 {p95:.2f} ms")
+    s = hist.summary()
+    if not was_on:
+        obs.metrics.disable()
+    p50, p95, p99 = (float(s[k] * 1e3) for k in ("p50", "p95", "p99"))
+    print(
+        f"assign latency over {args.queries} single queries: "
+        f"p50 {p50:.2f} ms, p95 {p95:.2f} ms, p99 {p99:.2f} ms"
+    )
 
     return dict(
         n0=args.n0, n=args.n, d=args.d, n_bits=args.n_bits,
@@ -123,7 +131,10 @@ def run(args) -> dict:
         amortized_speedup=amortized_speedup,
         ari_stream_vs_refit=float(ari),
         n_clusters=int(stream.n_clusters),
-        assign=dict(p50_ms=p50, p95_ms=p95, n_queries=args.queries),
+        assign=dict(
+            p50_ms=p50, p95_ms=p95, p99_ms=p99, n_queries=args.queries,
+            mean_ms=float(s["sum"] / max(s["count"], 1) * 1e3),
+        ),
     )
 
 

@@ -25,6 +25,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..obs import metrics as _metrics, span as _span
 from .dbscan import NOISE, UNDEFINED, DBSCANResult
 from .postprocess import PartialNeighborMap, post_processing, update_partial_neighbors
 from .range_query import pack_bitmap, unpack_bitmap
@@ -132,27 +133,50 @@ def laf_dbscan(
 
     data = np.asarray(data, dtype=np.float32)
     n = data.shape[0]
-    bk = as_fitted(backend, data, block_size=block_size, device=device)
+    cluster_span = _span("laf.cluster", n=n, eps=float(eps), tau=int(tau))
+    cluster_span.__enter__()
+    try:
+        return _laf_dbscan_body(
+            data, eps, tau, alpha, predicted_counts, as_fitted,
+            block_size=block_size, seed=seed, backend=backend, device=device,
+        )
+    finally:
+        cluster_span.__exit__(None, None, None)
+
+
+def _laf_dbscan_body(
+    data, eps, tau, alpha, predicted_counts, as_fitted,
+    *, block_size, seed, backend, device,
+):
+    n = data.shape[0]
+    with _span("laf.fit_index", backend=str(backend)):
+        bk = as_fitted(backend, data, block_size=block_size, device=device)
     predicted_core = np.asarray(predicted_counts) >= alpha * tau  # LAF skip rule
     exec_idx = np.nonzero(predicted_core)[0]
     n_exec = len(exec_idx)
+
+    _metrics.counter("laf.runs").inc()
+    _metrics.counter("laf.predicted_core").inc(int(n_exec))
+    _metrics.counter("laf.skipped").inc(int(n - n_exec))
 
     exact_counts = np.zeros(n, dtype=np.int64)
     partial_counts = np.zeros(n, dtype=np.int64)  # |𝓔(q)| for predicted-stop q
 
     # ---- pass 1 (the only range-query pass): predicted-core queries ----
     packed_blocks: list[tuple[np.ndarray, np.ndarray]] = []
-    for start in range(0, n_exec, block_size):
-        rows = exec_idx[start : start + block_size]
-        hit = bk.query_hits(rows, eps)  # (b, n)
-        exact_counts[rows] = hit.sum(axis=1)
-        # Alg.2 superset: every predicted-stop neighbor of an executed
-        # query gains one partial neighbor.
-        partial_counts += hit.sum(axis=0)
-        # pack in the shared LSB-first uint32 word order (pack_bitmap ==
-        # index signatures == device kernel bitmaps), so a backend that
-        # returns packed adjacency can feed pass 2 without a re-pack
-        packed_blocks.append((rows, pack_bitmap(hit)))
+    with _span("laf.pass1", n=n, n_exec=int(n_exec), block_size=block_size):
+        for start in range(0, n_exec, block_size):
+            rows = exec_idx[start : start + block_size]
+            with _span("laf.sweep", block=start // block_size, rows=len(rows)):
+                hit = bk.query_hits(rows, eps)  # (b, n)
+            exact_counts[rows] = hit.sum(axis=1)
+            # Alg.2 superset: every predicted-stop neighbor of an executed
+            # query gains one partial neighbor.
+            partial_counts += hit.sum(axis=0)
+            # pack in the shared LSB-first uint32 word order (pack_bitmap ==
+            # index signatures == device kernel bitmaps), so a backend that
+            # returns packed adjacency can feed pass 2 without a re-pack
+            packed_blocks.append((rows, pack_bitmap(hit)))
     partial_counts[predicted_core] = 0  # 𝓔 keys are predicted-stop points only
 
     core = np.zeros(n, dtype=bool)
@@ -161,39 +185,43 @@ def laf_dbscan(
     # ---- pass 2 (no matmul): core-core unions + border ownership -------
     parent = np.arange(n, dtype=np.int64)
     owner = np.full(n, -1, dtype=np.int64)
-    for rows, packed in packed_blocks:
-        hit = unpack_bitmap(packed, n)
-        row_is_core = core[rows]
-        hit_core = hit & core[None, :]
-        for bi in np.nonzero(row_is_core)[0]:
-            union_star(parent, np.nonzero(hit_core[bi])[0])
-        if row_is_core.any():
-            sub = hit[row_is_core]
-            subrows = rows[row_is_core]
-            claimed = sub.any(axis=0)
-            todo = claimed & (owner < 0) & ~core
-            if todo.any():
-                first = sub[:, todo].argmax(axis=0)
-                owner[todo] = subrows[first]
+    with _span("laf.union_find", blocks=len(packed_blocks)):
+        for rows, packed in packed_blocks:
+            with _span("laf.unpack", rows=len(rows)):
+                hit = unpack_bitmap(packed, n)
+            row_is_core = core[rows]
+            hit_core = hit & core[None, :]
+            for bi in np.nonzero(row_is_core)[0]:
+                union_star(parent, np.nonzero(hit_core[bi])[0])
+            if row_is_core.any():
+                sub = hit[row_is_core]
+                subrows = rows[row_is_core]
+                claimed = sub.any(axis=0)
+                todo = claimed & (owner < 0) & ~core
+                if todo.any():
+                    first = sub[:, todo].argmax(axis=0)
+                    owner[todo] = subrows[first]
 
-    labels = compact_labels_from_parent(parent, core)
-    borders = np.nonzero(~core & (owner >= 0))[0]
-    labels[borders] = labels[owner[borders]]
+        labels = compact_labels_from_parent(parent, core)
+        borders = np.nonzero(~core & (owner >= 0))[0]
+        labels[borders] = labels[owner[borders]]
     n_pre_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
 
     # ---- post-processing: rescue false negatives (Algorithm 3) ---------
     rescue_idx = np.nonzero(~predicted_core & (partial_counts >= tau))[0]
-    emap = PartialNeighborMap()
-    if len(rescue_idx) > 0:
-        for start in range(0, n_exec, block_size):
-            rows = exec_idx[start : start + block_size]
-            hit = bk.query_hits_subset(rows, rescue_idx, eps)  # (b, n_rescue)
-            for ri in np.nonzero(hit.any(axis=0))[0]:
-                r = int(rescue_idx[ri])
-                emap.register(r)
-                emap[r].update(int(f) for f in rows[hit[:, ri]])
-    labels = post_processing(labels, emap, tau, rng=np.random.default_rng(seed))
-    labels = _compact(labels)
+    _metrics.counter("laf.rescued").inc(int(len(rescue_idx)))
+    with _span("laf.postprocess", n_rescue=int(len(rescue_idx))):
+        emap = PartialNeighborMap()
+        if len(rescue_idx) > 0:
+            for start in range(0, n_exec, block_size):
+                rows = exec_idx[start : start + block_size]
+                hit = bk.query_hits_subset(rows, rescue_idx, eps)  # (b, n_rescue)
+                for ri in np.nonzero(hit.any(axis=0))[0]:
+                    r = int(rescue_idx[ri])
+                    emap.register(r)
+                    emap[r].update(int(f) for f in rows[hit[:, ri]])
+        labels = post_processing(labels, emap, tau, rng=np.random.default_rng(seed))
+        labels = _compact(labels)
 
     extras = {
         "n_predicted_core": int(n_exec),

@@ -12,6 +12,7 @@ from typing import Dict, Optional
 import numpy as np
 
 from ..data.synthetic import train_test_split
+from ..obs import span as _span
 from .cardinality import TrainedEstimator, train_rmi
 from .dbscan import DBSCANResult, dbscan_parallel
 from .dbscan_pp import auto_sample_fraction, dbscan_pp, laf_dbscan_pp
@@ -145,11 +146,13 @@ class LAFPipeline:
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
         kw.setdefault("device", self.device)
-        t0 = time.time()
-        pred = self.predict_counts(vectors, eps)
-        t1 = time.time()
-        res = laf_dbscan(vectors, eps, tau, alpha, pred, seed=self.seed, **kw)
-        t2 = time.time()
+        with _span("laf.run", n=len(vectors), eps=float(eps), tau=int(tau)):
+            t0 = time.time()
+            with _span("laf.predict", n=len(vectors)):
+                pred = self.predict_counts(vectors, eps)
+            t1 = time.time()
+            res = laf_dbscan(vectors, eps, tau, alpha, pred, seed=self.seed, **kw)
+            t2 = time.time()
         return ClusterOutcome(res, t2 - t0, t1 - t0, "LAF-DBSCAN",
                               {"eps": eps, "tau": tau, "alpha": alpha})
 

@@ -43,6 +43,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..index.signatures import shard_signatures, unpack_bits
+from ..obs import metrics as _metrics
 from ..kernels.hamming_filter.ops import (
     DEFAULT_DB_TILE,
     DEFAULT_Q_TILE,
@@ -66,6 +67,25 @@ __all__ = [
 ]
 
 I32 = jnp.int32
+
+
+def _count_collectives(kind: str, nq: int, n_chunks: int, n_shards: int,
+                       words: int = 0, pipelined: bool = False) -> None:
+    """Analytic per-call collective accounting (the traced program runs
+    the psums, so they are counted here at dispatch, from the launch
+    shape): each chunk's count psum moves ``chunk * 4`` bytes per shard
+    hop, bitmap gathers move each shard's word block to every peer."""
+    if not _metrics.enabled() or n_shards <= 1:
+        return
+    chunk = nq // max(n_chunks, 1)
+    _metrics.counter("plane.psum.calls").inc(n_chunks)
+    _metrics.counter("plane.psum.bytes").inc(n_chunks * chunk * 4)
+    if kind == "bitmap":
+        _metrics.counter("plane.gather.calls").inc(1)
+        _metrics.counter("plane.gather.bytes").inc(nq * words * 4)
+    _metrics.counter(
+        "plane.chunks.pipelined" if pipelined else "plane.chunks.serialized"
+    ).inc(n_chunks)
 
 
 @dataclass(frozen=True)
@@ -137,6 +157,8 @@ def _build_plane_fn(mesh: Mesh, axes, kind: str, q_tile: int, db_tile: int, inte
     eps and the band thresholds ride in as traced operands (``eps``
     f32[1], ``band`` i32[2]) so eps sweeps never rebuild or recompile.
     """
+    # body only runs on an lru_cache miss — i.e. a genuine plane rebuild
+    _metrics.counter("plane.builds").inc()
     rep = P(None, None)
     row_sharded = P(axes, None)
 
@@ -222,6 +244,7 @@ def sharded_hamming_count(
         q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret
     )
     f = _build_plane_fn(mesh, plan.axes, "count", q_tile, db_tile, interpret)
+    _count_collectives("count", q.shape[0], 1, plan.n_shards)
     counts = f(jnp.asarray(q), db, jnp.asarray(q_sig, jnp.uint32), db_sig, eps_op, band)
     if plan.n_pad:
         counts = counts - _pad_col_hits(jnp.asarray(q_sig, jnp.uint32), eps, t_lo, t_hi, plan.n_pad)
@@ -255,6 +278,8 @@ def sharded_hamming_bitmap(
         q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret
     )
     f = _build_plane_fn(mesh, plan.axes, "bitmap", q_tile, db_tile, interpret)
+    _count_collectives("bitmap", q.shape[0], 1, plan.n_shards,
+                       words=plan.n_padded // 32)
     q_sig = jnp.asarray(q_sig, jnp.uint32)
     counts, bitmap = f(jnp.asarray(q), db, q_sig, db_sig, eps_op, band)
     if plan.n_pad:
@@ -289,6 +314,7 @@ def sharded_band_marginals(
         q, db, q_sig, db_sig, eps, t_lo, t_hi, mesh, axes, interpret
     )
     f = _build_plane_fn(mesh, plan.axes, "marginals", q_tile, db_tile, interpret)
+    _count_collectives("count", q.shape[0], 1, plan.n_shards)
     counts, partial = f(
         jnp.asarray(q), db, jnp.asarray(q_sig, jnp.uint32), db_sig, eps_op, band
     )
@@ -337,6 +363,7 @@ def _build_sweep_plane_fn(
     chunk, pipeline depth).  The launch's query rows arrive stacked
     ``(cpl * chunk, ...)`` replicated; the db + signature table arrive
     row-sharded (the plane arrays from ``shard_database``)."""
+    _metrics.counter("plane.builds").inc()
     rep = P(None, None)
     row_sharded = P(axes, None)
     kw = dict(q_tile=q_tile, db_tile=db_tile, interpret=interpret)
@@ -423,6 +450,10 @@ def sharded_sweep_launch(
     f = _build_sweep_plane_fn(
         mesh, axes, kind, chunk, q_tile, db_tile, interpret, depth
     )
+    _count_collectives(
+        kind, q.shape[0], q.shape[0] // chunk, axis_size(mesh, axes),
+        words=db.shape[0] // 32, pipelined=depth >= 2,
+    )
     out = f(q, jnp.asarray(q_sig, jnp.uint32), db, db_sig, eps_op, band_op)
     return out, db.shape[0] - n
 
@@ -464,8 +495,13 @@ def sharded_sweep_marginals(
     f = _build_sweep_marginals_fn(
         mesh, plan.axes, q_tile, db_tile, interpret, depth
     )
+    qs = jnp.asarray(qs)
+    _count_collectives(
+        "count", qs.shape[0] * qs.shape[1], qs.shape[0],
+        plan.n_shards, pipelined=depth >= 2,
+    )
     counts, partial = f(
-        jnp.asarray(qs), jnp.asarray(q_sigs, jnp.uint32), db, db_sig, eps_op, band
+        qs, jnp.asarray(q_sigs, jnp.uint32), db, db_sig, eps_op, band
     )
     return counts, partial[:nd] if plan.n_pad else partial
 
@@ -474,6 +510,7 @@ def sharded_sweep_marginals(
 def _build_sweep_marginals_fn(
     mesh: Mesh, axes, q_tile: int, db_tile: int, interpret: bool, depth: int
 ):
+    _metrics.counter("plane.builds").inc()
     kw = dict(q_tile=q_tile, db_tile=db_tile, interpret=interpret)
 
     def body(qs, qss, db, dbs, eps, band):

@@ -71,6 +71,7 @@ from ..kernels.hamming_filter.ops import (
     hamming_filter_bitmap,
     hamming_filter_count,
 )
+from ..obs import get_logger, metrics as _metrics, rate_limited_warn
 from .base import RangeBackend, register_backend
 from .signatures import (
     hamming_band,
@@ -81,7 +82,7 @@ from .signatures import (
 )
 from .sweep import DEFAULT_CHUNKS_PER_LAUNCH, sweep_bitmap, sweep_counts
 
-__all__ = ["RandomProjectionBackend", "suggest_margin"]
+__all__ = ["RandomProjectionBackend", "suggest_margin", "record_occupancy"]
 
 # jit'd full-database sweep (fused XOR+popcount+reduce)
 _hamming_sweep = jax.jit(hamming_words)
@@ -158,6 +159,9 @@ class RandomProjectionBackend(RangeBackend):
         self._host_sigs_dev = None
         self._plan = None
         self.projection: Optional[np.ndarray] = None
+        # eps values whose band occupancy was already measured into the
+        # index.band.* metrics (one sampled pass per (backend, eps))
+        self._occ_recorded: set = set()
 
     @property
     def use_device(self) -> bool:
@@ -217,6 +221,10 @@ class RandomProjectionBackend(RangeBackend):
         if b == 0:
             return self
         if n + b > self._data_buf.shape[0]:
+            # every doubling is also (at most) one recompile of each
+            # capacity-shaped kernel signature — the pairing
+            # tests/test_obs.py asserts against sweep.recompiles
+            _metrics.counter("index.capacity_doublings").inc()
             # round capacity to the db tile so the capacity-padded
             # kernel operands stay tile-aligned across doublings (the
             # fit()-shaped index has cap == n and may alias caller
@@ -265,6 +273,21 @@ class RandomProjectionBackend(RangeBackend):
         t_lo, t_hi = hamming_band(eps, self.n_bits, self.margin)
         if self.verify == "full":
             t_lo = -1
+        if (
+            _metrics.enabled()
+            and self._data is not None
+            and float(eps) not in self._occ_recorded
+        ):
+            # one sampled occupancy pass per (backend, eps) — feeds the
+            # index.band.* metrics the acceptance snapshot reports
+            self._occ_recorded.add(float(eps))
+            try:
+                record_occupancy(self, eps)
+            except Exception as e:  # instrumentation must not break queries
+                rate_limited_warn(
+                    get_logger("index"), "occupancy", "occupancy_record_failed",
+                    error=type(e).__name__,
+                )
         return t_lo, t_hi
 
     # -- host evaluation ---------------------------------------------------
@@ -752,4 +775,48 @@ def suggest_margin(
 
     fits = [r for r in table if r["band_frac"] <= max_band_frac]
     chosen = fits[0]["margin"] if fits else table[-1]["margin"]
+    chosen_row = next(r for r in table if r["margin"] == chosen)
+    _feed_occupancy(chosen_row, len(rows), n)
     return (chosen, table) if report else chosen
+
+
+def _feed_occupancy(row: dict, nq: int, n: int) -> None:
+    """Write one occupancy measurement into the index.band.* metrics:
+    raw pair counts (counters, accumulated over measurements) and the
+    latest fractions (gauges)."""
+    total = nq * n
+    acc = int(round(row["accept_frac"] * total))
+    bnd = int(round(row["band_frac"] * total))
+    _metrics.counter("index.band.accept").inc(acc)
+    _metrics.counter("index.band.band").inc(bnd)
+    _metrics.counter("index.band.reject").inc(total - acc - bnd)
+    _metrics.gauge("index.band.accept_frac").set(row["accept_frac"])
+    _metrics.gauge("index.band.band_frac").set(row["band_frac"])
+    _metrics.gauge("index.band.reject_frac").set(
+        1.0 - row["accept_frac"] - row["band_frac"]
+    )
+
+
+def record_occupancy(
+    backend: RandomProjectionBackend, eps: float, rows: Optional[np.ndarray] = None
+) -> dict:
+    """Measure the dual-threshold occupancy of the backend's own band at
+    one eps and feed the ``index.band.*`` metrics.
+
+    Rides the :func:`suggest_margin` machinery with a single candidate
+    (the backend's configured margin), so the device path uses the
+    kernel's ``return_stats=`` per-tile [accept, band, reject] counters
+    with the exact pad-row corrections — on any n, device and host
+    measurements agree (the ``tests/test_obs.py`` parity assert).
+    Returns the ``{margin, t_lo, t_hi, band_frac, accept_frac}`` row.
+    """
+    n = backend._data.shape[0]
+    if rows is None:
+        rows = np.unique(
+            np.linspace(0, n - 1, min(n, 4 * backend.q_tile)).astype(np.int64)
+        )
+    _, table = suggest_margin(
+        backend, eps, rows, margins=(backend.margin,),
+        max_band_frac=backend.max_band_frac, report=True,
+    )
+    return table[0]

@@ -56,6 +56,7 @@ from ..kernels.hamming_filter.ops import (
     _tail_word_mask,
     default_interpret,
 )
+from ..obs import metrics as _metrics, span as _span, watch_recompiles
 
 __all__ = ["SweepPlan", "plan_sweep", "sweep_counts", "sweep_bitmap"]
 
@@ -237,59 +238,93 @@ def _sweep(
     plan, eps_op, band_op, interpret = _prep(
         nq, eps, t_lo, t_hi, chunk, q_tile, chunks_per_launch, interpret
     )
-    q, q_sig = _pad_q(q, q_sig, plan.nq_padded)
-    bitmap = kind == "bitmap"
-    if mesh is not None:
-        from ..distributed.index_plane import sharded_sweep_launch
+    sweep_span = _span(
+        "sweep.sweep", kind=kind, nq=nq, n=n, chunk=plan.chunk,
+        launches=plan.n_launches, chunks_per_launch=plan.cpl,
+        sharded=mesh is not None, pipelined=mesh is not None and depth >= 2,
+    )
+    sweep_span.__enter__()
+    try:
+        _metrics.counter("sweep.sweeps").inc()
+        _metrics.counter("sweep.launches").inc(plan.n_launches)
+        q, q_sig = _pad_q(q, q_sig, plan.nq_padded)
+        bitmap = kind == "bitmap"
+        if mesh is not None:
+            from ..distributed.index_plane import sharded_sweep_launch
 
-        n_pad, parts = None, []
-        for L in range(plan.n_launches):
-            sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
-            part, n_pad = sharded_sweep_launch(
-                kind, q[sl], q_sig[sl], db, db_sig, eps_op, band_op,
-                mesh=mesh, axes=axes, chunk=plan.chunk, q_tile=q_tile,
-                db_tile=db_tile, interpret=interpret, depth=depth, n=n,
-            )
-            parts.append(part if bitmap else (part,))
-        outs = tuple(
-            jnp.concatenate(p) if len(p) > 1 else p[0] for p in zip(*parts)
-        )
-    else:
-        db, db_sig = _pad_db(db, db_sig, db_tile)
-        n_pad = db.shape[0] - n
-        donated = _resolve_donate(donate)
-        if bitmap:
-            launch = _bitmap_launch_donated if donated else _bitmap_launch
-            outs = (
-                jnp.zeros((plan.nq_padded,), jnp.int32),
-                jnp.zeros((plan.nq_padded, db.shape[0] // 32), jnp.uint32),
+            n_pad, parts = None, []
+            for L in range(plan.n_launches):
+                sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
+                # per-launch spans record dispatch wall time only — the
+                # engine's point is async launches with ONE sync at
+                # sweep end, so nothing blocks here (synced=False)
+                with _span("sweep.launch", L=L, sharded=True, synced=False,
+                           pipelined=depth >= 2):
+                    part, n_pad = sharded_sweep_launch(
+                        kind, q[sl], q_sig[sl], db, db_sig, eps_op, band_op,
+                        mesh=mesh, axes=axes, chunk=plan.chunk, q_tile=q_tile,
+                        db_tile=db_tile, interpret=interpret, depth=depth, n=n,
+                    )
+                parts.append(part if bitmap else (part,))
+            outs = tuple(
+                jnp.concatenate(p) if len(p) > 1 else p[0] for p in zip(*parts)
             )
         else:
-            launch = _counts_launch_donated if donated else _counts_launch
-            outs = (jnp.zeros((plan.nq_padded,), jnp.int32),)
-        for L in range(plan.n_launches):
-            sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
-            outs = launch(
-                *outs, jnp.int32(L * plan.rows_per_launch), q[sl], q_sig[sl],
-                db, db_sig, eps_op, band_op,
-                chunk=plan.chunk, q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            db, db_sig = _pad_db(db, db_sig, db_tile)
+            n_pad = db.shape[0] - n
+            donated = _resolve_donate(donate)
+            if bitmap:
+                launch = _bitmap_launch_donated if donated else _bitmap_launch
+                outs = (
+                    jnp.zeros((plan.nq_padded,), jnp.int32),
+                    jnp.zeros((plan.nq_padded, db.shape[0] // 32), jnp.uint32),
+                )
+            else:
+                launch = _counts_launch_donated if donated else _counts_launch
+                outs = (jnp.zeros((plan.nq_padded,), jnp.int32),)
+            # donated-slab accounting: one fresh allocation per sweep;
+            # every launch past the first threads (or copies) the slab
+            _metrics.counter("sweep.slab_alloc").inc()
+            _metrics.counter(
+                "sweep.slab_donated" if donated else "sweep.slab_copied"
+            ).inc(max(plan.n_launches - 1, 0))
+            recompiles = watch_recompiles(
+                (_counts_launch, _counts_launch_donated,
+                 _bitmap_launch, _bitmap_launch_donated),
+                "sweep.recompiles",
             )
-            if not bitmap:
-                outs = (outs,)
-    out = outs[0]
-    words_needed = -(-n // 32)
-    if n_pad:
-        out = out - _count_correction(q_sig, eps_op, band_op, n_pad)
-    if not bitmap:
-        return np.asarray(jax.device_get(out)[:nq]).astype(np.int64)
-    bm_out = outs[1]
-    if n_pad:
-        bm_out = bm_out[:, :words_needed] & _tail_word_mask(words_needed, n)[None, :]
-    counts, bm = jax.device_get((out, bm_out))
-    return (
-        np.asarray(counts)[:nq].astype(np.int64),
-        np.ascontiguousarray(np.asarray(bm)[:nq, :words_needed]),
-    )
+            for L in range(plan.n_launches):
+                sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
+                with _span("sweep.launch", L=L, donated=donated, synced=False):
+                    outs = launch(
+                        *outs, jnp.int32(L * plan.rows_per_launch), q[sl], q_sig[sl],
+                        db, db_sig, eps_op, band_op,
+                        chunk=plan.chunk, q_tile=q_tile, db_tile=db_tile,
+                        interpret=interpret,
+                    )
+                recompiles.delta()
+                if not bitmap:
+                    outs = (outs,)
+        out = outs[0]
+        words_needed = -(-n // 32)
+        if n_pad:
+            out = out - _count_correction(q_sig, eps_op, band_op, n_pad)
+        if not bitmap:
+            return np.asarray(jax.device_get(out)[:nq]).astype(np.int64)
+        bm_out = outs[1]
+        if n_pad:
+            bm_out = (
+                bm_out[:, :words_needed] & _tail_word_mask(words_needed, n)[None, :]
+            )
+        counts, bm = jax.device_get((out, bm_out))
+        return (
+            np.asarray(counts)[:nq].astype(np.int64),
+            np.ascontiguousarray(np.asarray(bm)[:nq, :words_needed]),
+        )
+    finally:
+        # the device_get above IS the sweep's single host sync, so the
+        # span closing here measures execution, not dispatch
+        sweep_span.__exit__(None, None, None)
 
 
 def sweep_counts(

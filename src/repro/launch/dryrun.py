@@ -17,6 +17,7 @@ Usage:
 
 import argparse
 import json
+import logging
 import re
 import time
 import traceback
@@ -26,8 +27,11 @@ import jax
 
 from .hlo_analysis import analyze_hlo
 from ..configs.registry import get_arch, list_archs
+from ..obs import configure_logging, get_logger, log_event
 from .mesh import make_production_mesh
 from .steps import build_cell
+
+logger = get_logger("launch.dryrun")
 
 COLLECTIVE_OPS = (
     "all-gather",
@@ -164,17 +168,23 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: Path,
         )
         if verbose:
             bpd = record["memory_analysis"]["bytes_per_device"]["total"] / 2**30
-            print(
-                f"[ok] {arch_name}:{shape_name} @ {mesh_name}  "
-                f"compile={record['compile_s']}s  mem/dev={bpd:.2f}GiB  "
-                f"flops={record['hlo_analysis']['flops']:.3e}  "
-                f"coll={record['hlo_analysis']['collectives'].get('total',{}).get('bytes',0)/2**30:.3f}GiB"
+            log_event(
+                logger, "cell_ok",
+                arch=arch_name, shape=shape_name, mesh=mesh_name,
+                compile_s=record["compile_s"], mem_gib=round(bpd, 2),
+                flops=record["hlo_analysis"]["flops"],
+                coll_gib=round(
+                    record["hlo_analysis"]["collectives"].get("total", {}).get("bytes", 0)
+                    / 2**30, 3,
+                ),
             )
     except Exception as exc:  # record failures; the dry-run table must be complete
         record.update(status="error", error=f"{type(exc).__name__}: {exc}",
                       traceback=traceback.format_exc()[-4000:])
         if verbose:
-            print(f"[FAIL] {arch_name}:{shape_name} @ {mesh_name}: {record['error']}")
+            log_event(logger, "cell_fail", logging.WARNING,
+                      arch=arch_name, shape=shape_name, mesh=mesh_name,
+                      error=record["error"])
     record["wall_s"] = round(time.time() - t0, 2)
     out_path.write_text(json.dumps(record, indent=2))
     return record
@@ -202,7 +212,10 @@ def main():
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-cell progress lines (warnings still shown)")
     args = ap.parse_args()
+    configure_logging(quiet=args.quiet)
     out_dir = Path(args.out)
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[
         "multi" if args.multi_pod else args.mesh
@@ -221,7 +234,8 @@ def main():
                         "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
                         "status": "skip", "reason": arch.skips[shape_name],
                     }, indent=2))
-                print(f"[skip] {arch_name}:{shape_name} — documented skip")
+                log_event(logger, "cell_skip", arch=arch_name, shape=shape_name,
+                          reason=arch.skips[shape_name])
                 continue
             cells.append((arch_name, shape_name))
     else:
@@ -235,11 +249,14 @@ def main():
             if args.skip_existing and p.exists():
                 rec = json.loads(p.read_text())
                 if rec.get("status") == "ok":
-                    print(f"[cached] {arch_name}:{shape_name} @ {mesh_name}")
+                    log_event(logger, "cell_cached", arch=arch_name,
+                              shape=shape_name, mesh=mesh_name)
                     continue
             rec = run_cell(arch_name, shape_name, mp, out_dir, variant=args.variant)
             n_fail += rec["status"] == "error"
-    print(f"done; failures: {n_fail}")
+    log_event(logger, "dryrun_done",
+              logging.WARNING if n_fail else logging.INFO,
+              cells=len(cells), failures=n_fail)
     raise SystemExit(1 if n_fail else 0)
 
 

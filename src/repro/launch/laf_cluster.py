@@ -101,11 +101,16 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         computed against the device-sharded database, as one
         device-resident sweep (frontier signatures packed once, chunks
         software-pipelined through the plane)."""
-        feats = jnp.concatenate(
-            [queries, jnp.full((queries.shape[0], 1), base.eps, queries.dtype)], axis=1
-        )
-        pred = rmi_predict_counts(rmi_params, feats.astype(F32), rmi_cfg)
-        gate = (pred >= base.alpha * base.tau).astype(F32)  # skip decisions
+        # named scopes (not host spans — this whole function is traced
+        # once and replayed) label the phases inside XLA profiler
+        # captures, mirroring the host-side laf.* span names
+        with jax.named_scope("laf.predict"):
+            feats = jnp.concatenate(
+                [queries, jnp.full((queries.shape[0], 1), base.eps, queries.dtype)],
+                axis=1,
+            )
+            pred = rmi_predict_counts(rmi_params, feats.astype(F32), rmi_cfg)
+            gate = (pred >= base.alpha * base.tau).astype(F32)  # skip decisions
 
         if use_rp and not use_kernel:
             # caller-level padding (n rounded to a device multiple) adds
@@ -130,7 +135,8 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
 
             # signatures for the *whole frontier* packed once per sweep
             # (one matmul + one pack), not once per chunk
-            q_sig_all = pack_bits((queries.astype(F32) @ proj) >= 0.0)
+            with jax.named_scope("laf.pack_sigs"):
+                q_sig_all = pack_bits((queries.astype(F32) @ proj) >= 0.0)
             q_sigs = q_sig_all.reshape(n_chunks, frontier // n_chunks, sig_words)
 
         if use_kernel:
@@ -143,10 +149,11 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
             # against the next chunk's popcount+verify at
             # index_pipeline >= 2 — and per-row partials stay sharded
             # where the database lives
-            counts, partial_counts = sharded_sweep_marginals(
-                qs.astype(F32), db, q_sigs, db_sig, base.eps, t_hi,
-                t_lo=t_lo, mesh=mesh, axes=axes, depth=base.index_pipeline,
-            )
+            with jax.named_scope("laf.sweep"):
+                counts, partial_counts = sharded_sweep_marginals(
+                    qs.astype(F32), db, q_sigs, db_sig, base.eps, t_hi,
+                    t_lo=t_lo, mesh=mesh, axes=axes, depth=base.index_pipeline,
+                )
             counts = counts.reshape(frontier)
             counts = (counts.astype(F32) * gate).astype(I32)
             return counts, partial_counts, pred
@@ -167,9 +174,10 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
                 hit = dots > thresh
             return hit.sum(axis=1, dtype=I32), hit.sum(axis=0, dtype=I32)
 
-        counts, partials = jax.lax.map(
-            chunk_counts, (qs, q_sigs) if use_rp else qs
-        )
+        with jax.named_scope("laf.sweep"):
+            counts, partials = jax.lax.map(
+                chunk_counts, (qs, q_sigs) if use_rp else qs
+            )
         counts = counts.reshape(frontier)
         partial_counts = partials.sum(axis=0)
         # masked by skip decisions (skipped queries contribute nothing)
@@ -191,7 +199,13 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         args = args + (jax.ShapeDtypeStruct((n, sig_words), jnp.uint32),)
         in_sh = in_sh + (named(mesh, axes, None),)
     out_sh = (replicated(mesh), named(mesh, axes), replicated(mesh))
-    meta = {"kind": "cluster", "n_points": n, "dim": d, "frontier": frontier}
+    meta = {
+        "kind": "cluster", "n_points": n, "dim": d, "frontier": frontier,
+        # the XLA-profiler scope names cluster_step's phases carry (the
+        # host-side span names in core.pipeline/core.laf_dbscan mirror
+        # these, so traces from either layer line up)
+        "obs_scopes": ("laf.predict", "laf.pack_sigs", "laf.sweep"),
+    }
     if use_rp:
         # the db_sig contract: signatures must be packed with this exact
         # projection (repro.index.make_projection(dim, bits, seed))

@@ -27,9 +27,13 @@ from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, List, Optional
 
+from ..obs import configure_logging, get_logger, log_event
+
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip
 LINK_BW = 50e9           # bytes/s / link
+
+logger = get_logger("launch.roofline")
 
 __all__ = ["model_flops", "roofline_row", "build_table", "main"]
 
@@ -149,7 +153,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifacts", default="artifacts/dryrun")
     ap.add_argument("--out", default="artifacts/roofline")
+    ap.add_argument("--quiet", action="store_true",
+                    help="write artifacts only; no table on the console")
     args = ap.parse_args()
+    configure_logging(quiet=args.quiet)
     art = Path(args.artifacts)
     out_dir = Path(args.out)
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -167,9 +174,19 @@ def main():
                 f"({worst.roofline_fraction:.2f}); most collective-bound: "
                 f"**{coll.arch}:{coll.shape}** ({coll.collective_s:.1f}s)\n"
             )
+            log_event(
+                logger, "roofline_mesh", mesh=mesh, cells=len(rows),
+                worst_cell=f"{worst.arch}:{worst.shape}",
+                worst_fraction=round(worst.roofline_fraction, 3),
+                most_collective=f"{coll.arch}:{coll.shape}",
+                collective_s=round(coll.collective_s, 2),
+            )
     (out_dir / "roofline.md").write_text("\n\n".join(md_parts))
     (out_dir / "roofline.json").write_text(json.dumps(js, indent=2))
-    print("\n\n".join(md_parts))
+    if logger.isEnabledFor(20):  # the table itself is INFO-level output
+        logger.info("roofline table\n%s", "\n\n".join(md_parts))
+    log_event(logger, "roofline_written",
+              md=str(out_dir / "roofline.md"), json=str(out_dir / "roofline.json"))
 
 
 if __name__ == "__main__":

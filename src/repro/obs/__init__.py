@@ -1,0 +1,217 @@
+"""``repro.obs`` — zero-dep observability: tracing spans, a metrics
+registry, recompile accounting, and structured logging.
+
+Everything is off by default and costs one branch per instrumented
+site.  Turn it on explicitly::
+
+    from repro import obs
+    obs.enable()                      # trace + metrics
+    obs.enable(trace=False)           # metrics only
+    ... run ...
+    obs.export_chrome_trace("laf_trace.json")   # open in Perfetto
+    print(obs.metrics.to_json())
+
+or via the environment — ``REPRO_OBS=1`` enables both at import time
+(``REPRO_OBS=trace`` / ``REPRO_OBS=metrics`` select one); tier-1 runs
+under ``REPRO_OBS=1`` in CI to catch instrumentation breaking the hot
+path.
+
+Recompile accounting rides two complementary sources:
+
+* a global ``jax.monitoring`` listener counts every
+  ``backend_compile`` event into ``jax.compile.events`` /
+  ``jax.compile.seconds`` (registered once, on first ``enable``);
+* :class:`RecompileWatcher` tracks a *specific* jitted callable's
+  executable-cache size across calls — the per-sweep-signature counter
+  the sweep engine and the serving bucket path use, precise where the
+  global listener is process-wide.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from . import metrics
+from .log import configure as configure_logging
+from .log import get_logger, log_event, rate_limited_warn
+from .trace import (
+    SpanRecord,
+    clear as clear_trace,
+    coverage,
+    export_chrome_trace,
+    span,
+    spans,
+)
+from .trace import _state as _trace_state
+
+__all__ = [
+    "enable",
+    "disable",
+    "trace_enabled",
+    "metrics_enabled",
+    "span",
+    "spans",
+    "clear_trace",
+    "coverage",
+    "export_chrome_trace",
+    "SpanRecord",
+    "metrics",
+    "get_logger",
+    "log_event",
+    "rate_limited_warn",
+    "configure_logging",
+    "RecompileWatcher",
+    "watch_recompiles",
+]
+
+_monitor_registered = False
+
+
+def _register_jax_monitor() -> None:
+    """Count every XLA backend compile into the registry (idempotent).
+
+    jax.monitoring has no deregistration API, so the listener is
+    installed once per process and filters on the metrics switch
+    itself — with metrics off the counters silently drop the event.
+    """
+    global _monitor_registered
+    if _monitor_registered:
+        return
+    try:
+        import jax.monitoring as jmon
+    except ImportError:  # pragma: no cover
+        return
+    compiles = metrics.counter(
+        "jax.compile.events", "XLA backend_compile events (process-wide)"
+    )
+    seconds = metrics.counter(
+        "jax.compile.ms", "cumulative XLA backend compile time (ms)"
+    )
+
+    def _on_duration(event: str, duration_secs: float, **kw) -> None:
+        if event.endswith("backend_compile_duration"):
+            compiles.inc()
+            seconds.inc(int(duration_secs * 1e3))
+
+    jmon.register_event_duration_secs_listener(_on_duration)
+    _monitor_registered = True
+
+
+def enable(
+    trace: bool = True,
+    metrics_on: Optional[bool] = None,
+    *,
+    jax_annotations: bool = False,
+) -> None:
+    """Turn observability on.
+
+    ``trace`` — record spans + allow Chrome/Perfetto export;
+    ``metrics_on`` (default: same as ``trace``... both on when called
+    bare) — counters/gauges/histograms record; ``jax_annotations`` —
+    additionally wrap every span in ``jax.profiler.TraceAnnotation`` so
+    span names land inside XLA profiler captures.
+    """
+    if metrics_on is None:
+        metrics_on = True
+    _trace_state.trace = bool(trace)
+    _trace_state.jax_annotations = bool(jax_annotations)
+    if metrics_on:
+        metrics.enable()
+        _register_jax_monitor()
+    else:
+        metrics.disable()
+
+
+def disable() -> None:
+    _trace_state.trace = False
+    _trace_state.jax_annotations = False
+    metrics.disable()
+
+
+def trace_enabled() -> bool:
+    return _trace_state.trace
+
+
+def metrics_enabled() -> bool:
+    return metrics.enabled()
+
+
+def enable_from_env(environ=None) -> bool:
+    """Apply the ``REPRO_OBS`` knob; returns whether anything enabled.
+
+    ``1``/``true``/``both`` — trace + metrics; ``trace`` / ``metrics``
+    — just that half; unset/``0`` — leave everything off.
+    """
+    val = (environ if environ is not None else os.environ).get("REPRO_OBS", "")
+    val = val.strip().lower()
+    if val in ("1", "true", "yes", "on", "both", "all"):
+        enable(trace=True, metrics_on=True)
+    elif val == "trace":
+        enable(trace=True, metrics_on=False)
+    elif val == "metrics":
+        enable(trace=False, metrics_on=True)
+    else:
+        return False
+    return True
+
+
+class RecompileWatcher:
+    """Cache-miss-based recompile counter for one jitted callable.
+
+    ``jax.jit`` products expose their executable-cache size; a growth
+    across a call means that call compiled a new (shape, static-args)
+    signature.  ``delta()`` reads-and-latches, incrementing ``counter``
+    by the growth — wrap the call site::
+
+        w = watch_recompiles(_counts_launch, "sweep.recompiles")
+        out = _counts_launch(...)
+        w.delta()            # 1 on a fresh signature, 0 on a cache hit
+
+    Precision beats the process-wide ``jax.monitoring`` counter:
+    this attributes compiles to *this* function, which is what "the
+    sweep engine compiles once per capacity doubling" asserts.
+    """
+
+    __slots__ = ("fns", "_counter", "_last")
+
+    def __init__(self, fns, counter_name: str):
+        self.fns = tuple(fns) if isinstance(fns, (tuple, list)) else (fns,)
+        self._counter = metrics.counter(counter_name)
+        self._last = self._size()
+
+    def _size(self) -> int:
+        total = 0
+        for f in self.fns:
+            try:
+                total += f._cache_size()
+            except Exception:
+                pass
+        return total
+
+    def delta(self) -> int:
+        """New signatures compiled since the previous ``delta()``."""
+        size = self._size()
+        d = max(size - self._last, 0)
+        self._last = size
+        if d:
+            self._counter.inc(d)
+        return d
+
+
+_watchers = {}
+
+
+def watch_recompiles(fn, counter_name: str) -> RecompileWatcher:
+    """Get-or-create the watcher for (fn, counter) — call sites in hot
+    loops reuse one watcher instead of re-reading the baseline."""
+    key = (id(fn) if not isinstance(fn, (tuple, list)) else tuple(id(f) for f in fn),
+           counter_name)
+    w = _watchers.get(key)
+    if w is None:
+        w = _watchers[key] = RecompileWatcher(fn, counter_name)
+    return w
+
+
+# the env knob: REPRO_OBS=1 in the environment enables at import time
+enable_from_env()

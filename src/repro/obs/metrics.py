@@ -1,0 +1,271 @@
+"""Process-global metrics registry: counters, gauges, log-bucketed
+histograms.
+
+The instruments the hot paths feed:
+
+* **Counter** — monotonic (kernel launches, recompilations, collective
+  psums/bytes, fast-path skips).  ``inc()`` while metrics are disabled
+  is one attribute load + one branch, so instrumentation can stay
+  inline in hot loops.
+* **Gauge** — last-write-wins scalar (shortlist size, band fractions).
+* **Histogram** — fixed log-spaced buckets (default 60 per three
+  decades: ~12% resolution) covering 1 µs .. 100 s, the serving
+  latency range.  Quantiles are computed from the cumulative bucket
+  counts with geometric interpolation inside the landing bucket, so
+  p50/p95/p99 are exact up to one bucket's width — and min/max/sum are
+  tracked exactly.  Recording is O(1) (one ``bisect``), never stores
+  samples, so a serving process can observe every assign forever.
+
+``snapshot()`` returns a plain ``{name: value}`` dict (histograms
+expand to count/sum/min/max/p50/p95/p99); ``to_json()`` is its
+serialized form — what the benches put into their CI artifacts.
+
+A fresh registry starts **disabled**: instruments exist and are
+callable but record nothing until :func:`enable` (or ``REPRO_OBS=1``
+via ``repro.obs.enable``), keeping tier-1 timing-sensitive tests
+untouched.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from bisect import bisect_right
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "counter",
+    "gauge",
+    "histogram",
+    "enable",
+    "disable",
+    "enabled",
+    "snapshot",
+    "to_json",
+    "reset",
+]
+
+_lock = threading.Lock()
+_instruments: Dict[str, object] = {}
+
+
+class _State:
+    on: bool = False
+
+
+_state = _State()
+
+
+class Counter:
+    """Monotonic counter; ``inc`` is a no-op while metrics are off."""
+
+    __slots__ = ("name", "help", "_v", "_lk")
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self._v = 0
+        self._lk = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        if not _state.on:
+            return
+        with self._lk:
+            self._v += n
+
+    @property
+    def value(self) -> int:
+        return self._v
+
+    def _reset(self) -> None:
+        self._v = 0
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    __slots__ = ("name", "help", "_v", "_set")
+
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self._v = 0.0
+        self._set = False
+
+    def set(self, v: float) -> None:
+        if not _state.on:
+            return
+        self._v = float(v)
+        self._set = True
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+    def _reset(self) -> None:
+        self._v, self._set = 0.0, False
+
+
+def default_buckets(
+    lo: float = 1e-6, hi: float = 100.0, per_decade: int = 20
+) -> Tuple[float, ...]:
+    """Log-spaced bucket upper bounds, ``per_decade`` per decade of
+    [lo, hi] — at 20/decade adjacent bounds differ by ~12%, which is
+    the histogram's quantile resolution."""
+    n = int(round(math.log10(hi / lo) * per_decade))
+    return tuple(lo * (hi / lo) ** (i / n) for i in range(n + 1))
+
+
+class Histogram:
+    """Fixed log-bucket histogram with interpolated quantiles.
+
+    Values below the first bound land in bucket 0, above the last in
+    the overflow bucket; quantile() interpolates geometrically inside
+    the landing bucket (log-uniform within-bucket assumption — the
+    natural prior for latencies), so against exact percentiles the
+    error is bounded by one bucket ratio (~12% at the default layout).
+    """
+
+    __slots__ = ("name", "help", "bounds", "_counts", "_n", "_sum", "_min", "_max", "_lk")
+
+    def __init__(self, name: str, help: str = "", bounds: Optional[Tuple[float, ...]] = None):
+        self.name, self.help = name, help
+        self.bounds: Tuple[float, ...] = tuple(bounds) if bounds else default_buckets()
+        self._counts = [0] * (len(self.bounds) + 1)
+        self._n = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._lk = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        if not _state.on:
+            return
+        v = float(v)
+        i = bisect_right(self.bounds, v)
+        with self._lk:
+            self._counts[i] += 1
+            self._n += 1
+            self._sum += v
+            self._min = min(self._min, v)
+            self._max = max(self._max, v)
+
+    @property
+    def count(self) -> int:
+        return self._n
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    def quantile(self, q: float) -> float:
+        """q in [0, 1]; 0 with no observations."""
+        if self._n == 0:
+            return 0.0
+        if q <= 0:
+            return self._min
+        if q >= 1:
+            return self._max
+        target = q * self._n
+        acc = 0
+        for i, c in enumerate(self._counts):
+            if acc + c >= target:
+                lo = self.bounds[i - 1] if i > 0 else (
+                    min(self._min, self.bounds[0])
+                )
+                hi = self.bounds[i] if i < len(self.bounds) else self._max
+                lo = max(lo, 1e-12)
+                hi = max(hi, lo)
+                frac = (target - acc) / c
+                # geometric interpolation inside the log-spaced bucket
+                val = lo * (hi / lo) ** frac
+                return float(min(max(val, self._min), self._max))
+            acc += c
+        return self._max
+
+    def _reset(self) -> None:
+        self._counts = [0] * (len(self.bounds) + 1)
+        self._n, self._sum = 0, 0.0
+        self._min, self._max = math.inf, -math.inf
+
+    def summary(self) -> Dict[str, float]:
+        if self._n == 0:
+            return {"count": 0}
+        return {
+            "count": self._n,
+            "sum": self._sum,
+            "min": self._min,
+            "max": self._max,
+            "p50": self.quantile(0.50),
+            "p95": self.quantile(0.95),
+            "p99": self.quantile(0.99),
+        }
+
+
+def _get(name: str, cls, **kw):
+    with _lock:
+        inst = _instruments.get(name)
+        if inst is None:
+            inst = _instruments[name] = cls(name, **kw)
+        elif not isinstance(inst, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {type(inst).__name__}"
+            )
+        return inst
+
+
+def counter(name: str, help: str = "") -> Counter:
+    """Get-or-create the named monotonic counter."""
+    return _get(name, Counter, help=help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:
+    return _get(name, Gauge, help=help)
+
+
+def histogram(name: str, help: str = "", bounds=None) -> Histogram:
+    return _get(name, Histogram, help=help, bounds=bounds)
+
+
+def enable() -> None:
+    _state.on = True
+
+
+def disable() -> None:
+    _state.on = False
+
+
+def enabled() -> bool:
+    return _state.on
+
+
+def reset() -> None:
+    """Zero every instrument (registrations are kept)."""
+    with _lock:
+        for inst in _instruments.values():
+            inst._reset()
+
+
+def snapshot(prefix: str = "") -> Dict[str, object]:
+    """Plain-dict view of every instrument (histograms expand to their
+    summary), optionally filtered to names starting with ``prefix``."""
+    with _lock:
+        items = sorted(_instruments.items())
+    out: Dict[str, object] = {}
+    for name, inst in items:
+        if prefix and not name.startswith(prefix):
+            continue
+        if isinstance(inst, Histogram):
+            out[name] = inst.summary()
+        elif isinstance(inst, Gauge):
+            if inst._set:
+                out[name] = inst.value
+        else:
+            out[name] = inst.value
+    return out
+
+
+def to_json(prefix: str = "", indent: int = 2) -> str:
+    return json.dumps(snapshot(prefix), indent=indent, default=float)

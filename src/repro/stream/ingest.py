@@ -35,6 +35,7 @@ import numpy as np
 from ..configs.laf_dbscan import StreamConfig
 from ..core.range_query import pack_bitmap, unpack_bitmap
 from ..index import make_backend
+from ..obs import metrics as _metrics, span as _span
 from .state import StreamingClusterState
 
 __all__ = ["StreamingLAF", "IngestReport"]
@@ -147,13 +148,15 @@ class StreamingLAF:
         if batch.ndim != 2 or batch.shape[0] == 0:
             raise ValueError(f"batch must be (rows, d) with rows >= 1, got {batch.shape}")
         t0 = time.time()
-        self.backend.partial_fit(batch)
-        rep = self._absorb(batch)
-        rebuilt = False
-        if self.decay is not None:
-            idx = self.decay(self.state)
-            if idx is not None and len(idx):
-                rebuilt = self.evict(idx)
+        with _span("ingest.batch", rows=batch.shape[0], n=self.state.n):
+            with _span("ingest.append", rows=batch.shape[0]):
+                self.backend.partial_fit(batch)
+            rep = self._absorb(batch)
+            rebuilt = False
+            if self.decay is not None:
+                idx = self.decay(self.state)
+                if idx is not None and len(idx):
+                    rebuilt = self.evict(idx)
         rep.rebuilt = rebuilt
         rep.elapsed_s = time.time() - t0
         # refresh state-derived fields after the decay hook: an eviction
@@ -175,48 +178,60 @@ class StreamingLAF:
             else pred >= self.alpha * self.tau
         )
         skip_idx = new_idx[~exec_mask]
+        _metrics.counter("stream.ingest.skipped").inc(int(len(skip_idx)))
         if len(skip_idx):
             # fast path: verify skipped rows against the core set only
             # (the online 𝓔 lower bound — O(|cores|) instead of O(n))
-            hit_cores = (
-                bk.query_hits_subset(skip_idx, pre_core, eps)
-                if len(pre_core)
-                else np.zeros((len(skip_idx), 0), dtype=bool)
-            )
-            state.seed_skipped(skip_idx, pre_core, hit_cores)
+            with _span("ingest.fastpath", rows=len(skip_idx), cores=len(pre_core)):
+                hit_cores = (
+                    bk.query_hits_subset(skip_idx, pre_core, eps)
+                    if len(pre_core)
+                    else np.zeros((len(skip_idx), 0), dtype=bool)
+                )
+                state.seed_skipped(skip_idx, pre_core, hit_cores)
 
         exec_idx = new_idx[exec_mask]
+        _metrics.counter("stream.ingest.executed").inc(int(len(exec_idx)))
         packed: list[tuple[np.ndarray, np.ndarray]] = []
         native = getattr(bk, "packs_natively", False)
-        for start in range(0, len(exec_idx), self.block_size):
-            rows = exec_idx[start : start + self.block_size]
-            # replay storage keeps adjacency packed; the sweep engine
-            # emits packed words natively (one launch per block, one
-            # host sync), so on that path only the ingest-side unpack
-            # is paid — host backends keep the boolean-first order so
-            # they never pay an unpack→repack round-trip
-            if native:
-                _, pk = bk.query_hits_packed(rows, eps)
-                hit = unpack_bitmap(pk, state.n)
-            else:
-                hit = bk.query_hits(rows, eps)
-                pk = pack_bitmap(hit)
-            # exclude the whole executed set from the transposed bumps:
-            # a same-batch pair split across two blocks would otherwise
-            # double-count for the earlier block's endpoint
-            state.ingest_rows(rows, hit, exclude=exec_idx)
-            packed.append((rows, pk))
+        with _span("ingest.sweep", rows=len(exec_idx), native=bool(native)):
+            for start in range(0, len(exec_idx), self.block_size):
+                rows = exec_idx[start : start + self.block_size]
+                # replay storage keeps adjacency packed; the sweep engine
+                # emits packed words natively (one launch per block, one
+                # host sync), so on that path only the ingest-side unpack
+                # is paid — host backends keep the boolean-first order so
+                # they never pay an unpack→repack round-trip
+                if native:
+                    _, pk = bk.query_hits_packed(rows, eps)
+                    hit = unpack_bitmap(pk, state.n)
+                else:
+                    hit = bk.query_hits(rows, eps)
+                    pk = pack_bitmap(hit)
+                # exclude the whole executed set from the transposed bumps:
+                # a same-batch pair split across two blocks would otherwise
+                # double-count for the earlier block's endpoint
+                state.ingest_rows(rows, hit, exclude=exec_idx)
+                packed.append((rows, pk))
 
         # one promotion round closes the core set: new executed rows are
         # core straight from their counts; old/skipped points crossing
         # tau are re-queried for their exact counts + core-core edges
         promoted = state.take_promotions()
         requery = promoted[~np.isin(promoted, exec_idx, assume_unique=True)]
-        for start in range(0, len(requery), self.block_size):
-            rows = requery[start : start + self.block_size]
-            state.promote(rows, bk.query_hits(rows, eps))
-        for rows, pk in packed:
-            state.apply_core_rows(rows, unpack_bitmap(pk, state.n))
+        _metrics.counter("stream.ingest.promoted").inc(int(len(requery)))
+        # skip-rule false negatives the promotion round caught: rows the
+        # estimator fast-pathed this batch that turned out core after all
+        _metrics.counter("stream.ingest.skipped_promoted").inc(
+            int(np.isin(requery, skip_idx, assume_unique=True).sum())
+        )
+        with _span("ingest.promote", rows=len(requery)):
+            for start in range(0, len(requery), self.block_size):
+                rows = requery[start : start + self.block_size]
+                state.promote(rows, bk.query_hits(rows, eps))
+        with _span("ingest.apply", blocks=len(packed)):
+            for rows, pk in packed:
+                state.apply_core_rows(rows, unpack_bitmap(pk, state.n))
 
         self._serve = None
         return IngestReport(

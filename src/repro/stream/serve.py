@@ -28,12 +28,14 @@ sure are we?  ``ClusterIndex`` is an immutable snapshot built from a
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np
 
 from ..index.signatures import band_hits, hamming_numpy, sign_signatures
+from ..obs import metrics as _metrics, span as _span
 
 __all__ = ["AssignResult", "ClusterIndex"]
 
@@ -91,6 +93,9 @@ class ClusterIndex:
             cents[c] = data[self.members(c)].mean(axis=0)
         norms = np.linalg.norm(cents, axis=1, keepdims=True)
         self.centroids = cents / np.maximum(norms, 1e-12)
+        # candidate-bucket shapes this snapshot has launched (each new
+        # power-of-two bucket is one engine compile — O(log n) total)
+        self._seen_buckets: set = set()
 
     @classmethod
     def from_stream(cls, stream) -> "ClusterIndex":
@@ -137,6 +142,23 @@ class ClusterIndex:
         queries = np.ascontiguousarray(queries, dtype=np.float32)
         if queries.ndim == 1:
             queries = queries[None, :]
+        t0 = time.perf_counter()
+        with _span("serve.assign", nq=queries.shape[0], shortlist=shortlist):
+            res = self._assign(queries, shortlist=shortlist, min_hits=min_hits)
+        if _metrics.enabled():
+            # per-call latency into the log-bucket histogram — the p50/
+            # p95/p99 the SLO serving roadmap item reports come from here
+            _metrics.histogram(
+                "serve.assign.latency_s", "assign() wall seconds per call"
+            ).observe(time.perf_counter() - t0)
+            _metrics.counter("serve.assign.calls").inc()
+            _metrics.counter("serve.assign.queries").inc(queries.shape[0])
+            _metrics.gauge("serve.shortlist").set(min(shortlist, self.n_clusters))
+        return res
+
+    def _assign(
+        self, queries: np.ndarray, *, shortlist: int, min_hits: int
+    ) -> AssignResult:
         nq = queries.shape[0]
         labels = np.full(nq, -1, dtype=np.int64)
         conf = np.zeros(nq, dtype=np.float32)
@@ -251,6 +273,11 @@ class ClusterIndex:
                 kw.get("chunk", 256),
                 max(kw.get("q_tile", 128), 1 << int(np.ceil(np.log2(e - s)))),
             )
+            if (bucket, kw["chunk"]) not in self._seen_buckets:
+                self._seen_buckets.add((bucket, kw["chunk"]))
+                _metrics.counter("serve.bucket_compiles").inc()
+            _metrics.counter("serve.verify_launches").inc()
+            _metrics.counter("serve.candidates").inc(int(len(cand)))
             _, bm = sweep_bitmap(
                 q[s:e], q_sig[s:e], db, db_sig,
                 len(cand), self.eps, t_lo, t_hi, **kw,

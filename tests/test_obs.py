@@ -1,0 +1,275 @@
+"""repro.obs: span nesting + Chrome-trace export roundtrip, histogram
+quantile accuracy vs numpy, recompile accounting (the sweep engine's
+once-per-capacity-doubling contract, the serving path's O(log n)
+power-of-two bucket compiles), and device/host band-occupancy parity.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.data.synthetic import make_angular_clusters
+from repro.index import RandomProjectionBackend
+from repro.index.random_projection import record_occupancy
+from repro.obs import metrics
+from repro.stream import StreamingLAF
+
+EPS = 0.55
+
+
+@pytest.fixture(autouse=True)
+def obs_sandbox():
+    """Clean, enabled obs state per test; the ambient switches (tier-1
+    may run under REPRO_OBS=1) are restored afterwards."""
+    was_trace, was_metrics = obs.trace_enabled(), obs.metrics_enabled()
+    obs.enable(trace=True, metrics_on=True)
+    obs.clear_trace()
+    metrics.reset()
+    yield
+    obs.clear_trace()
+    metrics.reset()
+    if was_trace or was_metrics:
+        obs.enable(trace=was_trace, metrics_on=was_metrics)
+    else:
+        obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# spans: nesting, export roundtrip, the disabled fast path
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_chrome_export_roundtrip(tmp_path):
+    with obs.span("outer", a=1):
+        with obs.span("inner.one"):
+            pass
+        with obs.span("inner.two", k="v"):
+            pass
+    recs = obs.spans()
+    outer = next(r for r in recs if r.name == "outer")
+    inners = [r for r in recs if r.name.startswith("inner")]
+    assert outer.parent_id == 0
+    assert len(inners) == 2
+    assert all(r.parent_id == outer.span_id for r in inners)
+    assert outer.dur >= max(r.dur for r in inners)
+
+    p = tmp_path / "trace.json"
+    doc = obs.export_chrome_trace(str(p))
+    loaded = json.loads(p.read_text())  # the file IS valid JSON
+    assert loaded == json.loads(json.dumps(doc, default=float))
+    evs = loaded["traceEvents"]
+    assert {e["name"] for e in evs} == {"outer", "inner.one", "inner.two"}
+    for e in evs:  # Chrome trace_event "complete" records
+        assert e["ph"] == "X"
+        assert e["dur"] >= 0 and e["ts"] > 0
+        assert {"name", "cat", "pid", "tid", "args"} <= set(e)
+    by_name = {e["name"]: e for e in evs}
+    # parent linkage and attributes survive the export through args
+    assert (by_name["inner.one"]["args"]["parent_id"]
+            == by_name["outer"]["args"]["span_id"])
+    assert by_name["outer"]["args"]["a"] == 1
+    assert by_name["inner.two"]["args"]["k"] == "v"
+
+
+def test_disabled_span_is_shared_noop():
+    obs.disable()
+    s1, s2 = obs.span("x"), obs.span("y")
+    assert s1 is s2  # the shared null object: no per-call allocation
+    with s1:
+        pass
+    obs.enable(trace=True, metrics_on=True)
+    assert obs.spans("x") == []
+
+
+def test_force_span_measures_without_recording():
+    obs.disable()
+    sp = obs.span("bench.t", force=True)
+    with sp:
+        out = sum(range(10_000))
+        sp.sync_on(out)  # numpy/python leaves pass through block_until_ready
+    assert sp.dur > 0
+    obs.enable(trace=True, metrics_on=True)
+    assert obs.spans("bench.t") == []  # measured, never buffered
+
+
+def test_coverage_is_union_of_child_intervals():
+    root = obs.SpanRecord("r", t0=0.0, dur=10.0, span_id=1)
+    kids = [
+        obs.SpanRecord("a", t0=0.0, dur=4.0, span_id=2, parent_id=1),
+        obs.SpanRecord("b", t0=3.0, dur=4.0, span_id=3, parent_id=1),  # overlap
+        obs.SpanRecord("c", t0=9.0, dur=5.0, span_id=4, parent_id=1),  # clipped
+    ]
+    # union [0,7) + [9,10) clipped to the root = 8 of 10 seconds
+    assert obs.coverage(root, [root] + kids) == pytest.approx(0.8)
+
+
+# ---------------------------------------------------------------------------
+# histogram: log-bucket quantiles vs exact numpy percentiles
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantiles_match_numpy_within_bucket_width():
+    rng = np.random.default_rng(0)
+    # latency-like: log-normal spanning ~3 decades around a millisecond
+    samples = rng.lognormal(mean=-6.5, sigma=1.2, size=5000)
+    h = metrics.histogram("test.latency")
+    for v in samples:
+        h.observe(float(v))
+    for q in (0.50, 0.95, 0.99):
+        exact = float(np.quantile(samples, q))
+        est = h.quantile(q)
+        # the default layout is 20 buckets/decade: adjacent bounds differ
+        # by 10^(1/20) ~ 1.122, the documented quantile resolution
+        assert abs(est - exact) / exact < 0.13, (q, est, exact)
+    s = h.summary()
+    assert s["count"] == len(samples)
+    assert s["min"] == pytest.approx(samples.min())
+    assert s["max"] == pytest.approx(samples.max())
+    assert s["sum"] == pytest.approx(samples.sum())
+    assert s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_metrics_disabled_records_nothing():
+    obs.disable()
+    metrics.counter("test.c").inc(5)
+    metrics.gauge("test.g").set(3.0)
+    metrics.histogram("test.h").observe(1.0)
+    assert metrics.counter("test.c").value == 0
+    assert metrics.histogram("test.h").count == 0
+    snap = metrics.snapshot("test.")
+    assert snap["test.c"] == 0
+    assert "test.g" in json.loads(metrics.to_json()) or True  # serializable
+
+
+# ---------------------------------------------------------------------------
+# recompile accounting: the sweep engine across partial_fit appends
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def obs_data():
+    # 613: not a multiple of the chunk, the kernel tiles, or 32 (the
+    # same shape discipline as test_sweep — every pad layer exercised)
+    data, _ = make_angular_clusters(613, 32, 8, kappa=120, noise_frac=0.3, seed=2)
+    return data
+
+
+CFG = dict(n_bits=64, margin=3.0, seed=3, chunk=64, q_tile=32, db_tile=64)
+
+
+def test_sweep_recompiles_once_per_capacity_doubling(obs_data):
+    """Appends that fit in capacity re-launch cached executables; only a
+    capacity doubling (new padded operand shape) compiles fresh ones."""
+    bk = RandomProjectionBackend(device=True, interpret=True, sweep=True, **CFG)
+    bk.fit(obs_data[:128])
+    rows = np.arange(64)
+    bk.query_counts(rows, EPS)  # first sweep pays the initial compile
+    base_rc = metrics.counter("sweep.recompiles").value
+    base_db = metrics.counter("index.capacity_doublings").value
+    for start in range(128, 613, 97):
+        bk.partial_fit(obs_data[start : start + 97])
+        bk.query_counts(rows, EPS)  # same query shape: capacity is the
+        # only thing that can change the jit signature
+    doublings = metrics.counter("index.capacity_doublings").value - base_db
+    recompiles = metrics.counter("sweep.recompiles").value - base_rc
+    assert doublings >= 2  # 128 -> 613 must double at least twice
+    assert recompiles == doublings
+
+
+# ---------------------------------------------------------------------------
+# recompile accounting: serving buckets are O(log n), reused across calls
+# ---------------------------------------------------------------------------
+
+
+def test_serve_assign_bucket_compiles_log_bounded(obs_data):
+    bk = RandomProjectionBackend(device=True, interpret=True, sweep=True, **CFG)
+    stream = StreamingLAF(0.35, 5, backend=bk, block_size=256)
+    stream.partial_fit(obs_data)
+    idx = stream.snapshot()
+
+    rng = np.random.default_rng(7)
+    member = np.nonzero(stream.labels() >= 0)[0]
+    queries = obs_data[rng.choice(member, size=96)] + 0.02 * rng.standard_normal(
+        (96, obs_data.shape[1])
+    ).astype(np.float32)
+
+    metrics.reset()
+    for size in (1, 3, 17, 41, 96):  # ragged batches: many union sizes
+        for s in range(0, 96, size):
+            idx.assign(queries[s : s + size])
+    compiles = metrics.counter("serve.bucket_compiles").value
+    launches = metrics.counter("serve.verify_launches").value
+    assert launches > 0 and compiles > 0
+    # buckets are powers of two in [db_tile, 2^ceil(log2 n)], chunks
+    # powers of two in [q_tile, chunk]: O(log n) distinct shapes total
+    max_buckets = int(math.log2((1 << math.ceil(math.log2(len(obs_data)))) // CFG["db_tile"])) + 1
+    max_chunks = int(math.log2(CFG["chunk"] // CFG["q_tile"])) + 1
+    assert compiles <= max_buckets * max_chunks
+    assert compiles < launches  # shapes are reused, not one per launch
+
+    # a repeat of the same traffic compiles nothing new
+    before = compiles
+    for s in range(0, 96, 17):
+        idx.assign(queries[s : s + 17])
+    assert metrics.counter("serve.bucket_compiles").value == before
+    assert metrics.counter("serve.assign.calls").value > 0
+    assert metrics.histogram("serve.assign.latency_s").count > 0
+
+
+# ---------------------------------------------------------------------------
+# band occupancy: device kernel counters == host table on ragged n
+# ---------------------------------------------------------------------------
+
+
+def test_occupancy_device_matches_host_on_ragged_n(obs_data):
+    """613 rows: the kernel's per-tile [accept, band, reject] counters
+    run on the padded grid; after the pad corrections the device
+    measurement must price exactly the same real pairs as one host
+    Hamming sweep."""
+    host = RandomProjectionBackend(device=False, **CFG).fit(obs_data)
+    dev = RandomProjectionBackend(device=True, interpret=True, **CFG).fit(obs_data)
+    rows = np.arange(0, len(obs_data), 7)
+
+    metrics.reset()
+    row_h = record_occupancy(host, EPS, rows)
+    host_counts = {
+        k: metrics.counter(f"index.band.{k}").value
+        for k in ("accept", "band", "reject")
+    }
+    metrics.reset()
+    row_d = record_occupancy(dev, EPS, rows)
+    dev_counts = {
+        k: metrics.counter(f"index.band.{k}").value
+        for k in ("accept", "band", "reject")
+    }
+
+    assert sum(host_counts.values()) == len(rows) * len(obs_data)
+    assert dev_counts == host_counts
+    assert row_d["accept_frac"] == pytest.approx(row_h["accept_frac"])
+    assert row_d["band_frac"] == pytest.approx(row_h["band_frac"])
+    assert row_d["t_lo"] == row_h["t_lo"] and row_d["t_hi"] == row_h["t_hi"]
+
+
+def test_band_lazily_records_occupancy_once_per_eps(obs_data):
+    bk = RandomProjectionBackend(device=False, **CFG).fit(obs_data)
+    metrics.reset()
+    bk.band(EPS)
+    accepted = metrics.counter("index.band.accept").value
+    total = sum(
+        metrics.counter(f"index.band.{k}").value
+        for k in ("accept", "band", "reject")
+    )
+    assert total > 0  # one sampled measurement was taken
+    bk.band(EPS)  # memoized per (backend, eps): no second measurement
+    assert metrics.counter("index.band.accept").value == accepted
+    bk.band(0.4)  # a new eps is a new measurement
+    assert (
+        sum(
+            metrics.counter(f"index.band.{k}").value
+            for k in ("accept", "band", "reject")
+        )
+        > total
+    )
