@@ -1,0 +1,49 @@
+"""``repro.analysis`` — laf-lint: jaxpr/HLO/AST invariant checks over
+the launch surface, with a CI gate.
+
+Three pass families, one stable check id + LAF-code each::
+
+    python -m repro.analysis                  # run everything
+    python -m repro.analysis --list-checks    # jax-free inventory
+    python -m repro.analysis --only=hlo-bitmap-collective
+    python -m repro.analysis --corpus tests/analysis_corpus
+
+* **jaxpr** (LAF1xx) — donation safety, host callbacks in hot loops,
+  shard_map replication taint, recompile-lattice boundedness; traced
+  from the real entry points (:mod:`.targets`).
+* **hlo** (LAF2xx) — collective hygiene + fusion-boundary byte budgets
+  on the optimized HLO, via :mod:`repro.launch.hlo_analysis`.
+* **ast** (LAF3xx) — source lint: traced branches, unsynced wall-clock
+  timing, raw ``pallas_call`` placement, kernel tile contracts; also a
+  flake8 plugin (:class:`.ast_lint.LafLintPlugin`).
+
+Findings exit nonzero unless suppressed by ``analysis/baseline.toml``
+or an inline ``# laf-lint: disable=<check-id>``.
+
+This package root is import-light (no jax) so ``--list-checks`` and
+the flake8 plugin load instantly; jax is touched only when checks run.
+"""
+
+from .registry import CHECKS, CheckSpec, Finding, load_all_checks, run_checks
+from .report import (
+    DEFAULT_BASELINE,
+    load_baseline,
+    render_console,
+    save_baseline,
+    split_suppressed,
+    to_json,
+)
+
+__all__ = [
+    "CHECKS",
+    "CheckSpec",
+    "Finding",
+    "load_all_checks",
+    "run_checks",
+    "DEFAULT_BASELINE",
+    "load_baseline",
+    "save_baseline",
+    "split_suppressed",
+    "render_console",
+    "to_json",
+]

@@ -1,0 +1,194 @@
+"""Golden-violation corpus runner.
+
+The corpus (``tests/analysis_corpus/``) holds one *bad* + one *ok* twin
+per check — the detection contract every pass is held to: the bad entry
+must produce at least one finding of its check, the ok twin none.
+
+Entry naming: ``<check id, dashes as underscores>__bad`` /
+``...__ok``, with the extension/shape the check's evaluator expects:
+
+* AST checks + ``jaxpr-donation-reuse`` — a ``.py`` file, linted
+  directly (never imported);
+* ``ast-kernel-tile-contract`` — a directory containing
+  ``kernels/<pkg>/kernel.py`` (+ ``ops.py``), walked like a tree;
+* HLO checks — a ``.txt`` HLO fixture, optionally opening with a
+  ``// byte_budget: N`` line (consumed by the fusion-budget check);
+* ``jaxpr-donation-alias`` / ``jaxpr-host-callback-in-loop`` /
+  ``jaxpr-shardmap-replication`` — a ``.py`` module **imported and
+  executed** (it builds a tiny traced/lowered program): it must expose
+  ``build()`` returning ``{"jaxpr": ...}`` or
+  ``{"lowered_text": str, "n_donated": int}``;
+* ``jaxpr-recompile-lattice`` — a ``.py`` module exposing
+  ``signatures(n) -> hashable`` (the compile signature for input size
+  ``n``) and ``bound(n_max) -> int``; the runner counts distinct
+  signatures over ``1..n_max`` against the bound.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import re
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Tuple
+
+from . import ast_lint
+from .registry import CHECKS, Finding, load_all_checks
+
+__all__ = ["CorpusResult", "discover", "run_corpus"]
+
+_BUDGET_RE = re.compile(r"^//\s*byte_budget:\s*(\d+)")
+
+
+class CorpusResult:
+    def __init__(self):
+        self.passed: List[str] = []
+        self.failed: List[Tuple[str, str]] = []  # (entry, why)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failed
+
+    def record(self, entry: str, why: Optional[str]) -> None:
+        if why is None:
+            self.passed.append(entry)
+        else:
+            self.failed.append((entry, why))
+
+
+def discover(corpus_dir: Path) -> List[Tuple[str, bool, Path]]:
+    """(check_id, is_bad, path) per entry, sorted for stable output."""
+    out = []
+    for p in sorted(Path(corpus_dir).iterdir()):
+        stem = p.stem if p.is_file() else p.name
+        if "__" not in stem:
+            continue
+        check_us, _, kind = stem.rpartition("__")
+        if kind not in ("bad", "ok"):
+            continue
+        check_id = check_us.replace("_", "-")
+        if check_id in CHECKS:
+            out.append((check_id, kind == "bad", p))
+    return out
+
+
+def _load_module(path: Path):
+    spec = importlib.util.spec_from_file_location(
+        f"analysis_corpus_{path.stem}", path
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _eval_ast_file(check_id: str, path: Path) -> List[Finding]:
+    per_file = {
+        "ast-traced-branch": ast_lint.check_file_traced_branch,
+        "ast-wallclock-sync": ast_lint.check_file_wallclock_sync,
+        "ast-raw-pallas-call": ast_lint.check_file_raw_pallas_call,
+    }[check_id]
+    tree, lines = ast_lint.parse_file(path)
+    if tree is None:
+        return [
+            Finding(check_id, str(path), 0, "corpus entry failed to parse")
+        ]
+    return ast_lint.filter_inline_suppressed(
+        per_file(path, tree, str(path)), lines
+    )
+
+
+def _eval_entry(check_id: str, path: Path) -> List[Finding]:
+    from . import hlo_checks, jaxpr_checks
+
+    label = f"<corpus:{path.name}>"
+    if check_id.startswith("hlo-"):
+        text = path.read_text()
+        m = _BUDGET_RE.match(text.splitlines()[0]) if text else None
+        budget = int(m.group(1)) if m else None
+        return check_hlo_filtered(text, label, budget, check_id)
+    if check_id in (
+        "ast-traced-branch", "ast-wallclock-sync", "ast-raw-pallas-call",
+    ):
+        return _eval_ast_file(check_id, path)
+    if check_id == "ast-kernel-tile-contract":
+        return ast_lint.check_tree_kernel_tile_contract([path], path)
+    if check_id == "jaxpr-donation-reuse":
+        tree, lines = ast_lint.parse_file(path)
+        if tree is None:
+            return [Finding(check_id, str(path), 0, "corpus entry failed to parse")]
+        return ast_lint.filter_inline_suppressed(
+            jaxpr_checks.check_file_donation_reuse(path, tree, str(path)), lines
+        )
+    if check_id == "jaxpr-recompile-lattice":
+        mod = _load_module(path)
+        n_max = getattr(mod, "N_MAX", 4096)
+        sigs = {mod.signatures(n) for n in range(1, n_max + 1)}
+        if len(sigs) > mod.bound(n_max):
+            return [
+                Finding(
+                    check_id, label, 0,
+                    f"{len(sigs)} distinct compile signatures over "
+                    f"n in [1, {n_max}] (bound: {mod.bound(n_max)})",
+                )
+            ]
+        return []
+    # executed jaxpr entries
+    mod = _load_module(path)
+    built = mod.build()
+    if "lowered_text" in built:
+        return jaxpr_checks.check_donation_text(
+            built["lowered_text"], built["n_donated"], label
+        )
+    jaxpr = built["jaxpr"]
+    if check_id == "jaxpr-host-callback-in-loop":
+        return jaxpr_checks.check_jaxpr_callbacks(jaxpr, label)
+    if check_id == "jaxpr-shardmap-replication":
+        return jaxpr_checks.check_jaxpr_shardmaps(jaxpr, label)
+    raise ValueError(f"no corpus evaluator for {check_id!r}")
+
+
+def check_hlo_filtered(text, label, budget, check_id) -> List[Finding]:
+    from .hlo_checks import check_hlo_text
+
+    return [
+        f
+        for f in check_hlo_text(text, label, byte_budget=budget)
+        if f.check == check_id
+    ]
+
+
+def run_corpus(corpus_dir: Path) -> CorpusResult:
+    """Run every entry; a bad entry must yield >=1 finding of its own
+    check, an ok twin exactly 0.  Every registered check must have at
+    least one bad entry (the corpus is the detection proof)."""
+    load_all_checks()
+    result = CorpusResult()
+    entries = discover(Path(corpus_dir))
+    covered = set()
+    for check_id, is_bad, path in entries:
+        name = path.name
+        try:
+            findings = [f for f in _eval_entry(check_id, path) if f.check == check_id]
+        except Exception as exc:  # an evaluator crash is a corpus failure
+            result.record(name, f"evaluator raised {type(exc).__name__}: {exc}")
+            continue
+        if is_bad:
+            covered.add(check_id)
+            result.record(
+                name,
+                None if findings else "bad entry produced no finding",
+            )
+        else:
+            result.record(
+                name,
+                None
+                if not findings
+                else "ok twin produced finding(s): "
+                + "; ".join(f.message[:80] for f in findings[:3]),
+            )
+    missing = sorted(set(CHECKS) - covered)
+    if missing:
+        result.record(
+            "<coverage>",
+            f"checks with no bad corpus entry: {', '.join(missing)}",
+        )
+    return result

@@ -1,0 +1,142 @@
+"""HLO passes: invariants on the optimized HLO of the standard targets,
+built on :mod:`repro.launch.hlo_analysis`'s parser.
+
+* ``hlo-bitmap-collective`` (LAF201) — no collective moves packed
+  bitmap words (u32/u64/u16/u8 element types) inside a loop body.  The
+  plane's contract is that only per-query *count* psums (s32) run per
+  chunk; the packed adjacency crosses the network exactly once, at
+  launch end, via the ``out_specs`` gather — a loop-rooted
+  unsigned-word collective means an adjacency slab went on the wire
+  per chunk.
+* ``hlo-loop-collective-allowlist`` (LAF202) — collectives inside while
+  bodies are restricted to the allowlist (per-chunk s32 count
+  all-reduce).  Anything else in a loop body multiplies by the trip
+  count.
+* ``hlo-fusion-bytes-budget`` (LAF203) — ``analyze_hlo``'s
+  fusion-boundary ``bytes_accessed`` stays under the per-target budget
+  (:data:`repro.analysis.targets.BYTE_BUDGETS`, ~6x measured) — the
+  tripwire for an accidental f32 bitmap or a materialized (nq, n)
+  intermediate.
+
+``check_hlo_text`` is the shared core: the corpus runner feeds it
+fixture HLO and ``repro.launch.dryrun`` calls it per compiled cell.
+jax imports are deferred so ``--list-checks`` stays jax-free (the
+HLO parser itself is pure-regex and safe to import).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Set, Tuple
+
+from .registry import Finding, register
+
+__all__ = ["PACKED_WORD_TYPES", "LOOP_COLLECTIVE_ALLOWLIST", "check_hlo_text"]
+
+PACKED_WORD_TYPES: Set[str] = {"u8", "u16", "u32", "u64"}
+
+# (op, element_type) pairs allowed inside a while body: the per-chunk
+# count psum is the only collective the pipelined plane is specified to
+# run per iteration
+LOOP_COLLECTIVE_ALLOWLIST: Set[Tuple[str, str]] = {
+    ("all-reduce", "s32"),
+}
+
+
+def check_hlo_text(
+    hlo: str,
+    label: str,
+    *,
+    byte_budget: Optional[int] = None,
+    loop_allowlist: Set[Tuple[str, str]] = LOOP_COLLECTIVE_ALLOWLIST,
+) -> List[Finding]:
+    """All HLO findings for one compiled module (shared by the target
+    checks, the corpus runner, and the dryrun hook)."""
+    from ..launch.hlo_analysis import analyze_hlo, collectives_by_computation
+
+    findings: List[Finding] = []
+    for comp in collectives_by_computation(hlo).values():
+        for c in comp.collectives:
+            # the single sanctioned packed-word collective is the
+            # end-of-launch out_specs gather, which lives OUTSIDE the
+            # chunk loop; any loop-rooted one is per-chunk wire traffic
+            if c.element_type in PACKED_WORD_TYPES and comp.is_loop_body:
+                findings.append(
+                    Finding(
+                        "hlo-bitmap-collective", label, c.line,
+                        f"{c.op} moves {c.element_type} "
+                        f"({c.bytes:,} bytes) inside loop body "
+                        f"`{comp.name}` — packed bitmap words on the wire "
+                        f"per chunk; only s32 count psums may run inside "
+                        f"the loop (the bitmap gathers once, at launch "
+                        f"end, via out_specs)",
+                        hint="keep bitmap words shard-local until the "
+                        "shard_map out_specs gather; psum counts, not "
+                        "words",
+                    )
+                )
+            if comp.is_loop_body and (c.op, c.element_type) not in loop_allowlist:
+                trip = (
+                    f"x{comp.trip_count} iterations"
+                    if comp.trip_count
+                    else "unknown trip count"
+                )
+                findings.append(
+                    Finding(
+                        "hlo-loop-collective-allowlist", label, c.line,
+                        f"{c.op}({c.element_type}, {c.bytes:,} bytes) "
+                        f"inside while body `{comp.name}` ({trip}) is not "
+                        f"on the loop-collective allowlist "
+                        f"{sorted(loop_allowlist)}",
+                        hint="hoist the collective out of the loop or "
+                        "extend the allowlist deliberately (with a "
+                        "baseline entry explaining why)",
+                    )
+                )
+    if byte_budget is not None:
+        measured = analyze_hlo(hlo).bytes_accessed
+        if measured > byte_budget:
+            findings.append(
+                Finding(
+                    "hlo-fusion-bytes-budget", label, 0,
+                    f"fusion-boundary traffic {measured:,.0f} bytes "
+                    f"exceeds the target budget {byte_budget:,} — a "
+                    f"fusion boundary regressed (f32 bitmap? "
+                    f"materialized (nq, n) intermediate?)",
+                    hint="diff analyze_hlo(...).fusion_boundaries against "
+                    "a known-good build; retune BYTE_BUDGETS only for "
+                    "intentional changes",
+                )
+            )
+    return findings
+
+
+def _target_findings(ctx, wanted: str) -> List[Finding]:
+    findings = []
+    for t in ctx.targets.all():
+        fs = check_hlo_text(t.hlo, t.label, byte_budget=t.byte_budget)
+        findings.extend(f for f in fs if f.check == wanted)
+    return findings
+
+
+@register(
+    "hlo-bitmap-collective", family="hlo", code="LAF201",
+    description="no collective moves packed bitmap words (u32 et al.)",
+)
+def _check_bitmap_collective(ctx) -> List[Finding]:
+    return _target_findings(ctx, "hlo-bitmap-collective")
+
+
+@register(
+    "hlo-loop-collective-allowlist", family="hlo", code="LAF202",
+    description="loop-body collectives restricted to s32 count psums",
+)
+def _check_loop_allowlist(ctx) -> List[Finding]:
+    return _target_findings(ctx, "hlo-loop-collective-allowlist")
+
+
+@register(
+    "hlo-fusion-bytes-budget", family="hlo", code="LAF203",
+    description="fusion-boundary bytes_accessed within per-target budget",
+)
+def _check_bytes_budget(ctx) -> List[Finding]:
+    return _target_findings(ctx, "hlo-fusion-bytes-budget")

@@ -1,0 +1,109 @@
+"""Check registry: stable IDs, families, findings.
+
+Every pass registers itself under a **stable check id** (the name CI
+logs, ``--only=``, and ``baseline.toml`` all reference) plus a flake8
+code (``LAF1xx`` jaxpr, ``LAF2xx`` HLO, ``LAF3xx`` AST).  A check is a
+function ``fn(ctx) -> list[Finding]``; the registry is populated by
+importing the three pass modules (``load_all_checks``), which keeps
+``--list-checks`` jax-free — the pass modules defer their jax imports
+to call time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+__all__ = [
+    "Finding",
+    "CheckSpec",
+    "CHECKS",
+    "register",
+    "load_all_checks",
+    "run_checks",
+]
+
+
+@dataclass
+class Finding:
+    """One invariant violation, anchored to a file:line (AST passes) or
+    a traced/compiled target label (jaxpr/HLO passes)."""
+
+    check: str           # stable check id, e.g. "ast-wallclock-sync"
+    path: str            # repo-relative file path or "<target:name>"
+    line: int            # 1-based; 0 for whole-target findings
+    message: str         # what is wrong
+    hint: str = ""       # how to fix it
+    severity: str = "error"
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}" if self.line else self.path
+
+    def to_dict(self) -> dict:
+        return {
+            "check": self.check,
+            "path": self.path,
+            "line": self.line,
+            "message": self.message,
+            "hint": self.hint,
+            "severity": self.severity,
+        }
+
+
+@dataclass(frozen=True)
+class CheckSpec:
+    id: str
+    family: str          # "jaxpr" | "hlo" | "ast"
+    code: str            # flake8-style code (LAF101, ...)
+    description: str
+    fn: Callable = field(compare=False)
+
+
+CHECKS: Dict[str, CheckSpec] = {}
+
+
+def register(check_id: str, *, family: str, code: str, description: str):
+    """Decorator registering a pass under its stable id."""
+
+    def deco(fn):
+        if check_id in CHECKS:
+            raise ValueError(f"duplicate check id {check_id!r}")
+        CHECKS[check_id] = CheckSpec(check_id, family, code, description, fn)
+        return fn
+
+    return deco
+
+
+_loaded = False
+
+
+def load_all_checks() -> Dict[str, CheckSpec]:
+    """Import the pass modules (idempotent) and return the registry."""
+    global _loaded
+    if not _loaded:
+        from . import ast_lint, hlo_checks, jaxpr_checks  # noqa: F401
+
+        _loaded = True
+    return CHECKS
+
+
+def run_checks(
+    ctx,
+    only: Optional[set] = None,
+    skip: Optional[set] = None,
+    families: Optional[set] = None,
+) -> List[Finding]:
+    """Run every selected registered check over ``ctx``; findings are
+    ordered (check id, path, line) so reports and baselines are stable."""
+    load_all_checks()
+    findings: List[Finding] = []
+    for spec in CHECKS.values():
+        if only is not None and spec.id not in only:
+            continue
+        if skip is not None and spec.id in skip:
+            continue
+        if families is not None and spec.family not in families:
+            continue
+        findings.extend(spec.fn(ctx))
+    findings.sort(key=lambda f: (f.check, f.path, f.line))
+    return findings

@@ -1,0 +1,277 @@
+"""The standard launch surface the jaxpr/HLO passes run over.
+
+A :class:`Target` is one real entry point traced/lowered at a pinned
+"standard config" — small enough to compile in about a second on the
+forced-host mesh, shaped to exercise the structure the checks care
+about (donation, a ≥2-iteration chunk loop so XLA emits a real
+``while``, the sharded plane's psum/gather, the cluster lowering's
+scan).  The four targets:
+
+* ``sweep_engine_counts`` / ``sweep_engine_bitmap`` — the donated
+  one-launch sweep bodies (``repro.index.sweep``) at nq=512, d=64,
+  chunk=256 (cpl=2: the fori_loop survives as an HLO while);
+* ``sharded_plane`` — the pipelined bitmap sweep plane
+  (``repro.distributed.index_plane``) on a ``min(4, n_devices)``-way
+  ``("data",)`` mesh, 1024 queries × 8 chunks (scan trip count 7);
+* ``laf_cluster`` — ``build_laf_cluster`` at the reduced config with
+  ``backend="random_projection"``, ``index_device=True`` (the fused
+  tile through the plane — the paper's workload);
+* ``serve_assign`` — the serving verify launch at the smallest
+  ``bucket_shape`` bucket (256 candidates, 128-query chunk).
+
+``BYTE_BUDGETS`` pins each target's fusion-boundary traffic
+(``analyze_hlo().bytes_accessed``) at ~6x the measured value on the
+standard config — a regression gate against fusion-boundary blowups
+(an accidental f32 bitmap, a broadcasted (nq, n) intermediate), not a
+performance target.
+
+Everything here imports jax, so the CLI/registry layers import this
+module lazily (``--list-checks`` stays jax-free).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["Target", "Targets", "Context", "BYTE_BUDGETS", "STANDARD_MESH_AXES"]
+
+STANDARD_MESH_AXES = ("data",)
+
+# fusion-boundary bytes_accessed ceilings per target (~6x the value
+# measured on the standard config, CPU/forced-host mesh) — see module
+# docstring.  Retune by running:
+#   python -m repro.analysis --only=hlo-fusion-bytes-budget  (prints on fail)
+BYTE_BUDGETS: Dict[str, int] = {
+    "sweep_engine_counts": 112_000_000,   # measured 18.6 MB
+    "sweep_engine_bitmap": 130_000_000,   # measured 21.6 MB
+    "sharded_plane": 75_000_000,          # measured 12.3 MB (4-dev mesh)
+    "laf_cluster": 410_000_000,           # measured 68.1 MB (4-dev mesh)
+    "serve_assign": 8_500_000,            # measured 1.35 MB
+}
+
+
+@dataclass
+class Target:
+    """One traced + compiled entry point.
+
+    ``jaxpr`` is the closed jaxpr of the *implementation* (higher-order
+    eqns — scan/while/shard_map/pjit — intact for the jaxpr walkers);
+    ``lowered_text`` is the pre-optimization StableHLO (donation
+    aliasing lives here as ``tf.aliasing_output``); ``hlo`` is the
+    optimized HLO the collective/fusion passes parse.
+    """
+
+    name: str
+    jaxpr: object
+    lowered_text: str
+    hlo: str
+    n_donated: int = 0
+    sharded: bool = False
+    byte_budget: Optional[int] = None
+
+    @property
+    def label(self) -> str:
+        return f"<target:{self.name}>"
+
+
+def _sds(shape, dtype):
+    import jax
+
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _standard_mesh():
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    return Mesh(np.asarray(devs[: min(4, len(devs))]), STANDARD_MESH_AXES)
+
+
+class Targets:
+    """Lazy build-once cache of the standard targets."""
+
+    def __init__(self):
+        self._cache: Dict[str, Target] = {}
+
+    NAMES = (
+        "sweep_engine_counts",
+        "sweep_engine_bitmap",
+        "sharded_plane",
+        "laf_cluster",
+        "serve_assign",
+    )
+
+    def get(self, name: str) -> Target:
+        if name not in self._cache:
+            self._cache[name] = getattr(self, f"_build_{name}")()
+        return self._cache[name]
+
+    def all(self) -> List[Target]:
+        return [self.get(n) for n in self.NAMES]
+
+    # -- sweep engine -------------------------------------------------
+
+    def _sweep_args(self, *, bitmap: bool, nq: int, n_db: int, d: int = 64,
+                    sig_words: int = 2):
+        import jax.numpy as jnp
+
+        outs = (_sds((nq,), jnp.int32),)
+        if bitmap:
+            outs += (_sds((nq, n_db // 32), jnp.uint32),)
+        return outs + (
+            _sds((), jnp.int32),              # start
+            _sds((nq, d), jnp.float32),       # q
+            _sds((nq, sig_words), jnp.uint32),
+            _sds((n_db, d), jnp.float32),     # db
+            _sds((n_db, sig_words), jnp.uint32),
+            _sds((1,), jnp.float32),          # eps
+            _sds((2,), jnp.int32),            # band
+        )
+
+    def _build_sweep(self, *, bitmap: bool, nq: int, n_db: int,
+                     chunk: int, name: str) -> Target:
+        import jax
+
+        from ..index import sweep as sw
+
+        static = dict(chunk=chunk, q_tile=128, db_tile=256, interpret=True)
+        impl = sw._bitmap_launch_impl if bitmap else sw._counts_launch_impl
+        jitted = sw._bitmap_launch_donated if bitmap else sw._counts_launch_donated
+        args = self._sweep_args(bitmap=bitmap, nq=nq, n_db=n_db)
+        jaxpr = jax.make_jaxpr(functools.partial(impl, **static))(*args)
+        lowered = jitted.lower(*args, **static)
+        return Target(
+            name, jaxpr, lowered.as_text(), lowered.compile().as_text(),
+            n_donated=2 if bitmap else 1, byte_budget=BYTE_BUDGETS.get(name),
+        )
+
+    def _build_sweep_engine_counts(self) -> Target:
+        # chunk=256 over 512 rows: cpl=2, so the chunk fori_loop lowers
+        # to a real HLO while (length-1 loops unroll away)
+        return self._build_sweep(
+            bitmap=False, nq=512, n_db=512, chunk=256,
+            name="sweep_engine_counts",
+        )
+
+    def _build_sweep_engine_bitmap(self) -> Target:
+        return self._build_sweep(
+            bitmap=True, nq=512, n_db=512, chunk=256,
+            name="sweep_engine_bitmap",
+        )
+
+    # -- sharded plane ------------------------------------------------
+
+    def _build_sharded_plane(self) -> Target:
+        import jax
+        import jax.numpy as jnp
+
+        from ..distributed.index_plane import _build_sweep_plane_fn
+
+        mesh = _standard_mesh()
+        fn = _build_sweep_plane_fn(
+            mesh, STANDARD_MESH_AXES, "bitmap",
+            128, 128, 256, True, 2,   # chunk, q_tile, db_tile, interpret, depth
+        )
+        nq, d, w, n_db = 1024, 64, 2, 1024  # 8 chunks -> scan trip count 7
+        args = (
+            _sds((nq, d), jnp.float32),
+            _sds((nq, w), jnp.uint32),
+            _sds((n_db, d), jnp.float32),
+            _sds((n_db, w), jnp.uint32),
+            _sds((1,), jnp.float32),
+            _sds((2,), jnp.int32),
+        )
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        lowered = fn.lower(*args)
+        return Target(
+            "sharded_plane", jaxpr, lowered.as_text(),
+            lowered.compile().as_text(),
+            sharded=len(mesh.devices.ravel()) > 1,
+            byte_budget=BYTE_BUDGETS.get("sharded_plane"),
+        )
+
+    # -- laf_cluster lowering -----------------------------------------
+
+    def _build_laf_cluster(self) -> Target:
+        import jax
+
+        from ..configs.laf_dbscan import make_reduced_config
+        from ..configs.registry import ShapeSpec, get_arch
+        from ..launch.laf_cluster import build_laf_cluster
+
+        mesh = _standard_mesh()
+        base = dataclasses.replace(
+            make_reduced_config(), backend="random_projection",
+            index_device=True,
+        )
+        arch = dataclasses.replace(get_arch("laf_dbscan"), make_config=lambda: base)
+        shape = ShapeSpec(
+            "analysis_reduced", "cluster", {"n_points": 2048, "dim": 64}
+        )
+        cell = build_laf_cluster(arch, shape, mesh)
+        jaxpr = jax.make_jaxpr(cell.step_fn)(*cell.args)
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+        )
+        lowered = jitted.lower(*cell.args)
+        return Target(
+            "laf_cluster", jaxpr, lowered.as_text(),
+            lowered.compile().as_text(),
+            sharded=len(mesh.devices.ravel()) > 1,
+            byte_budget=BYTE_BUDGETS.get("laf_cluster"),
+        )
+
+    # -- serving verify launch ----------------------------------------
+
+    def _build_serve_assign(self) -> Target:
+        import jax
+
+        from ..index import sweep as sw
+        from ..stream.serve import bucket_shape
+
+        # the smallest serving bucket: 200 candidates, 100-query block
+        bucket, chunk = bucket_shape(200, 100, db_tile=256, chunk=256, q_tile=128)
+        static = dict(chunk=chunk, q_tile=128, db_tile=256, interpret=True)
+        args = self._sweep_args(bitmap=True, nq=chunk, n_db=bucket)
+        jaxpr = jax.make_jaxpr(functools.partial(sw._bitmap_launch_impl, **static))(
+            *args
+        )
+        lowered = sw._bitmap_launch_donated.lower(*args, **static)
+        return Target(
+            "serve_assign", jaxpr, lowered.as_text(),
+            lowered.compile().as_text(),
+            n_donated=2, byte_budget=BYTE_BUDGETS.get("serve_assign"),
+        )
+
+
+@dataclass
+class Context:
+    """What a check sees: the repo layout for the AST passes plus the
+    lazily-built standard targets for the jaxpr/HLO passes."""
+
+    repo_root: Path
+    src_root: Path
+    ast_roots: Tuple[Path, ...] = ()
+    targets: Targets = field(default_factory=Targets)
+    # checks with a dynamic component (the paired-counter probe) honor
+    # this switch so pure-static runs stay cheap/deterministic
+    dynamic: bool = True
+
+    @classmethod
+    def for_repo(cls, repo_root=None, *, dynamic: bool = True) -> "Context":
+        root = Path(repo_root) if repo_root else Path(__file__).resolve().parents[3]
+        src = root / "src"
+        return cls(
+            repo_root=root,
+            src_root=src,
+            ast_roots=(src / "repro",),
+            dynamic=dynamic,
+        )

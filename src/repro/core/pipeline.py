@@ -5,7 +5,6 @@ training time does not — §3.1 Metrics).
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -146,22 +145,25 @@ class LAFPipeline:
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
         kw.setdefault("device", self.device)
-        with _span("laf.run", n=len(vectors), eps=float(eps), tau=int(tau)):
-            t0 = time.time()
-            with _span("laf.predict", n=len(vectors)):
+        # forced spans: JAX dispatch is async, so reported phase times
+        # must come from synced span durations, not bare wall clocks
+        with _span("laf.run", n=len(vectors), eps=float(eps), tau=int(tau),
+                   force=True) as run:
+            with _span("laf.predict", n=len(vectors), force=True) as pre:
                 pred = self.predict_counts(vectors, eps)
-            t1 = time.time()
+                pre.sync_on(pred)
             res = laf_dbscan(vectors, eps, tau, alpha, pred, seed=self.seed, **kw)
-            t2 = time.time()
-        return ClusterOutcome(res, t2 - t0, t1 - t0, "LAF-DBSCAN",
+            run.sync_on((res.labels, res.core))
+        return ClusterOutcome(res, run.dur, pre.dur, "LAF-DBSCAN",
                               {"eps": eps, "tau": tau, "alpha": alpha})
 
     def cluster_dbscan(self, vectors: np.ndarray, eps: float, tau: int, **kw) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
         kw.setdefault("device", self.device)
-        t0 = time.time()
-        res = dbscan_parallel(vectors, eps, tau, **kw)
-        return ClusterOutcome(res, time.time() - t0, 0.0, "DBSCAN", {"eps": eps, "tau": tau})
+        with _span("dbscan.run", n=len(vectors), force=True) as run:
+            res = dbscan_parallel(vectors, eps, tau, **kw)
+            run.sync_on((res.labels, res.core))
+        return ClusterOutcome(res, run.dur, 0.0, "DBSCAN", {"eps": eps, "tau": tau})
 
     def cluster_dbscan_pp(
         self, vectors: np.ndarray, eps: float, tau: int,
@@ -169,12 +171,13 @@ class LAFPipeline:
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
         kw.setdefault("device", self.device)
-        t0 = time.time()
-        if p is None:
-            pred = self.predict_counts(vectors, eps)
-            p = auto_sample_fraction(pred, tau, alpha, delta)
-        res = dbscan_pp(vectors, eps, tau, p, seed=self.seed, **kw)
-        return ClusterOutcome(res, time.time() - t0, 0.0, "DBSCAN++",
+        with _span("dbscanpp.run", n=len(vectors), force=True) as run:
+            if p is None:
+                pred = self.predict_counts(vectors, eps)
+                p = auto_sample_fraction(pred, tau, alpha, delta)
+            res = dbscan_pp(vectors, eps, tau, p, seed=self.seed, **kw)
+            run.sync_on((res.labels, res.core))
+        return ClusterOutcome(res, run.dur, 0.0, "DBSCAN++",
                               {"eps": eps, "tau": tau, "p": p})
 
     def cluster_laf_dbscan_pp(
@@ -183,19 +186,20 @@ class LAFPipeline:
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
         kw.setdefault("device", self.device)
-        t0 = time.time()
-        pred_all = self.predict_counts(vectors, eps)
-        if p is None:
-            p = auto_sample_fraction(pred_all, tau, alpha, delta)
-        n = vectors.shape[0]
-        m = max(1, int(round(p * n)))
-        rng = np.random.default_rng(self.seed)
-        sample_idx = np.sort(rng.choice(n, size=m, replace=False))
-        t1 = time.time()
-        res = laf_dbscan_pp(
-            vectors, eps, tau, p, pred_all[sample_idx],
-            alpha=alpha, seed=self.seed, sample_idx=sample_idx, **kw
-        )
-        t2 = time.time()
-        return ClusterOutcome(res, t2 - t0, t1 - t0, "LAF-DBSCAN++",
+        with _span("laf.run", n=len(vectors), force=True) as run:
+            with _span("laf.predict", n=len(vectors), force=True) as pre:
+                pred_all = self.predict_counts(vectors, eps)
+                if p is None:
+                    p = auto_sample_fraction(pred_all, tau, alpha, delta)
+                n = vectors.shape[0]
+                m = max(1, int(round(p * n)))
+                rng = np.random.default_rng(self.seed)
+                sample_idx = np.sort(rng.choice(n, size=m, replace=False))
+                pre.sync_on(pred_all)
+            res = laf_dbscan_pp(
+                vectors, eps, tau, p, pred_all[sample_idx],
+                alpha=alpha, seed=self.seed, sample_idx=sample_idx, **kw
+            )
+            run.sync_on((res.labels, res.core))
+        return ClusterOutcome(res, run.dur, pre.dur, "LAF-DBSCAN++",
                               {"eps": eps, "tau": tau, "p": p, "alpha": alpha})

@@ -104,6 +104,16 @@ def collective_bytes_from_hlo(hlo_text: str):
     return per_op
 
 
+def _analysis_findings(hlo: str, label: str):
+    """laf-lint HLO invariants over the freshly compiled cell (no byte
+    budget: dry-run cells are arbitrary shapes, not the standard
+    configs) — surfaced in the JSON record so a sweep over the table
+    doubles as a lint of every compiled module."""
+    from ..analysis.hlo_checks import check_hlo_text
+
+    return [f.to_dict() for f in check_hlo_text(hlo, label)]
+
+
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: Path,
              verbose: bool = True, variant: str = "baseline"):
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -165,7 +175,14 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: Path,
             hlo_analysis=analyze_hlo(hlo).to_dict(),
             collectives_loop_once=collective_bytes_from_hlo(hlo),
             hlo_bytes=len(hlo),
+            analysis_findings=_analysis_findings(hlo, f"{arch_name}__{shape_name}"),
         )
+        if verbose and record["analysis_findings"]:
+            log_event(
+                logger, "cell_lint", logging.WARNING,
+                arch=arch_name, shape=shape_name, mesh=mesh_name,
+                findings=[f["message"][:120] for f in record["analysis_findings"]],
+            )
         if verbose:
             bpd = record["memory_analysis"]["bytes_per_device"]["total"] / 2**30
             log_event(

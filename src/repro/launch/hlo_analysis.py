@@ -26,7 +26,13 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "HLOAnalysis"]
+__all__ = [
+    "analyze_hlo",
+    "HLOAnalysis",
+    "collectives_by_computation",
+    "ComputationCollectives",
+    "CollectiveRecord",
+]
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
@@ -37,7 +43,13 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[suf]\d+|c64|c128|token)\[([\d,]*)\]")
 _COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->\s*(.+?)\s*\{\s*$")
 _OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
-_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+# trip counts appear escaped inside backend_config JSON strings
+# (known_trip_count\":{\"n\":\"7\"), unescaped ("known_trip_count":{"n":"7"}),
+# and as a plain HLO attribute (known_trip_count={n=7}) depending on the
+# XLA version/printer — accept all three
+_TRIP_RE = re.compile(
+    r'known_trip_count\\?"?\s*[:=]\s*\{\s*\\?"?n\\?"?\s*[:=]\s*\\?"?(\d+)'
+)
 _CALL_ATTR_RE = re.compile(r"(?:body|calls)=%?([\w.\-]+)")
 _COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -187,6 +199,98 @@ def _parse_computations(hlo: str) -> Tuple[Dict[str, _Computation], Optional[str
         current.ops.append(op)
         current.symtab[name] = rtype
     return comps, entry_name
+
+
+@dataclass
+class CollectiveRecord:
+    """One collective op as it appears in a computation body."""
+
+    op: str            # normalized opcode ("-start" stripped)
+    name: str          # HLO result name
+    result_type: str   # full result type string, e.g. "s32[4,256]"
+    element_type: str  # first shape dtype, e.g. "s32", "u32"
+    bytes: int         # output-size wire proxy (matches analyze_hlo)
+    line: str
+
+
+@dataclass
+class ComputationCollectives:
+    """Per-computation collective inventory for contract checks."""
+
+    name: str
+    is_entry: bool
+    is_loop_body: bool          # reachable from a while body/cond
+    trip_count: Optional[int]   # known_trip_count of the owning loop, if any
+    collectives: List[CollectiveRecord] = field(default_factory=list)
+
+
+def collectives_by_computation(hlo: str) -> Dict[str, ComputationCollectives]:
+    """Structured per-computation collective table over optimized HLO.
+
+    Marks every computation reachable from a ``while`` body/condition
+    (transitively, through fusion/call targets) as a loop body and
+    attaches the loop's ``known_trip_count`` when the attribute is
+    present.  ``repro.analysis.hlo_checks`` consumes this to enforce
+    the plane's dataflow contracts (no packed-word collectives, loop
+    bodies restricted to the count-psum allowlist).
+    """
+    comps, entry = _parse_computations(hlo)
+    trip_by_comp: Dict[str, Optional[int]] = {}
+    loop_rooted = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode != "while":
+                continue
+            m = _TRIP_RE.search(op.line)
+            trip = int(m.group(1)) if m else None
+            for rx in (_CALL_ATTR_RE, _COND_ATTR_RE):
+                t = rx.search(op.line)
+                if t and t.group(1) in comps:
+                    loop_rooted.add(t.group(1))
+                    trip_by_comp[t.group(1)] = trip
+    # transitive closure: a collective inside a fusion called from a loop
+    # body still executes once per trip
+    callees: Dict[str, set] = {name: set() for name in comps}
+    for name, comp in comps.items():
+        for op in comp.ops:
+            for rx in (_CALL_ATTR_RE, _COND_ATTR_RE):
+                m = rx.search(op.line)
+                if m and m.group(1) in comps:
+                    callees[name].add(m.group(1))
+    in_loop = set(loop_rooted)
+    frontier = list(loop_rooted)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in callees.get(cur, ()):
+            if nxt not in in_loop:
+                in_loop.add(nxt)
+                trip_by_comp.setdefault(nxt, trip_by_comp.get(cur))
+                frontier.append(nxt)
+    out: Dict[str, ComputationCollectives] = {}
+    for name, comp in comps.items():
+        recs = []
+        for op in comp.ops:
+            if op.opcode not in _COLLECTIVES:
+                continue
+            sm = _SHAPE_RE.search(op.result_type)
+            recs.append(
+                CollectiveRecord(
+                    op=op.opcode.replace("-start", ""),
+                    name=op.name,
+                    result_type=op.result_type,
+                    element_type=sm.group(1) if sm else "",
+                    bytes=_type_bytes(op.result_type),
+                    line=op.line.strip(),
+                )
+            )
+        out[name] = ComputationCollectives(
+            name=name,
+            is_entry=(name == entry),
+            is_loop_body=name in in_loop,
+            trip_count=trip_by_comp.get(name),
+            collectives=recs,
+        )
+    return out
 
 
 def _collective_wire_factor(opcode: str, line: str) -> float:

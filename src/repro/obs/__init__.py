@@ -63,7 +63,19 @@ __all__ = [
     "configure_logging",
     "RecompileWatcher",
     "watch_recompiles",
+    "PAIRED_COUNTERS",
 ]
+
+# counters that must move in lockstep over a steady-query-shape
+# workload: each new left-counter signature must be explained by one
+# right-counter event (PR 6's "recompiles pair 1:1 with capacity
+# doublings" contract).  tests/test_obs.py pins this dynamically;
+# repro.analysis's jaxpr-recompile-lattice check re-probes it as part
+# of the static-analysis gate.  Add a pair here and both enforcers
+# pick it up.
+PAIRED_COUNTERS = (
+    ("sweep.recompiles", "index.capacity_doublings"),
+)
 
 _monitor_registered = False
 

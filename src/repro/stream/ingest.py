@@ -26,7 +26,6 @@ rule) — see ``tests/test_stream.py`` for the ARI == 1.0 parity checks.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -147,8 +146,11 @@ class StreamingLAF:
         batch = np.ascontiguousarray(batch, dtype=np.float32)
         if batch.ndim != 2 or batch.shape[0] == 0:
             raise ValueError(f"batch must be (rows, d) with rows >= 1, got {batch.shape}")
-        t0 = time.time()
-        with _span("ingest.batch", rows=batch.shape[0], n=self.state.n):
+        # forced span: the append dispatches async device work (donated
+        # capacity buffers), so the reported batch time must sync on the
+        # backend's device state, not read a bare wall clock
+        with _span("ingest.batch", rows=batch.shape[0], n=self.state.n,
+                   force=True) as batch_sp:
             with _span("ingest.append", rows=batch.shape[0]):
                 self.backend.partial_fit(batch)
             rep = self._absorb(batch)
@@ -157,8 +159,12 @@ class StreamingLAF:
                 idx = self.decay(self.state)
                 if idx is not None and len(idx):
                     rebuilt = self.evict(idx)
+            batch_sp.sync_on(tuple(
+                getattr(self.backend, a, None)
+                for a in ("_sigs_dev", "_data_dev", "_sweep_dev", "_host_sigs_dev")
+            ))
         rep.rebuilt = rebuilt
-        rep.elapsed_s = time.time() - t0
+        rep.elapsed_s = batch_sp.dur
         # refresh state-derived fields after the decay hook: an eviction
         # (or rebuild) changes the database the report describes
         rep.n_points = self.state.n

@@ -37,7 +37,25 @@ import numpy as np
 from ..index.signatures import band_hits, hamming_numpy, sign_signatures
 from ..obs import metrics as _metrics, span as _span
 
-__all__ = ["AssignResult", "ClusterIndex"]
+__all__ = ["AssignResult", "ClusterIndex", "bucket_shape"]
+
+
+def bucket_shape(
+    n_cand: int, n_block: int, *, db_tile: int = 256, chunk: int = 256,
+    q_tile: int = 128,
+) -> tuple[int, int]:
+    """Quantized ``(db_bucket, query_chunk)`` launch shape for one serve
+    verification block.
+
+    The candidate side rounds up to a power of two no smaller than the
+    kernel db tile and the query chunk clamps to the power-of-two block
+    size (floored at one q tile), so the jitted engine compiles O(log n)
+    distinct shapes over any traffic mix — the compile lattice
+    ``repro.analysis``'s recompile check enumerates is exactly this
+    function's image."""
+    bucket = max(db_tile, 1 << int(np.ceil(np.log2(max(n_cand, 1)))))
+    chunk = min(chunk, max(q_tile, 1 << int(np.ceil(np.log2(max(n_block, 1))))))
+    return bucket, chunk
 
 
 @dataclass
@@ -260,19 +278,19 @@ class ClusterIndex:
             # handles) so the jitted launch compiles O(log n) shapes,
             # not one per shortlist union size — the serving hot path
             kw = dict(self.sweep_kw)
-            db_tile = kw.get("db_tile", 256)
-            bucket = max(db_tile, 1 << int(np.ceil(np.log2(len(cand)))))
+            # the query chunk clamps to the (power-of-two bucketed) leaf
+            # size: a split-down leaf of 8 queries must not pad to a
+            # full 256-row kernel pass
+            bucket, kw["chunk"] = bucket_shape(
+                len(cand), e - s,
+                db_tile=kw.get("db_tile", 256),
+                chunk=kw.get("chunk", 256),
+                q_tile=kw.get("q_tile", 128),
+            )
             db = np.zeros((bucket, self._data.shape[1]), dtype=np.float32)
             db[: len(cand)] = self._data[cand]
             db_sig = np.zeros((bucket, self._sigs.shape[1]), dtype=np.uint32)
             db_sig[: len(cand)] = self._sigs[cand]
-            # clamp the query chunk to the (power-of-two bucketed) leaf
-            # size: a split-down leaf of 8 queries must not pad to a
-            # full 256-row kernel pass
-            kw["chunk"] = min(
-                kw.get("chunk", 256),
-                max(kw.get("q_tile", 128), 1 << int(np.ceil(np.log2(e - s)))),
-            )
             if (bucket, kw["chunk"]) not in self._seen_buckets:
                 self._seen_buckets.add((bucket, kw["chunk"]))
                 _metrics.counter("serve.bucket_compiles").inc()

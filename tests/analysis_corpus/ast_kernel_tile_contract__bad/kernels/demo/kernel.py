@@ -1,0 +1,11 @@
+"""Corpus BAD kernel module: DEFAULT_DB_TILE breaks the kernel's own
+divisibility assert, and ops.py (sibling) contradicts the constants."""
+
+DEFAULT_Q_TILE = 128
+DEFAULT_DB_TILE = 200  # not a multiple of 32: violates the assert below
+
+
+def hamming_kernel(q, db, *, q_tile=DEFAULT_Q_TILE, db_tile=DEFAULT_DB_TILE):
+    assert q_tile % 8 == 0
+    assert db_tile % 32 == 0
+    return q, db

@@ -1,0 +1,8 @@
+"""Corpus BAD ops module: redefines the kernel's tile constant with a
+different value and ships a mismatched literal default."""
+
+DEFAULT_DB_TILE = 256  # kernel.py says 200 — padding math and grid disagree
+
+
+def sweep(q, db, *, db_tile=64):
+    return q, db, db_tile

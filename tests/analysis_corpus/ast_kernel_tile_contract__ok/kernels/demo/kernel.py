@@ -1,0 +1,11 @@
+"""Corpus OK kernel module: defaults satisfy the kernel's asserts and
+ops.py defers to these constants instead of redefining them."""
+
+DEFAULT_Q_TILE = 128
+DEFAULT_DB_TILE = 256
+
+
+def hamming_kernel(q, db, *, q_tile=DEFAULT_Q_TILE, db_tile=DEFAULT_DB_TILE):
+    assert q_tile % 8 == 0
+    assert db_tile % 32 == 0
+    return q, db

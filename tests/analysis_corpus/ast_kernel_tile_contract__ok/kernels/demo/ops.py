@@ -1,0 +1,8 @@
+"""Corpus OK ops module: tile defaults come from the kernel module —
+no literal to drift out of sync."""
+
+from .kernel import DEFAULT_DB_TILE, DEFAULT_Q_TILE
+
+
+def sweep(q, db, *, q_tile=DEFAULT_Q_TILE, db_tile=DEFAULT_DB_TILE):
+    return q, db, q_tile, db_tile

@@ -1,0 +1,18 @@
+"""Corpus BAD: raw pl.pallas_call in a wrapper module (this file is not
+kernels/*/kernel.py, so the launch belongs behind the kernel package).
+
+Linted only — never imported or executed.
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def hamming_tile(q_ref, db_ref, out_ref):
+    out_ref[...] = q_ref[...] @ db_ref[...]
+
+
+def sweep_tile(q, db):
+    return pl.pallas_call(
+        hamming_tile,
+        out_shape=jax.ShapeDtypeStruct((q.shape[0], db.shape[0]), q.dtype),
+    )(q, db)

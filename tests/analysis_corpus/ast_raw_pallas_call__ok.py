@@ -1,0 +1,10 @@
+"""Corpus OK twin: the wrapper goes through the kernel module's public
+entry point instead of launching pallas itself.
+
+Linted only — never imported or executed (imports need not resolve).
+"""
+from repro.kernels.hamming_filter import kernel
+
+
+def sweep_tile(q, db, *, q_tile=128, db_tile=256):
+    return kernel.hamming_filter_count(q, db, q_tile=q_tile, db_tile=db_tile)

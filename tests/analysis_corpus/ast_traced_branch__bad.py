@@ -1,0 +1,21 @@
+"""Corpus BAD: python control flow on traced values inside jitted code.
+
+Linted only — never imported or executed.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("flip",))
+def score(x, flip):
+    if x.sum() > 0:  # traced predicate: runs at trace time, not per call
+        return jnp.where(flip, -x, x)
+    return x
+
+
+@jax.jit
+def guard(v):
+    assert v.min() >= 0  # asserts on the tracer, not runtime data
+    return jnp.sqrt(v)

@@ -1,0 +1,24 @@
+"""Corpus OK twin: every branch predicate is genuinely static —
+static_argnames, shape/dtype metadata, len(), `is None`.
+
+Linted only — never imported or executed.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("normalize",))
+def score(x, normalize, scale=None):
+    if normalize:  # static argument
+        x = x / jnp.sqrt(jnp.sum(x * x))
+    if scale is not None:  # python-object identity test
+        x = x * 2.0
+    if x.shape[0] > 1:  # shape metadata is static under trace
+        x = x[:1]
+    assert x.ndim == 1
+    n = len(x)
+    if n > 4:
+        x = x * 0.5
+    return x

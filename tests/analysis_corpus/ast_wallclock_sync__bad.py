@@ -1,0 +1,13 @@
+"""Corpus BAD: wall-clock pair brackets async JAX dispatch with no sync —
+the elapsed time measures dispatch, not execution.
+
+Linted only — never imported or executed (names need not resolve).
+"""
+import time
+
+
+def bench_dispatch_only(q, q_sig, db, db_sig, eps):
+    t0 = time.perf_counter()
+    counts = sweep_counts(q, q_sig, db, db_sig, len(db), eps, -1, 10)
+    elapsed = time.perf_counter() - t0
+    return counts, elapsed

@@ -1,0 +1,24 @@
+"""Corpus OK twin: the same bracket, made honest two ways — an explicit
+block_until_ready, and an obs span with force=.
+
+Linted only — never imported or executed (names need not resolve).
+"""
+import time
+
+import jax
+
+
+def bench_synced(q, q_sig, db, db_sig, eps):
+    t0 = time.perf_counter()
+    counts = sweep_counts(q, q_sig, db, db_sig, len(db), eps, -1, 10)
+    jax.block_until_ready(counts)
+    elapsed = time.perf_counter() - t0
+    return counts, elapsed
+
+
+def bench_spanned(q, q_sig, db, db_sig, eps):
+    t0 = time.perf_counter()
+    with span("sweep", sync=True):
+        counts = sweep_counts(q, q_sig, db, db_sig, len(db), eps, -1, 10)
+    elapsed = time.perf_counter() - t0
+    return counts, elapsed

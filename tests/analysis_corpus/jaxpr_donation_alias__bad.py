@@ -1,0 +1,26 @@
+"""Corpus BAD: the donated argument matches no output shape/dtype, so
+XLA silently drops the aliasing — no tf.aliasing_output in the module.
+
+Imported and executed by the corpus runner via build().
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+
+def _consume(buf, x):
+    # output is a scalar: nothing for the (128,) f32 donation to alias
+    return (x * 2.0).sum()
+
+
+def build():
+    f = jax.jit(_consume, donate_argnums=(0,))
+    args = (
+        jax.ShapeDtypeStruct((128,), jnp.float32),
+        jax.ShapeDtypeStruct((128,), jnp.float32),
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        lowered = f.lower(*args)
+    return {"lowered_text": lowered.as_text(), "n_donated": 1}

@@ -1,0 +1,21 @@
+"""Corpus OK twin: the donated argument aliases a same-shape/dtype
+output — lowering carries one tf.aliasing_output per donated slot.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def _accumulate(buf, x):
+    return buf + x  # same (128,) f32 shape: donation survives
+
+
+def build():
+    f = jax.jit(_accumulate, donate_argnums=(0,))
+    args = (
+        jax.ShapeDtypeStruct((128,), jnp.float32),
+        jax.ShapeDtypeStruct((128,), jnp.float32),
+    )
+    lowered = f.lower(*args)
+    return {"lowered_text": lowered.as_text(), "n_donated": 1}

@@ -1,0 +1,21 @@
+"""Corpus BAD: a buffer is read after being passed in a donated slot of
+a module-level donating launch — use-after-donate.
+
+Linted only — never imported or executed.
+"""
+import jax
+
+
+def _launch_impl(out, x):
+    return out + x
+
+
+launch = jax.jit(_launch_impl, donate_argnums=(0,))
+
+
+def driver(buf, xs):
+    total = 0.0
+    for x in xs:
+        res = launch(buf, x)  # donates buf...
+        total = total + buf.sum()  # ...then reads the deleted buffer
+    return total, res

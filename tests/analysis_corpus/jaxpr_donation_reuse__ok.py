@@ -1,0 +1,19 @@
+"""Corpus OK twin: the donating call's result rebinds the donated name —
+the dead reference is replaced before any read.
+
+Linted only — never imported or executed.
+"""
+import jax
+
+
+def _launch_impl(out, x):
+    return out + x
+
+
+launch = jax.jit(_launch_impl, donate_argnums=(0,))
+
+
+def driver(buf, xs):
+    for x in xs:
+        buf = launch(buf, x)  # rebind: donated ref never read again
+    return buf.sum()

@@ -1,0 +1,18 @@
+"""Corpus BAD: a host callback inside a scan body — one host round-trip
+per iteration serializes the device pipeline.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build():
+    def step(carry, x):
+        jax.debug.callback(lambda v: None, carry)  # host hop per chunk
+        return carry + x, carry
+
+    def run(xs):
+        return jax.lax.scan(step, jnp.float32(0.0), xs)
+
+    return {"jaxpr": jax.make_jaxpr(run)(jnp.zeros((8,), jnp.float32))}

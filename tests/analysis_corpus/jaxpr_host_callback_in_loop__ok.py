@@ -1,0 +1,19 @@
+"""Corpus OK twin: the same callback, hoisted — it fires once per
+launch, after the scan accumulates on device.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build():
+    def step(carry, x):
+        return carry + x, carry
+
+    def run(xs):
+        total, hist = jax.lax.scan(step, jnp.float32(0.0), xs)
+        jax.debug.callback(lambda v: None, total)  # once, outside the loop
+        return total, hist
+
+    return {"jaxpr": jax.make_jaxpr(run)(jnp.zeros((8,), jnp.float32))}

@@ -1,0 +1,16 @@
+"""Corpus BAD: the compile signature embeds the raw input size — one
+recompile per distinct n, unbounded by any lattice.
+
+Imported (pure python) by the corpus runner: signatures(n) / bound(n_max).
+"""
+import math
+
+N_MAX = 512
+
+
+def signatures(n):
+    return ("sweep", n)  # raw n: 512 distinct signatures over [1, 512]
+
+
+def bound(n_max):
+    return int(math.log2(n_max)) + 2

@@ -1,0 +1,17 @@
+"""Corpus OK twin: sizes bucket to the next power of two (floor 64) —
+the signature lattice is logarithmic in n_max.
+
+Imported (pure python) by the corpus runner: signatures(n) / bound(n_max).
+"""
+import math
+
+N_MAX = 512
+
+
+def signatures(n):
+    return ("sweep", max(64, 1 << (n - 1).bit_length()))
+
+
+def bound(n_max):
+    # buckets: 64, 128, ..., next_pow2(n_max)
+    return int(math.log2(max(n_max, 64) // 64)) + 2

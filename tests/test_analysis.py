@@ -1,0 +1,182 @@
+"""repro.analysis (laf-lint): corpus detection, live-tree cleanliness,
+baseline round-trip, and the CLI/parser seams.
+
+The expensive jaxpr/HLO passes over the full standard-target set run in
+the CI gate (``python -m repro.analysis``); here we keep tier-1 fast by
+exercising the pure-AST checks over the live tree, the full golden
+corpus, and one real lowered target.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    CHECKS,
+    Finding,
+    load_all_checks,
+    load_baseline,
+    run_checks,
+    save_baseline,
+    split_suppressed,
+)
+from repro.analysis.corpus import run_corpus
+from repro.launch.hlo_analysis import _TRIP_RE, collectives_by_computation
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+CORPUS = REPO_ROOT / "tests" / "analysis_corpus"
+
+# the pure-AST checks: linting only, no tracing/compiling — safe to run
+# over the whole live tree inside tier-1
+_AST_ONLY = {
+    "ast-traced-branch",
+    "ast-wallclock-sync",
+    "ast-raw-pallas-call",
+    "ast-kernel-tile-contract",
+    "jaxpr-donation-reuse",
+}
+
+
+def test_registry_loads_twelve_checks():
+    load_all_checks()
+    assert len(CHECKS) == 12
+    codes = sorted(s.code for s in CHECKS.values())
+    assert codes == [
+        "LAF101", "LAF102", "LAF103", "LAF104", "LAF105",
+        "LAF201", "LAF202", "LAF203",
+        "LAF301", "LAF302", "LAF303", "LAF304",
+    ]
+
+
+def test_list_checks_is_jax_free():
+    # the CLI inventory path must not initialize jax (editor/pre-commit
+    # latency); prove it in a fresh interpreter
+    code = (
+        "import sys\n"
+        "from repro.analysis import load_all_checks, CHECKS\n"
+        "load_all_checks()\n"
+        "assert len(CHECKS) == 12\n"
+        "assert 'jax' not in sys.modules, 'listing checks imported jax'\n"
+        "print('JAXFREE-OK')\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=120,
+        cwd=REPO_ROOT, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "JAXFREE-OK" in proc.stdout
+
+
+def test_corpus_every_check_detects():
+    res = run_corpus(CORPUS)
+    assert res.ok, "corpus failures:\n" + "\n".join(
+        f"  {entry}: {why}" for entry, why in res.failed
+    )
+    # one bad + one ok twin per registered check
+    assert len(res.passed) == 2 * len(CHECKS)
+
+
+def test_live_tree_ast_checks_clean():
+    from repro.analysis.targets import Context
+
+    ctx = Context.for_repo(REPO_ROOT, dynamic=False)
+    findings = run_checks(ctx, only=_AST_ONLY)
+    rules = load_baseline(REPO_ROOT / "src" / "repro" / "analysis" / "baseline.toml")
+    open_findings, _ = split_suppressed(findings, rules)
+    assert not open_findings, "\n".join(f.location() + ": " + f.message for f in open_findings)
+
+
+def test_baseline_roundtrip(tmp_path):
+    findings = [
+        Finding("ast-traced-branch", "src/repro/foo.py", 10, "branch on tracer"),
+        Finding("hlo-bitmap-collective", "<target:sweep>", 3, "u32 on the wire"),
+    ]
+    path = tmp_path / "baseline.toml"
+    save_baseline(findings, path)
+    rules = load_baseline(path)
+    open_findings, suppressed = split_suppressed(findings, rules)
+    assert not open_findings
+    assert len(suppressed) == len(findings)
+    # an unrelated finding stays open
+    other = Finding("ast-wallclock-sync", "src/repro/bar.py", 1, "unsynced")
+    open2, sup2 = split_suppressed([other], rules)
+    assert open2 == [other] and not sup2
+    # missing baseline file means no suppressions, not an error
+    assert load_baseline(tmp_path / "absent.toml") == []
+
+
+def test_trip_count_regex_variants():
+    escaped = 'backend_config={"a":"{\\"known_trip_count\\":{\\"n\\":\\"7\\"}}"}'
+    unescaped = 'backend_config={"known_trip_count":{"n":"12"}}'
+    plain = "known_trip_count={n=3}"
+    for text, expect in ((escaped, "7"), (unescaped, "12"), (plain, "3")):
+        m = _TRIP_RE.search(text)
+        assert m and m.group(1) == expect, text
+
+
+def test_collectives_by_computation_marks_loop_bodies():
+    hlo = (CORPUS / "hlo_bitmap_collective__bad.txt").read_text()
+    comps = collectives_by_computation(hlo)
+    body = comps["body"]
+    assert body.is_loop_body and body.trip_count == 7
+    assert [(c.op, c.element_type) for c in body.collectives] == [
+        ("all-reduce", "u32")
+    ]
+    assert comps["main"].is_entry and not comps["main"].is_loop_body
+
+
+def test_hlo_check_exempts_out_of_loop_gather():
+    # the ok fixture carries a u32 all-gather in ENTRY (the sanctioned
+    # end-of-launch out_specs gather) — it must NOT trip LAF201
+    from repro.analysis.hlo_checks import check_hlo_text
+
+    hlo = (CORPUS / "hlo_bitmap_collective__ok.txt").read_text()
+    comps = collectives_by_computation(hlo)
+    assert any(
+        c.element_type == "u32"
+        for comp in comps.values() if not comp.is_loop_body
+        for c in comp.collectives
+    ), "fixture lost its out-of-loop u32 gather"
+    findings = check_hlo_text(hlo, "<fixture>")
+    assert not [f for f in findings if f.check == "hlo-bitmap-collective"]
+
+
+def test_dryrun_hook_surfaces_findings():
+    from repro.launch.dryrun import _analysis_findings
+
+    bad = (CORPUS / "hlo_loop_collective_allowlist__bad.txt").read_text()
+    recs = _analysis_findings(bad, "arch__shape")
+    assert recs and all(isinstance(r, dict) and "check" in r for r in recs)
+    assert any(r["check"] == "hlo-loop-collective-allowlist" for r in recs)
+    ok = (CORPUS / "hlo_loop_collective_allowlist__ok.txt").read_text()
+    assert _analysis_findings(ok, "arch__shape") == []
+
+
+def test_flake8_plugin_yields_laf_codes():
+    import ast as ast_mod
+
+    from repro.analysis.ast_lint import LafLintPlugin
+
+    bad = CORPUS / "ast_traced_branch__bad.py"
+    tree = ast_mod.parse(bad.read_text())
+    hits = list(LafLintPlugin(tree, str(bad)).run())
+    assert hits and all(msg.startswith("LAF3") for _, _, msg, _ in hits)
+    assert any(msg.startswith("LAF301") for _, _, msg, _ in hits)
+
+
+@pytest.mark.slow
+def test_serve_assign_target_donation_survives():
+    # one real lowered target end-to-end (the smallest): donation
+    # aliasing must survive lowering and its HLO must pass the
+    # loop-collective contract
+    from repro.analysis.hlo_checks import check_hlo_text
+    from repro.analysis.jaxpr_checks import check_donation_text
+    from repro.analysis.targets import Targets
+
+    t = Targets().get("serve_assign")
+    assert t.n_donated == 2
+    assert check_donation_text(t.lowered_text, t.n_donated, t.label) == []
+    assert check_hlo_text(t.hlo, t.label, byte_budget=t.byte_budget) == []
