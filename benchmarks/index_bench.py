@@ -37,6 +37,22 @@ vs the one-launch engine on a whole-database sweep, plus — under
 ``--mesh N`` — the serialized plane vs the double-buffered
 (software-pipelined) plane, with LAF-DBSCAN end-to-end ARI vs the
 exact backend through the engine-backed index in the same payload.
+
+``--cluster`` benchmarks cluster *formation* (BENCH_PR8.json): the
+same engine-backed index runs LAF-DBSCAN twice, once with
+``cluster_device=False`` (the PR 5 path — device sweep, then host
+unpack + union-find per block) and once with ``cluster_device=True``
+(the one-launch program: packed label propagation under a single
+``lax.while_loop``, exactly one device→host transfer for the whole
+clustering).  The row carries per-phase span costs, rounds-to-fixpoint
+and the ``laf.cluster.device_get`` counter delta — the one-launch run
+asserts that delta is exactly 1 — plus exact label parity between the
+two paths.
+
+  PYTHONPATH=src python -m benchmarks.index_bench \
+      --n 2000 --d 64 --cluster --json BENCH_PR8.json
+  PYTHONPATH=src python -m benchmarks.index_bench \
+      --n 2000 --d 64 --cluster --mesh 4 --json BENCH_PR8.json
 """
 
 from __future__ import annotations
@@ -270,6 +286,151 @@ def bench_sweep_point(
     return row
 
 
+def bench_cluster_point(
+    n: int,
+    d: int,
+    eps: float,
+    tau: int,
+    *,
+    n_bits: int = 512,
+    margin: float = 3.0,
+    mesh_devices: int = 0,
+    seed: int = 0,
+    chunk: int = 256,
+    q_tile: int = 128,
+    db_tile: int = 256,
+    chunks_per_launch: int = 8,
+) -> dict:
+    """Host union-find vs one-launch device clustering on one dataset.
+
+    Both variants run through the *same* fitted engine-backed index
+    with the *same* oracle predicted counts at ``alpha=1.0`` (so no
+    point is rescued and the device path's single fetch is the only
+    device→host transfer of the whole clustering) — the delta isolates
+    cluster formation, not the index or the estimator.
+    """
+    from repro import obs
+    from repro.core.laf_dbscan import laf_dbscan
+    from repro.core.metrics import adjusted_rand_index
+    from repro.index import ExactBackend, RandomProjectionBackend
+
+    from .common import timed
+
+    data, _ = _dataset(n, d, seed)
+    mesh = None
+    if mesh_devices > 1:
+        import jax
+
+        mesh = jax.make_mesh((mesh_devices,), ("data",))
+    bk = RandomProjectionBackend(
+        n_bits=n_bits, margin=margin, seed=seed, device=True, mesh=mesh,
+        sweep=True, chunks_per_launch=chunks_per_launch,
+        chunk=chunk, q_tile=q_tile, db_tile=db_tile,
+    ).fit(data)
+    # oracle predicted counts + alpha=1.0: pred >= true for every row,
+    # so the skip rule never under-predicts and rescue stays empty
+    pred = np.asarray(ExactBackend().fit(data).query_counts(np.arange(n), eps))
+
+    obs.enable(trace=True, metrics_on=True)
+    variants = {"host_union_find": False, "one_launch": True}
+    phase_names = (
+        "laf.pass1", "laf.union_find", "laf.label_prop", "laf.postprocess",
+    )
+    row = {
+        "n": n, "d": d, "eps": eps, "tau": tau,
+        "n_bits": n_bits, "margin": margin, "mesh": mesh_devices,
+        "chunk": chunk, "q_tile": q_tile, "db_tile": db_tile,
+    }
+    results = {}
+    for name, on_device in variants.items():
+        kw = dict(seed=seed, backend=bk, cluster_device=on_device)
+        laf_dbscan(data, eps, tau, 1.0, pred, **kw)  # warm/compile
+        obs.clear_trace()
+        c_get = obs.metrics.counter("laf.cluster.device_get").value
+        c_rounds = obs.metrics.counter("laf.cluster.rounds").value
+        c_launch = obs.metrics.counter("labelprop.launches").value
+        t_e2e, res = timed(
+            laf_dbscan, data, eps, tau, 1.0, pred, **kw,
+            _name=f"bench.cluster_{name}",
+        )
+        results[name] = res
+        phases = {
+            p: sum(s.dur for s in obs.spans(p)) for p in phase_names
+        }
+        row[name] = {
+            "e2e_s": t_e2e,
+            "phases_s": {p: t for p, t in phases.items() if t > 0.0},
+            "device_get": obs.metrics.counter("laf.cluster.device_get").value
+            - c_get,
+            "rounds": obs.metrics.counter("laf.cluster.rounds").value
+            - c_rounds,
+            "labelprop_launches": obs.metrics.counter(
+                "labelprop.launches"
+            ).value - c_launch,
+            "n_rescued": res.extras["n_rescued"],
+        }
+        print(
+            f"  cluster[{name}]: {t_e2e:.2f}s rounds={row[name]['rounds']} "
+            f"device_get={row[name]['device_get']}", flush=True,
+        )
+    dev = row["one_launch"]
+    assert dev["device_get"] == 1, (
+        f"one-launch clustering did {dev['device_get']} device fetches, "
+        "expected exactly 1"
+    )
+    assert dev["n_rescued"] == 0, (
+        "oracle counts at alpha=1.0 must be rescue-free, got "
+        f"{dev['n_rescued']}"
+    )
+    lab_host = results["host_union_find"].labels
+    lab_dev = results["one_launch"].labels
+    row["labels_exact_match"] = bool(np.array_equal(lab_host, lab_dev))
+    row["ari_one_launch_vs_host"] = adjusted_rand_index(lab_host, lab_dev)
+    row["cluster_speedup"] = (
+        row["host_union_find"]["e2e_s"] / dev["e2e_s"]
+        if dev["e2e_s"] else float("inf")
+    )
+    return row
+
+
+def run_cluster(
+    *,
+    ns=(2000,),
+    ds=(64,),
+    epss=(0.55,),
+    tau: int = 5,
+    n_bits: int = 512,
+    margin: float = 3.0,
+    mesh_devices: int = 0,
+    seed: int = 0,
+    chunk: int = 256,
+    q_tile: int = 128,
+    db_tile: int = 256,
+):
+    from .common import save_json
+
+    rows = []
+    for n in ns:
+        for d in ds:
+            for eps in epss:
+                row = bench_cluster_point(
+                    n, d, eps, tau, n_bits=n_bits, margin=margin,
+                    mesh_devices=mesh_devices, seed=seed,
+                    chunk=chunk, q_tile=q_tile, db_tile=db_tile,
+                )
+                rows.append(row)
+                print(
+                    f"  n={n} d={d} eps={eps}: one-launch "
+                    f"x{row['cluster_speedup']:.2f} "
+                    f"rounds={row['one_launch']['rounds']} "
+                    f"exact_match={row['labels_exact_match']} "
+                    f"ARI={row['ari_one_launch_vs_host']:.4f}",
+                    flush=True,
+                )
+    save_json("index_bench_cluster", rows)
+    return rows
+
+
 def run_sweep(
     *,
     ns=(40000,),
@@ -412,6 +573,14 @@ def main(argv=None):
         "LAF e2e ARI vs exact in the payload (BENCH_PR5.json)",
     )
     ap.add_argument(
+        "--cluster", action="store_true",
+        help="benchmark cluster formation: host unpack+union-find "
+        "(cluster_device=False, the PR 5 path) vs the one-launch packed "
+        "label-propagation program (cluster_device=True), with phase "
+        "costs, rounds-to-fixpoint, the device_get==1 assertion and "
+        "exact label parity (BENCH_PR8.json)",
+    )
+    ap.add_argument(
         "--no-ari", action="store_true",
         help="--sweep only: skip the exact-backend LAF e2e ARI pass "
         "(the O(n^2) part of the sweep benchmark)",
@@ -440,6 +609,24 @@ def main(argv=None):
     ns, ds, epss = tuple(args.n), tuple(args.d), tuple(args.eps)
     if args.grid:
         ns, ds, epss = (5000, 20000), (256, 768), (0.5, 0.55, 0.6)
+    if args.cluster:
+        rows = run_cluster(
+            ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,
+            margin=args.margin, mesh_devices=args.mesh, seed=args.seed,
+            chunk=args.chunk, q_tile=args.q_tile, db_tile=args.db_tile,
+        )
+        if args.json is not None:
+            payload = {
+                "rows": rows,
+                "best_cluster_speedup": max(r["cluster_speedup"] for r in rows),
+                "worst_ari": min(r["ari_one_launch_vs_host"] for r in rows),
+                "all_labels_exact": all(r["labels_exact_match"] for r in rows),
+                "max_device_get": max(r["one_launch"]["device_get"] for r in rows),
+                "max_rounds": max(r["one_launch"]["rounds"] for r in rows),
+            }
+            args.json.write_text(json.dumps(payload, indent=2, default=float))
+            print(f"wrote {args.json}")
+        return
     if args.sweep:
         rows = run_sweep(
             ns=ns, ds=ds, epss=epss, tau=args.tau, n_bits=args.n_bits,

@@ -25,6 +25,15 @@ entry points (the standard targets in :mod:`.targets`).
   ``out_names``.  The plane runs ``check_rep=False`` (the pallas calls
   defeat JAX's own rep checker), so this is the replication safety net:
   a dropped ``psum`` otherwise returns shard-local counts as if global.
+* ``jaxpr-packed-while-carry`` (LAF106) — no unsigned-dtype (packed
+  word) array in a ``lax.while_loop`` carry of any standard target.
+  The one-launch cluster program iterates label-propagation rounds
+  under ``while`` with the packed slab closed over as a loop-invariant
+  operand; a slab that ends up in the carry is copied (or worse,
+  re-masked) every round and on a mesh invites per-round packed-word
+  collectives (the LAF202 violation).  ``fori_loop`` lowers to
+  ``scan``, so the sweep engine's legitimate packed accumulator is not
+  flagged.
 * ``jaxpr-recompile-lattice`` (LAF105) — the compile-signature lattices
   stay bounded: ``plan_sweep``'s launch shapes over any nq, the serving
   ``bucket_shape`` image over any traffic, and (dynamic, probed with
@@ -54,6 +63,7 @@ __all__ = [
     "check_donation_text",
     "check_file_donation_reuse",
     "check_jaxpr_callbacks",
+    "check_jaxpr_packed_while_carry",
     "check_jaxpr_shardmaps",
     "taint_shard_map_outputs",
 ]
@@ -344,6 +354,48 @@ def _check_host_callback(ctx) -> List[Finding]:
     findings = []
     for t in ctx.targets.all():
         findings.extend(check_jaxpr_callbacks(t.jaxpr, t.label))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# LAF106: packed words stay loop-invariant in while carries
+# ---------------------------------------------------------------------------
+
+
+def check_jaxpr_packed_while_carry(jaxpr, label: str) -> List[Finding]:
+    findings = []
+    for eqn, _ in _walk_eqns(jaxpr):
+        if eqn.primitive.name != "while":
+            continue
+        cn = eqn.params.get("cond_nconsts", 0)
+        bn = eqn.params.get("body_nconsts", 0)
+        for k, v in enumerate(eqn.invars[cn + bn :]):
+            dtype = getattr(getattr(v, "aval", None), "dtype", None)
+            if dtype is not None and dtype.kind == "u":
+                findings.append(
+                    Finding(
+                        "jaxpr-packed-while-carry", label, 0,
+                        f"while-loop carry slot {k} is {dtype.name} — a "
+                        f"packed-word buffer riding the round loop is "
+                        f"rebuilt/copied every iteration instead of "
+                        f"staying a loop-invariant operand",
+                        hint="close over the packed slab (while body "
+                        "consts) and carry only the s32 label vectors; "
+                        "fori_loop accumulators belong in scan",
+                    )
+                )
+    return findings
+
+
+@register(
+    "jaxpr-packed-while-carry", family="jaxpr", code="LAF106",
+    description="no packed (unsigned) words in a lax.while_loop carry — "
+    "the slab is a loop-invariant operand of the round loop",
+)
+def _check_packed_while_carry(ctx) -> List[Finding]:
+    findings = []
+    for t in ctx.targets.all():
+        findings.extend(check_jaxpr_packed_while_carry(t.jaxpr, t.label))
     return findings
 
 

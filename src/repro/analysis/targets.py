@@ -16,6 +16,11 @@ scan).  The four targets:
 * ``laf_cluster`` — ``build_laf_cluster`` at the reduced config with
   ``backend="random_projection"``, ``index_device=True`` (the fused
   tile through the plane — the paper's workload);
+* ``one_launch_cluster`` — ``build_one_launch_cluster`` at the same
+  reduced config: the device-resident cluster-formation program (tau
+  core test + packed label-prop ``while`` rounds + border rule) with
+  ``rows`` donated into the counts output — the donation, while-carry,
+  and collective checks all have teeth here;
 * ``serve_assign`` — the serving verify launch at the smallest
   ``bucket_shape`` bucket (256 candidates, 128-query chunk).
 
@@ -50,6 +55,7 @@ BYTE_BUDGETS: Dict[str, int] = {
     "sweep_engine_bitmap": 130_000_000,   # measured 21.6 MB
     "sharded_plane": 75_000_000,          # measured 12.3 MB (4-dev mesh)
     "laf_cluster": 410_000_000,           # measured 68.1 MB (4-dev mesh)
+    "one_launch_cluster": 22_000_000,     # measured 3.7 MB (4-dev mesh)
     "serve_assign": 8_500_000,            # measured 1.35 MB
 }
 
@@ -104,6 +110,7 @@ class Targets:
         "sweep_engine_bitmap",
         "sharded_plane",
         "laf_cluster",
+        "one_launch_cluster",
         "serve_assign",
     )
 
@@ -227,6 +234,39 @@ class Targets:
             lowered.compile().as_text(),
             sharded=len(mesh.devices.ravel()) > 1,
             byte_budget=BYTE_BUDGETS.get("laf_cluster"),
+        )
+
+    def _build_one_launch_cluster(self) -> Target:
+        import jax
+
+        from ..configs.laf_dbscan import make_reduced_config
+        from ..configs.registry import ShapeSpec, get_arch
+        from ..launch.laf_cluster import build_one_launch_cluster
+
+        mesh = _standard_mesh()
+        base = dataclasses.replace(
+            make_reduced_config(), backend="random_projection",
+            index_device=True,
+        )
+        arch = dataclasses.replace(get_arch("laf_dbscan"), make_config=lambda: base)
+        shape = ShapeSpec(
+            "analysis_reduced", "cluster", {"n_points": 2048, "dim": 64}
+        )
+        cell = build_one_launch_cluster(arch, shape, mesh)
+        jaxpr = jax.make_jaxpr(cell.step_fn)(*cell.args)
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.meta["donate_argnums"],
+        )
+        lowered = jitted.lower(*cell.args)
+        return Target(
+            "one_launch_cluster", jaxpr, lowered.as_text(),
+            lowered.compile().as_text(),
+            n_donated=len(cell.meta["donate_argnums"]),
+            sharded=len(mesh.devices.ravel()) > 1,
+            byte_budget=BYTE_BUDGETS.get("one_launch_cluster"),
         )
 
     # -- serving verify launch ----------------------------------------

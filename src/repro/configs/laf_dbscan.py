@@ -74,6 +74,15 @@ class LAFClusterConfig:
     index_device: object = "auto"
     index_axes: object = "auto"
     index_pipeline: int = 2
+    # cluster_device routes cluster *formation* (tau core test +
+    # core-graph components + border rule): "auto" follows the backend
+    # — when it packs adjacency on device (packs_natively) the sweep's
+    # bitmap slab feeds the packed label-propagation while_loop program
+    # and the whole clustering syncs to the host exactly once (final
+    # labels); True forces the device program even for host backends
+    # (packed blocks uploaded once — the parity mode); False forces the
+    # host unpack -> union-find pass (the parity oracle).
+    cluster_device: object = "auto"
     # streaming subsystem (repro.stream): online ingest + serving knobs
     stream: StreamConfig = StreamConfig()
 

@@ -116,6 +116,7 @@ def laf_dbscan(
     seed: int = 0,
     backend="exact",
     device="auto",
+    cluster_device="auto",
 ) -> DBSCANResult:
     """Batch-parallel LAF-DBSCAN engine.
 
@@ -128,6 +129,16 @@ def laf_dbscan(
         the index then prunes the candidates inside each executed one.
       device: backend evaluator choice (fused Pallas tile vs host; see
         ``dbscan_parallel``); ignored by constructed instances.
+      cluster_device: where cluster formation (core test + core-graph
+        components + border rule) runs.  ``"auto"`` follows the
+        backend: when it packs adjacency natively on device
+        (``packs_natively``), the sweep's bitmap slab feeds the packed
+        label-propagation program directly and the entire clustering
+        syncs to the host exactly once (final labels); otherwise the
+        host unpack -> union-find pass runs (the parity oracle).
+        ``True`` forces the device program even for host backends (the
+        packed blocks are uploaded once — the exact-backend parity
+        mode); ``False`` forces the host pass.
     """
     from ..index import as_fitted
 
@@ -139,14 +150,82 @@ def laf_dbscan(
         return _laf_dbscan_body(
             data, eps, tau, alpha, predicted_counts, as_fitted,
             block_size=block_size, seed=seed, backend=backend, device=device,
+            cluster_device=cluster_device,
         )
     finally:
         cluster_span.__exit__(None, None, None)
 
 
+def _cluster_pass_device(bk, eps, tau, exec_idx, n, native, block_size):
+    """Device-resident pass 1 + pass 2: sweep slab -> packed label
+    propagation, one ``device_get`` of the results.
+
+    Returns ``(labels, core, exact_counts, partial_counts)`` with
+    identical values to the host pass (min-core-index component
+    representatives are what ``union_star``'s min-root merging produces,
+    so even the label *numbers* match after ``np.unique``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.label_prop import packed_cluster_labels
+
+    n_exec = len(exec_idx)
+    mesh = getattr(bk, "mesh", None) if native else None
+    with _span("laf.pass1", n=n, n_exec=int(n_exec), block_size=block_size,
+               device=True):
+        if native:
+            # async dispatch: the slab never leaves the device
+            with _span("laf.sweep", rows=int(n_exec), synced=False):
+                slab, plan = bk.query_bitmap_device(exec_idx, eps)
+            rows_op = np.full(plan.nq_padded, n, dtype=np.int64)
+            rows_op[:n_exec] = exec_idx
+        else:
+            # forced parity mode for host backends: pack per block on
+            # the host, upload the slab once
+            blocks = []
+            for start in range(0, n_exec, block_size):
+                rows = exec_idx[start : start + block_size]
+                with _span("laf.sweep", block=start // block_size, rows=len(rows)):
+                    blocks.append(pack_bitmap(bk.query_hits(rows, eps)))
+            slab = jnp.asarray(np.concatenate(blocks, axis=0))
+            rows_op = exec_idx
+    with _span("laf.label_prop", rows=int(len(rows_op)), n=n):
+        if mesh is not None:
+            from ..distributed.index_plane import sharded_cluster_labels
+
+            outs = sharded_cluster_labels(
+                slab, rows_op, tau, mesh=mesh, axes=bk._plan.axes, n=n,
+            )
+        else:
+            outs = packed_cluster_labels(slab, jnp.asarray(rows_op), tau, n=n)
+        # THE host sync: everything above dispatched asynchronously
+        rep, owner, col_sum, counts, rounds = jax.device_get(outs)
+        _metrics.counter("laf.cluster.device_get").inc()
+    _metrics.counter("laf.cluster.rounds").inc(int(rounds))
+
+    exact_counts = np.zeros(n, dtype=np.int64)
+    exact_counts[exec_idx] = np.asarray(counts[:n_exec], dtype=np.int64)
+    partial_counts = np.asarray(col_sum[:n], dtype=np.int64)
+    core = np.zeros(n, dtype=bool)
+    core[exec_idx] = exact_counts[exec_idx] >= tau
+    rep = np.asarray(rep[:n])
+    owner = np.asarray(owner[:n], dtype=np.int64)
+    labels = np.full(n, -1, dtype=np.int64)
+    ci = np.nonzero(core)[0]
+    if len(ci):
+        # rep = min core index per component == the union-find root the
+        # host pass produces (union_star merges by min root)
+        _, inv = np.unique(rep[ci], return_inverse=True)
+        labels[ci] = inv
+    borders = np.nonzero(~core & (owner < n))[0]
+    labels[borders] = labels[owner[borders]]
+    return labels, core, exact_counts, partial_counts
+
+
 def _laf_dbscan_body(
     data, eps, tau, alpha, predicted_counts, as_fitted,
-    *, block_size, seed, backend, device,
+    *, block_size, seed, backend, device, cluster_device="auto",
 ):
     n = data.shape[0]
     with _span("laf.fit_index", backend=str(backend)):
@@ -158,6 +237,21 @@ def _laf_dbscan_body(
     _metrics.counter("laf.runs").inc()
     _metrics.counter("laf.predicted_core").inc(int(n_exec))
     _metrics.counter("laf.skipped").inc(int(n - n_exec))
+
+    native = bool(getattr(bk, "packs_natively", False))
+    use_device_cluster = (
+        native if cluster_device == "auto" else bool(cluster_device)
+    )
+    if use_device_cluster and n_exec:
+        # ---- device-resident pass 1 + pass 2: one host sync ------------
+        labels, core, exact_counts, partial_counts = _cluster_pass_device(
+            bk, eps, tau, exec_idx, n, native, block_size
+        )
+        partial_counts[predicted_core] = 0  # 𝓔 keys: predicted-stop only
+        return _rescue_and_finish(
+            bk, eps, tau, seed, block_size, n, exec_idx, predicted_core,
+            labels, core, partial_counts,
+        )
 
     exact_counts = np.zeros(n, dtype=np.int64)
     partial_counts = np.zeros(n, dtype=np.int64)  # |𝓔(q)| for predicted-stop q
@@ -205,6 +299,19 @@ def _laf_dbscan_body(
         labels = compact_labels_from_parent(parent, core)
         borders = np.nonzero(~core & (owner >= 0))[0]
         labels[borders] = labels[owner[borders]]
+    return _rescue_and_finish(
+        bk, eps, tau, seed, block_size, n, exec_idx, predicted_core,
+        labels, core, partial_counts,
+    )
+
+
+def _rescue_and_finish(
+    bk, eps, tau, seed, block_size, n, exec_idx, predicted_core,
+    labels, core, partial_counts,
+):
+    """Post-processing rescue (Algorithm 3) + result assembly, shared by
+    the host and device cluster passes."""
+    n_exec = len(exec_idx)
     n_pre_clusters = int(labels.max()) + 1 if labels.max() >= 0 else 0
 
     # ---- post-processing: rescue false negatives (Algorithm 3) ---------

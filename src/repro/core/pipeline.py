@@ -37,7 +37,9 @@ class LAFPipeline:
     or a constructed ``RangeBackend`` instance; per-call ``backend=``
     kwargs override it.  ``device`` picks the backend evaluator (fused
     Pallas tile vs host numpy; ``"auto"`` = tile iff TPU/GPU present)
-    and is likewise overridable per call.
+    and is likewise overridable per call.  ``cluster_device`` routes
+    cluster formation (``laf_dbscan``'s packed one-launch program vs
+    the host union-find oracle; see ``LAFClusterConfig``).
     """
 
     def __init__(
@@ -50,6 +52,7 @@ class LAFPipeline:
         seed: int = 0,
         backend="exact",
         device="auto",
+        cluster_device="auto",
     ):
         self.eps_grid = eps_grid
         self.epochs = epochs
@@ -58,6 +61,7 @@ class LAFPipeline:
         self.seed = seed
         self.backend = backend
         self.device = device
+        self.cluster_device = cluster_device
         self.estimator: Optional[TrainedEstimator] = None
         self._stream = None  # StreamingLAF, created by the first partial_fit
 
@@ -145,6 +149,7 @@ class LAFPipeline:
     ) -> ClusterOutcome:
         kw.setdefault("backend", self.backend)
         kw.setdefault("device", self.device)
+        kw.setdefault("cluster_device", self.cluster_device)
         # forced spans: JAX dispatch is async, so reported phase times
         # must come from synced span durations, not bare wall clocks
         with _span("laf.run", n=len(vectors), eps=float(eps), tau=int(tau),

@@ -34,6 +34,7 @@ special-casing single-device lowerings.
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
 
@@ -64,6 +65,7 @@ __all__ = [
     "sharded_band_marginals",
     "sharded_sweep_launch",
     "sharded_sweep_marginals",
+    "sharded_cluster_labels",
 ]
 
 I32 = jnp.int32
@@ -566,4 +568,96 @@ def _build_sweep_marginals_fn(
             out_specs=(P(None, None), P(axes)),
             check_rep=False,
         )
+    )
+
+
+# ---------------------------------------------------------------------------
+# device-resident clustering: the packed cluster fixpoint on the plane —
+# per round only s32 label vectors ride collectives (pmin of the row
+# minima, one counts psum up front); the packed words stay shard-local
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_cluster_plane_fn(
+    mesh: Mesh, axes, n: int, max_iters: int,
+    row_tile: int, word_tile: int, interpret: bool,
+):
+    """shard_map'd one-launch cluster pass, cached per (mesh, axes, n,
+    tiles).  The slab arrives with its words sharded ``P(None, axes)``
+    (the sweep plane's bitmap layout: shard k's words are the columns of
+    shard k's database rows); ``rows`` and ``tau`` ride replicated.
+    """
+    _metrics.counter("plane.builds").inc()
+    from ..kernels.label_prop import packed_cluster_fixpoint
+
+    ax = axes if isinstance(axes, tuple) else (axes,)
+    n_shards = axis_size(mesh, ax)
+
+    def body(bitmap, rows, tau):
+        cap_loc = bitmap.shape[1] * 32
+        # flattened shard index in P(axes) concatenation order (major
+        # axis first) -> this shard's global column offset
+        idx = jnp.int32(0)
+        for a in ax:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return packed_cluster_fixpoint(
+            bitmap, rows, tau[0], idx * cap_loc,
+            n=n, cap=cap_loc * n_shards, max_iters=max_iters,
+            row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+            axes=ax,
+        )
+
+    return jax.jit(
+        shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(None, axes), P(None), P(None)),
+            out_specs=(P(None), P(axes), P(axes), P(None), P(None)),
+            check_rep=False,
+        )
+    )
+
+
+def sharded_cluster_labels(
+    bitmap,
+    rows,
+    tau,
+    *,
+    mesh: Mesh,
+    axes,
+    n: int,
+    max_iters: int = 64,
+    row_tile: int = 256,
+    word_tile: int = 64,
+    interpret=None,
+):
+    """One-launch cluster pass over a column-sharded packed slab.
+
+    ``bitmap`` is the (R, W) device slab from
+    :func:`repro.index.sweep.sweep_bitmap_device` under ``mesh=`` —
+    words sharded ``P(None, axes)``, tail bits past ``n`` cleared —
+    and ``rows`` the (R,) database indices of the slab rows (sentinel
+    >= n on padding).  Same contract as
+    :func:`repro.kernels.label_prop.packed_cluster_labels`: returns
+    device arrays ``(labels, owner, col_sum, counts, rounds)`` with no
+    host sync; ``owner``/``col_sum`` come back column-sharded and
+    reassemble on fetch.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
+    w_loc = bitmap.shape[1] // axis_size(mesh, axes)
+    # tiles must divide the shard-local slab exactly — padding local
+    # words would shift every later shard's global column indices
+    row_tile = math.gcd(bitmap.shape[0], row_tile)
+    word_tile = math.gcd(w_loc, word_tile)
+    _metrics.counter("labelprop.launches").inc()
+    f = _build_cluster_plane_fn(
+        mesh, axes, n, max_iters, row_tile, word_tile, interpret
+    )
+    return f(
+        bitmap,
+        jnp.asarray(rows, I32),
+        jnp.asarray([tau], I32),
     )

@@ -80,7 +80,12 @@ from .signatures import (
     make_projection,
     sign_signatures,
 )
-from .sweep import DEFAULT_CHUNKS_PER_LAUNCH, sweep_bitmap, sweep_counts
+from .sweep import (
+    DEFAULT_CHUNKS_PER_LAUNCH,
+    sweep_bitmap,
+    sweep_bitmap_device,
+    sweep_counts,
+)
 
 __all__ = ["RandomProjectionBackend", "suggest_margin", "record_occupancy"]
 
@@ -443,6 +448,31 @@ class RandomProjectionBackend(RangeBackend):
             )
         db, dbs = self._sweep_db()
         return sweep_bitmap(q, q_sig, db, dbs, n, eps, t_lo, t_hi, **self._sweep_kw())
+
+    def query_bitmap_device(self, rows: np.ndarray, eps: float):
+        """Packed adjacency slab for ``rows`` as **device arrays, no
+        host sync** — the feed for the one-launch cluster pass.
+
+        Returns ``(slab, plan)`` from
+        :func:`repro.index.sweep.sweep_bitmap_device`: the slab is
+        ``(plan.nq_padded, W)`` uint32 over the capacity-padded column
+        space with all bits past ``n_points`` cleared; under a mesh its
+        words stay sharded on the index plane.  Only meaningful when
+        ``packs_natively`` — host callers keep ``query_hits_packed``.
+        """
+        t_lo, t_hi = self.band(eps)
+        q, q_sig = self._sweep_q(rows)
+        n = self._data.shape[0]
+        if self.mesh is not None:
+            return sweep_bitmap_device(
+                q, q_sig, self._db_plane, self._sig_plane, n, eps, t_lo, t_hi,
+                mesh=self.mesh, axes=self._plan.axes, depth=self.pipeline_depth,
+                **self._sweep_kw(),
+            )
+        db, dbs = self._sweep_db()
+        return sweep_bitmap_device(
+            q, q_sig, db, dbs, n, eps, t_lo, t_hi, **self._sweep_kw()
+        )
 
     def _sweep_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
         t_lo, t_hi = self.band(eps)

@@ -58,7 +58,13 @@ from ..kernels.hamming_filter.ops import (
 )
 from ..obs import metrics as _metrics, span as _span, watch_recompiles
 
-__all__ = ["SweepPlan", "plan_sweep", "sweep_counts", "sweep_bitmap"]
+__all__ = [
+    "SweepPlan",
+    "plan_sweep",
+    "sweep_counts",
+    "sweep_bitmap",
+    "sweep_bitmap_device",
+]
 
 DEFAULT_CHUNKS_PER_LAUNCH = 8
 
@@ -325,6 +331,97 @@ def _sweep(
         # the device_get above IS the sweep's single host sync, so the
         # span closing here measures execution, not dispatch
         sweep_span.__exit__(None, None, None)
+
+
+def sweep_bitmap_device(
+    q,
+    q_sig,
+    db,
+    db_sig,
+    n: int,
+    eps,
+    t_lo,
+    t_hi,
+    *,
+    chunk: int = 256,
+    chunks_per_launch: int = DEFAULT_CHUNKS_PER_LAUNCH,
+    q_tile: int = DEFAULT_Q_TILE,
+    db_tile: int = DEFAULT_DB_TILE,
+    interpret=None,
+    donate="auto",
+    mesh=None,
+    axes=None,
+    depth: int = 2,
+):
+    """Device-resident sweep with **no host sync**: the packed bitmap
+    slab stays on device for a downstream consumer (the one-launch
+    cluster pass).
+
+    Same launch layout and donation discipline as :func:`sweep_bitmap`,
+    but the result is the *capacity-width* device slab
+    ``(plan.nq_padded, W)`` with every bit for columns >= n cleared
+    (tail mask applied on device) — under ``mesh=`` its words stay
+    physically sharded across the plane.  Returns ``(slab, plan)``;
+    rows past ``plan.nq`` are zero-query padding.
+    """
+    nq = q.shape[0]
+    plan, eps_op, band_op, interpret = _prep(
+        nq, eps, t_lo, t_hi, chunk, q_tile, chunks_per_launch, interpret
+    )
+    with _span(
+        "sweep.sweep", kind="bitmap_device", nq=nq, n=n, chunk=plan.chunk,
+        launches=plan.n_launches, chunks_per_launch=plan.cpl,
+        sharded=mesh is not None, synced=False,
+    ):
+        _metrics.counter("sweep.sweeps").inc()
+        _metrics.counter("sweep.launches").inc(plan.n_launches)
+        q, q_sig = _pad_q(q, q_sig, plan.nq_padded)
+        if mesh is not None:
+            from ..distributed.index_plane import sharded_sweep_launch
+
+            parts = []
+            for L in range(plan.n_launches):
+                sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
+                with _span("sweep.launch", L=L, sharded=True, synced=False,
+                           pipelined=depth >= 2):
+                    part, _ = sharded_sweep_launch(
+                        "bitmap", q[sl], q_sig[sl], db, db_sig, eps_op, band_op,
+                        mesh=mesh, axes=axes, chunk=plan.chunk, q_tile=q_tile,
+                        db_tile=db_tile, interpret=interpret, depth=depth, n=n,
+                    )
+                parts.append(part)
+            bms = [p[1] for p in parts]
+            bm_out = jnp.concatenate(bms) if len(bms) > 1 else bms[0]
+        else:
+            db, db_sig = _pad_db(db, db_sig, db_tile)
+            donated = _resolve_donate(donate)
+            launch = _bitmap_launch_donated if donated else _bitmap_launch
+            outs = (
+                jnp.zeros((plan.nq_padded,), jnp.int32),
+                jnp.zeros((plan.nq_padded, db.shape[0] // 32), jnp.uint32),
+            )
+            _metrics.counter("sweep.slab_alloc").inc()
+            _metrics.counter(
+                "sweep.slab_donated" if donated else "sweep.slab_copied"
+            ).inc(max(plan.n_launches - 1, 0))
+            recompiles = watch_recompiles(
+                (_counts_launch, _counts_launch_donated,
+                 _bitmap_launch, _bitmap_launch_donated),
+                "sweep.recompiles",
+            )
+            for L in range(plan.n_launches):
+                sl = slice(L * plan.rows_per_launch, (L + 1) * plan.rows_per_launch)
+                with _span("sweep.launch", L=L, donated=donated, synced=False):
+                    outs = launch(
+                        *outs, jnp.int32(L * plan.rows_per_launch), q[sl], q_sig[sl],
+                        db, db_sig, eps_op, band_op,
+                        chunk=plan.chunk, q_tile=q_tile, db_tile=db_tile,
+                        interpret=interpret,
+                    )
+                recompiles.delta()
+            bm_out = outs[1]
+        bm_out = bm_out & _tail_word_mask(bm_out.shape[1], n)[None, :]
+        return bm_out, plan
 
 
 def sweep_counts(

@@ -1,1 +1,7 @@
-from .ops import label_prop_round, label_propagation_pallas  # noqa: F401
+from .ops import (  # noqa: F401
+    label_prop_round,
+    label_propagation_pallas,
+    packed_cluster_fixpoint,
+    packed_cluster_labels,
+    packed_connectivity,
+)

@@ -11,6 +11,19 @@ tile is 64 KiB, the unpacked bool tile 512 KiB, and the label slice 8
 KiB — VMEM-resident with room for double buffering.  The driver in
 ops.py iterates rounds with pointer jumping until fixpoint (O(log n)
 rounds for any topology).
+
+Two grid orientations over the same packed words:
+
+* row reduction (``label_prop_rect_pallas``) — per slab row, the min
+  label over set bits; grid (row_tiles, word_tiles), word tiles
+  accumulate.  This is the gather half of a propagation round, and it
+  works on *rectangular* slabs (R executed rows × W words of database
+  columns), which is the shape the sweep engine emits.
+* column reduction (``col_reduce_pallas``) — per database column, the
+  min row-value over set bits plus a weighted popcount down the rows;
+  grid (word_tiles, row_tiles), row tiles accumulate.  One launch
+  yields both the min-core-neighbor border owner and the transposed
+  partial-count column sums without ever unpacking the slab.
 """
 
 from __future__ import annotations
@@ -83,3 +96,114 @@ def label_prop_round_pallas(
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(bitmap, col_labels, labels)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("row_tile", "word_tile", "interpret")
+)
+def label_prop_rect_pallas(
+    row_labels: jax.Array,
+    col_labels: jax.Array,
+    bitmap: jax.Array,
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret: bool = False,
+):
+    """Rectangular row reduction: ``out[i] = min(row_labels[i],
+    min over set bits of bitmap[i] of col_labels)``.
+
+    ``bitmap`` is an (R, W) slab — R executed rows against W*32 database
+    columns — with R % row_tile == 0 and W % word_tile == 0;
+    ``col_labels`` is (W*32,) int32 (pad columns must hold INT32_MAX or
+    have zero bits).  The square round above is the R == W*32 special
+    case of this entry.
+    """
+    r, w = bitmap.shape
+    assert r % row_tile == 0 and w % word_tile == 0
+    assert row_labels.shape[0] == r and col_labels.shape[0] == w * 32
+    grid = (r // row_tile, w // word_tile)
+    bitmap_spec = pl.BlockSpec((row_tile, word_tile), lambda i, j: (i, j))
+    col_spec = pl.BlockSpec((word_tile * 32,), lambda i, j: (j,))
+    row_spec = pl.BlockSpec((row_tile,), lambda i, j: (i,))
+    out_spec = pl.BlockSpec((row_tile,), lambda i, j: (i,))
+    return pl.pallas_call(
+        _label_prop_kernel,
+        grid=grid,
+        in_specs=[bitmap_spec, col_spec, row_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((r,), jnp.int32),
+        interpret=interpret,
+    )(bitmap, col_labels, row_labels)
+
+
+def _col_reduce_kernel(bitmap_ref, row_vals_ref, row_weights_ref, min_ref, sum_ref):
+    """Grid (word_tiles, row_tiles); accumulates the per-column min of
+    ``row_vals`` and the per-column weighted popcount over row tiles."""
+    j = pl.program_id(1)
+    words = bitmap_ref[...]                         # (TR, TW) uint32
+    row_vals = row_vals_ref[...]                    # (TR,) int32
+    row_weights = row_weights_ref[...]              # (TR,) int32
+    tr, tw = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((words[:, :, None] >> shifts[None, None, :]) & 1).astype(jnp.bool_)
+    bits = bits.reshape(tr, tw * 32)
+    big = jnp.iinfo(jnp.int32).max
+    cmin = jnp.min(
+        jnp.where(bits, row_vals[:, None], jnp.int32(big)), axis=0
+    )  # (TW*32,)
+    csum = jnp.sum(
+        jnp.where(bits, row_weights[:, None], jnp.int32(0)), axis=0
+    ).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[...] = cmin
+        sum_ref[...] = csum
+
+    @pl.when(j != 0)
+    def _acc():
+        min_ref[...] = jnp.minimum(min_ref[...], cmin)
+        sum_ref[...] = sum_ref[...] + csum
+
+
+@functools.partial(
+    jax.jit, static_argnames=("row_tile", "word_tile", "interpret")
+)
+def col_reduce_pallas(
+    bitmap: jax.Array,
+    row_vals: jax.Array,
+    row_weights: jax.Array,
+    *,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret: bool = False,
+):
+    """Transposed reduction over a packed (R, W) slab, one launch:
+
+    * ``col_min[j] = min over rows i with bit (i, j) of row_vals[i]``
+      (INT32_MAX where no bit is set) — with ``row_vals =
+      where(core_row, row_index, MAX)`` this is exactly the
+      min-core-neighbor border-owner rule;
+    * ``col_sum[j] = sum over those rows of row_weights[i]`` — with unit
+      weights on valid rows this is the transposed partial-count bump
+      (``hit.sum(axis=0)``) without unpacking.
+    """
+    r, w = bitmap.shape
+    assert r % row_tile == 0 and w % word_tile == 0
+    assert row_vals.shape[0] == r and row_weights.shape[0] == r
+    grid = (w // word_tile, r // row_tile)
+    bitmap_spec = pl.BlockSpec((row_tile, word_tile), lambda i, j: (j, i))
+    vals_spec = pl.BlockSpec((row_tile,), lambda i, j: (j,))
+    out_spec = pl.BlockSpec((word_tile * 32,), lambda i, j: (i,))
+    return pl.pallas_call(
+        _col_reduce_kernel,
+        grid=grid,
+        in_specs=[bitmap_spec, vals_spec, vals_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((w * 32,), jnp.int32),
+            jax.ShapeDtypeStruct((w * 32,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bitmap, row_vals.astype(jnp.int32), row_weights.astype(jnp.int32))

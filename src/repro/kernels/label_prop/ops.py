@@ -1,4 +1,25 @@
-"""Driver: pad, iterate kernel rounds with pointer jumping to fixpoint."""
+"""Drivers over the packed label-prop kernels.
+
+* ``label_prop_round`` / ``label_propagation_pallas`` — the square
+  connected-components pair (pad, iterate rounds with pointer jumping
+  to fixpoint) used as the standalone CC engine.
+* ``packed_cluster_labels`` — the device-resident DBSCAN cluster pass:
+  one traced program that takes the sweep engine's rectangular packed
+  slab (R executed rows × W words of database columns) and computes,
+  without ever unpacking and without a host round-trip, the exact
+  neighbor counts (popcount), the tau core test, the min-label
+  connected components of the core-core graph (``lax.while_loop`` with
+  pointer jumping), the min-core-neighbor border owner per column, and
+  the transposed partial-count sums.  ``axes=`` switches the gather to
+  a shard-local slice + ``lax.pmin`` of the s32 row minima, so on a
+  mesh only label vectors ride collectives — the packed words stay
+  shard-local (the LAF202 invariant).
+* ``packed_connectivity`` — the streaming (bipartite) variant: the
+  block's rows are *not* a superset of the core set, so labels must
+  alternate rows -> columns -> rows each round; used by
+  ``StreamingClusterState.apply_core_rows_packed`` to merge components
+  per ingest batch with the adjacency kept packed end-to-end.
+"""
 
 from __future__ import annotations
 
@@ -7,9 +28,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import DEFAULT_ROW_TILE, DEFAULT_WORD_TILE, label_prop_round_pallas
+from ..hamming_filter.ops import _tail_word_mask, default_interpret
+from ...obs import metrics as _metrics
+from .kernel import (
+    DEFAULT_ROW_TILE,
+    DEFAULT_WORD_TILE,
+    col_reduce_pallas,
+    label_prop_rect_pallas,
+    label_prop_round_pallas,
+)
 
-__all__ = ["label_prop_round", "label_propagation_pallas"]
+__all__ = [
+    "label_prop_round",
+    "label_propagation_pallas",
+    "packed_cluster_labels",
+    "packed_connectivity",
+]
 
 BIG = jnp.iinfo(jnp.int32).max
 
@@ -78,3 +112,263 @@ def label_propagation_pallas(
 
     labels, _, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True), 0))
     return labels
+
+
+# ---------------------------------------------------------------------------
+# device-resident clustering over a rectangular sweep slab
+# ---------------------------------------------------------------------------
+
+
+def packed_cluster_fixpoint(
+    bitmap: jax.Array,
+    rows: jax.Array,
+    tau,
+    col_off,
+    *,
+    n: int,
+    cap: int,
+    max_iters: int = 64,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret: bool = False,
+    axes=None,
+):
+    """Traceable core of the one-launch cluster pass.
+
+    Args:
+      bitmap: (R, W_local) packed adjacency slab, tile-aligned, with
+        every bit for columns >= n already cleared (tail mask).  Under
+        ``axes=`` this is the shard-local word slice of a column-sharded
+        slab; otherwise W_local*32 == cap.
+      rows: (R,) int32 — database index of each slab row (the executed
+        query set), sentinel >= n on padding rows.  Every core point
+        must appear as a slab row (DBSCAN executes every predicted
+        core), which is what makes the gather/scatter round below a
+        full propagation round on the core-core graph.
+      tau: core threshold (traced scalar).
+      col_off: global column offset of this shard's words (0 off-mesh).
+      n / cap: live points / total column capacity (static).
+      axes: mesh axis name(s); per round only the (R,) s32 row minima
+        ride a ``lax.pmin`` — packed words never enter a collective.
+
+    Returns ``(labels (cap,), owner (cap,), col_sum (cap_local,),
+    counts (R,), rounds)`` — labels[j] = min core index of j's core
+    component (INT32_MAX on non-core columns), owner[j] = min executed
+    core row adjacent to column j (border rule), col_sum = transposed
+    partial-count sums for this shard's columns, counts = exact
+    neighbor counts per slab row.
+    """
+    r, w_loc = bitmap.shape
+    cap_loc = w_loc * 32
+    rows = rows.astype(jnp.int32)
+    valid_r = rows < n
+    counts = jnp.sum(jax.lax.population_count(bitmap), axis=1).astype(jnp.int32)
+    if axes is not None:
+        counts = jax.lax.psum(counts, axes)
+    counts = jnp.where(valid_r, counts, 0)
+    core_r = valid_r & (counts >= jnp.int32(tau))
+    safe_rows = jnp.minimum(rows, cap - 1)
+    core_c = (
+        jnp.zeros((cap,), jnp.int32).at[safe_rows].max(core_r.astype(jnp.int32)) > 0
+    )
+    init = jnp.where(core_c, jnp.arange(cap, dtype=jnp.int32), BIG)
+    big_rows = jnp.full((r,), BIG, jnp.int32)
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        lab, _, it = state
+        # gather: per core row, the min label over its set bits —
+        # shard-local slice of the replicated label vector, then an s32
+        # min-reduce across shards
+        lab_loc = jax.lax.dynamic_slice(lab, (col_off,), (cap_loc,))
+        m = label_prop_rect_pallas(
+            big_rows, lab_loc, bitmap,
+            row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+        )
+        if axes is not None:
+            m = jax.lax.pmin(m, axes)
+        new_r = jnp.where(core_r, jnp.minimum(lab[safe_rows], m), BIG)
+        # scatter-min back into each row's own column (core ⊆ rows, so
+        # this updates every core column); BIG rows are no-ops
+        new = lab.at[safe_rows].min(new_r)
+        # pointer jumping: label <- label of my label
+        jump = jnp.where(new < cap, new, 0)
+        new = jnp.where(new < cap, jnp.minimum(new, new[jump]), new)
+        return new, jnp.any(new != lab), it + 1
+
+    labels, _, rounds = jax.lax.while_loop(
+        cond, body, (init, jnp.bool_(True), jnp.int32(0))
+    )
+    # border owner (min executed-core-row index per column) + transposed
+    # partial-count sums, one launch, loop-invariant so outside the loop
+    owner_loc, col_sum = col_reduce_pallas(
+        bitmap,
+        jnp.where(core_r, rows, BIG),
+        valid_r.astype(jnp.int32),
+        row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+    )
+    return labels, owner_loc, col_sum, counts, rounds
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "max_iters", "row_tile", "word_tile", "interpret"),
+)
+def _packed_cluster_jit(
+    bitmap, rows, tau, *, n, max_iters, row_tile, word_tile, interpret
+):
+    r, w = bitmap.shape
+    bitmap = bitmap & _tail_word_mask(w, n)[None, :]
+    r_pad = (-r) % row_tile
+    w_pad = (-w) % word_tile
+    if r_pad or w_pad:
+        bitmap = jnp.pad(bitmap, ((0, r_pad), (0, w_pad)))
+        rows = jnp.pad(rows.astype(jnp.int32), (0, r_pad), constant_values=n)
+    cap = (w + w_pad) * 32
+    labels, owner, col_sum, counts, rounds = packed_cluster_fixpoint(
+        bitmap, rows, tau, jnp.int32(0),
+        n=n, cap=cap, max_iters=max_iters,
+        row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+    )
+    return labels, owner, col_sum, counts[:r], rounds
+
+
+def packed_cluster_labels(
+    bitmap: jax.Array,
+    rows: jax.Array,
+    tau,
+    *,
+    n: int,
+    max_iters: int = 64,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret=None,
+):
+    """One-launch single-device cluster pass over a packed sweep slab.
+
+    ``bitmap`` is the (R, W) slab of executed-query adjacency rows
+    (W*32 >= n; capacity slack past n is tolerated — the tail mask is
+    applied here), ``rows`` the (R,) database indices those rows
+    represent.  Returns device arrays
+    ``(labels, owner, col_sum, counts, rounds)`` — see
+    :func:`packed_cluster_fixpoint`; nothing syncs to the host.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    row_tile = min(row_tile, max(bitmap.shape[0], 1))
+    word_tile = min(word_tile, max(bitmap.shape[1], 1))
+    _metrics.counter("labelprop.launches").inc()
+    return _packed_cluster_jit(
+        bitmap, jnp.asarray(rows, jnp.int32), tau,
+        n=n, max_iters=max_iters,
+        row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming connectivity: bipartite rows <-> columns propagation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("max_iters", "row_tile", "word_tile", "interpret")
+)
+def _packed_connectivity_jit(
+    bitmap, rows, row_core, core_cols, *, max_iters, row_tile, word_tile, interpret
+):
+    r, w = bitmap.shape
+    n = core_cols.shape[0]
+    r_pad = (-r) % row_tile
+    w_pad = (-w) % word_tile
+    if r_pad or w_pad:
+        bitmap = jnp.pad(bitmap, ((0, r_pad), (0, w_pad)))
+        rows = jnp.pad(rows.astype(jnp.int32), (0, r_pad))
+        row_core = jnp.pad(row_core, (0, r_pad))
+    cap = (w + w_pad) * 32
+    core_c = jnp.pad(core_cols, (0, cap - n))
+    rp = r + r_pad
+    big_rows = jnp.full((rp,), BIG, jnp.int32)
+    init = jnp.where(core_c, jnp.arange(cap, dtype=jnp.int32), BIG)
+    zeros = jnp.zeros((rp,), jnp.int32)
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        lab, _, it = state
+        # rows gather from columns... (a streaming block's rows are NOT
+        # a superset of the core set, so rows only *relay*: a core row
+        # carries the min label of its core columns back down)
+        m = label_prop_rect_pallas(
+            big_rows, lab, bitmap,
+            row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+        )
+        row_lab = jnp.where(row_core, m, BIG)
+        # ...columns gather back from rows
+        cmin, _ = col_reduce_pallas(
+            bitmap, row_lab, zeros,
+            row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+        )
+        new = jnp.where(core_c, jnp.minimum(lab, cmin), BIG)
+        jump = jnp.where(new < cap, new, 0)
+        new = jnp.where(new < cap, jnp.minimum(new, new[jump]), new)
+        return new, jnp.any(new != lab), it + 1
+
+    lab, _, rounds = jax.lax.while_loop(
+        cond, body, (init, jnp.bool_(True), jnp.int32(0))
+    )
+    owner, _ = col_reduce_pallas(
+        bitmap,
+        jnp.where(row_core, rows.astype(jnp.int32), BIG),
+        zeros,
+        row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+    )
+    row_first = label_prop_rect_pallas(
+        big_rows, init, bitmap,
+        row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+    )
+    return lab[:n], owner[:n], row_first[:r], rounds
+
+
+def packed_connectivity(
+    bitmap: jax.Array,
+    rows: jax.Array,
+    row_core: jax.Array,
+    core_cols: jax.Array,
+    *,
+    max_iters: int = 64,
+    row_tile: int = DEFAULT_ROW_TILE,
+    word_tile: int = DEFAULT_WORD_TILE,
+    interpret=None,
+):
+    """Connectivity of one packed hit block, bipartite propagation.
+
+    ``bitmap`` (R, W) is a block of (alive-masked) adjacency rows whose
+    database indices are ``rows`` (R,); ``row_core`` flags which of
+    those rows are core; ``core_cols`` (n,) flags core columns.  Bits
+    past n in the last word must be zero (the pack contract).
+
+    Returns device arrays ``(comp, owner, row_first, rounds)``:
+    ``comp[j]`` = min core column index reachable from core column j
+    through this block's core rows (INT32_MAX on non-core columns) —
+    exactly the transitive closure of the per-row star unions the host
+    pass applies; ``owner[j]`` = min core row index adjacent to column
+    j; ``row_first[i]`` = min core column adjacent to row i.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    row_tile = min(row_tile, max(bitmap.shape[0], 1))
+    word_tile = min(word_tile, max(bitmap.shape[1], 1))
+    _metrics.counter("labelprop.launches").inc()
+    return _packed_connectivity_jit(
+        bitmap,
+        jnp.asarray(rows, jnp.int32),
+        jnp.asarray(row_core, bool),
+        jnp.asarray(core_cols, bool),
+        max_iters=max_iters,
+        row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+    )

@@ -1,15 +1,39 @@
-"""Pure-jnp oracle for one min-label-propagation round over a packed
-uint32 adjacency bitmap."""
+"""Pure-jnp oracles for the packed-bitmap label-propagation kernels:
+the square round, the rectangular row reduction, and the transposed
+column reduction (all unpack-based — the thing the kernels avoid)."""
 
 import jax.numpy as jnp
+
+
+def _unpack(bitmap):
+    """(R, W) uint32 -> (R, W*32) bool, LSB-first within each word."""
+    r, nw = bitmap.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = ((bitmap[:, :, None] >> shifts[None, None, :]) & 1).astype(bool)
+    return bits.reshape(r, nw * 32)
 
 
 def label_prop_round_ref(labels, bitmap, big):
     """new_labels[i] = min(labels[i], min_{j: bit ij set} labels[j])."""
     n = labels.shape[0]
-    nw = bitmap.shape[1]
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = ((bitmap[:, :, None] >> shifts[None, None, :]) & 1).astype(bool)
-    bits = bits.reshape(n, nw * 32)[:, :n]
+    bits = _unpack(bitmap)[:, :n]
     neigh = jnp.min(jnp.where(bits, labels[None, :], big), axis=1)
     return jnp.minimum(labels, neigh)
+
+
+def label_prop_rect_ref(row_labels, col_labels, bitmap, big):
+    """Rectangular gather: min(row_labels[i], min over bits of
+    col_labels) — oracle for ``label_prop_rect_pallas``."""
+    bits = _unpack(bitmap)
+    neigh = jnp.min(jnp.where(bits, col_labels[None, :], big), axis=1)
+    return jnp.minimum(row_labels, neigh)
+
+
+def col_reduce_ref(bitmap, row_vals, row_weights, big):
+    """Transposed reductions — oracle for ``col_reduce_pallas``:
+    per column the min of ``row_vals`` over set bits (``big`` where no
+    bit) and the weighted popcount down the rows."""
+    bits = _unpack(bitmap)
+    cmin = jnp.min(jnp.where(bits, row_vals[:, None], big), axis=0)
+    csum = jnp.sum(jnp.where(bits, row_weights[:, None], 0), axis=0)
+    return cmin.astype(jnp.int32), csum.astype(jnp.int32)

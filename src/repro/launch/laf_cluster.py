@@ -31,6 +31,19 @@ below ``t_lo``, exact-verify only the band).
 ``index_axes`` ("auto" = every mesh axis, matching the database's
 row sharding) names the mesh axes the database and signature table are
 co-sharded over.
+
+:func:`build_one_launch_cluster` is the second lowering: cluster
+*formation*.  Where ``build_laf_cluster`` lowers one frontier round
+(predict + sweep), the one-launch cell consumes the sweep's packed
+bitmap slab and runs the entire clustering — exact counts (popcount),
+the tau core test, min-label propagation over the core-core graph to
+fixpoint under ``lax.while_loop`` (with pointer jumping), and the
+min-core-neighbor border rule — as a single jitted ``shard_map``
+program.  The slab stays column-sharded over ``index_axes`` and the
+packed words never enter a collective: per round only the (R,) s32 row
+minima cross the network (``lax.pmin``), plus one counts psum up front
+(the LAF202 invariant).  ``rows`` is donated and aliases the exact
+counts output, so the launch adds no slab-sized live buffer.
 """
 
 from __future__ import annotations
@@ -47,7 +60,7 @@ from .cell import LoweredCell
 F32 = jnp.float32
 I32 = jnp.int32
 
-__all__ = ["build_laf_cluster"]
+__all__ = ["build_laf_cluster", "build_one_launch_cluster"]
 
 
 def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCell:
@@ -223,4 +236,83 @@ def build_laf_cluster(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> LoweredCe
         )
     return LoweredCell(
         f"{arch.name}:{shape.name}", cluster_step, args, in_sh, out_sh, meta,
+    )
+
+
+def build_one_launch_cluster(
+    arch: ArchSpec, shape: ShapeSpec, mesh: Mesh
+) -> LoweredCell:
+    """Lower the one-launch device-resident cluster pass (see module
+    docstring).  Inputs: the packed slab (R, cap/32) uint32 from the
+    bitmap sweep (column-words sharded over ``index_axes``, tail bits
+    past n cleared), the (R,) int32 row->database-index map (sentinel
+    >= n on padding rows), and tau as a (1,) int32 operand.  Outputs:
+    ``(labels, owner, col_sum, counts, rounds)`` exactly as
+    :func:`repro.kernels.label_prop.packed_cluster_fixpoint` documents,
+    with owner/col_sum left column-sharded where the slab lives.
+    """
+    import math
+
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from ..configs.laf_dbscan import LAFClusterConfig
+    from ..kernels.hamming_filter.ops import default_interpret
+    from ..kernels.label_prop import packed_cluster_fixpoint
+
+    base: LAFClusterConfig = arch.make_config()
+    n = shape.meta["n_points"]
+    frontier = base.frontier
+    all_axes = tuple(mesh.axis_names)
+    axes = all_axes if base.index_axes == "auto" else tuple(base.index_axes)
+    n_shards = axis_size(mesh, axes)
+    # the column capacity rounds n up so every shard holds whole words
+    cap = -(-n // (32 * n_shards)) * (32 * n_shards)
+    w = cap // 32
+    # tiles must divide the shard-local slab exactly (local padding
+    # would shift every later shard's global column indices)
+    row_tile = math.gcd(frontier, 256)
+    word_tile = math.gcd(w // n_shards, 64)
+    interpret = default_interpret()
+
+    def cluster_one_launch(bitmap, rows, tau):
+        cap_loc = bitmap.shape[1] * 32
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        return packed_cluster_fixpoint(
+            bitmap, rows, tau[0], idx * cap_loc,
+            n=n, cap=cap, row_tile=row_tile, word_tile=word_tile,
+            interpret=interpret, axes=axes,
+        )
+
+    step = shard_map(
+        cluster_one_launch,
+        mesh=mesh,
+        in_specs=(P(None, axes), P(None), P(None)),
+        out_specs=(P(None), P(axes), P(axes), P(None), P(None)),
+        check_rep=False,
+    )
+    args = (
+        jax.ShapeDtypeStruct((frontier, w), jnp.uint32),
+        jax.ShapeDtypeStruct((frontier,), I32),
+        jax.ShapeDtypeStruct((1,), I32),
+    )
+    in_sh = (named(mesh, None, axes), replicated(mesh), replicated(mesh))
+    out_sh = (
+        replicated(mesh),      # labels (cap,) — the while-loop carry
+        named(mesh, axes),     # owner, column-sharded with the slab
+        named(mesh, axes),     # col_sum, likewise
+        replicated(mesh),      # counts (R,) — aliases the donated rows
+        replicated(mesh),      # rounds
+    )
+    meta = {
+        "kind": "one_launch_cluster", "n_points": n, "cap": cap,
+        "frontier": frontier, "index_axes": axes, "n_shards": n_shards,
+        "row_tile": row_tile, "word_tile": word_tile,
+        # rows (R,) i32 -> counts (R,) i32: same shape/dtype/sharding
+        "donate_argnums": (1,),
+    }
+    return LoweredCell(
+        f"{arch.name}:{shape.name}:one_launch", step, args, in_sh, out_sh, meta,
     )

@@ -231,13 +231,23 @@ class StreamingLAF:
         _metrics.counter("stream.ingest.skipped_promoted").inc(
             int(np.isin(requery, skip_idx, assume_unique=True).sum())
         )
-        with _span("ingest.promote", rows=len(requery)):
+        with _span("ingest.promote", rows=len(requery), native=bool(native)):
             for start in range(0, len(requery), self.block_size):
                 rows = requery[start : start + self.block_size]
-                state.promote(rows, bk.query_hits(rows, eps))
-        with _span("ingest.apply", blocks=len(packed)):
+                if native:
+                    _, pk = bk.query_hits_packed(rows, eps)
+                    state.promote_packed(rows, pk)
+                else:
+                    state.promote(rows, bk.query_hits(rows, eps))
+        # connectivity replay: on the native path each block's packed
+        # words go straight through the bipartite label-prop program —
+        # adjacency stays packed end-to-end (no per-batch unpack)
+        with _span("ingest.apply", blocks=len(packed), native=bool(native)):
             for rows, pk in packed:
-                state.apply_core_rows(rows, unpack_bitmap(pk, state.n))
+                if native:
+                    state.apply_core_rows_packed(rows, pk)
+                else:
+                    state.apply_core_rows(rows, unpack_bitmap(pk, state.n))
 
         self._serve = None
         return IngestReport(

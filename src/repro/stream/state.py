@@ -37,6 +37,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..core.range_query import pack_bitmap
 from ..core.union_find import UnionFind, compact_labels_from_parent, union_star
 
 __all__ = ["StreamingClusterState"]
@@ -161,6 +162,15 @@ class StreamingClusterState:
         self.queried[rows] = True
         self.apply_core_rows(rows, hit)
 
+    def promote_packed(self, rows: np.ndarray, pk: np.ndarray) -> None:
+        """``promote`` on a packed re-query block (counts by popcount,
+        connectivity via ``apply_core_rows_packed``)."""
+        n = self.n
+        pk = pk[:, : (n + 31) // 32] & pack_bitmap(self.alive[:n][None, :])
+        self.counts[rows] = np.bitwise_count(pk).sum(axis=1, dtype=np.int64)
+        self.queried[rows] = True
+        self.apply_core_rows_packed(rows, pk)
+
     def apply_core_rows(self, rows: np.ndarray, hit: np.ndarray) -> None:
         """Union + ownership from the hit rows of core points.
 
@@ -194,6 +204,62 @@ class StreamingClusterState:
             own_core = hit_core[nc]
             any_hit = own_core.any(axis=1)
             first = own_core.argmax(axis=1)
+            cur = self.owner[ncrows]
+            best = np.where(any_hit & ((cur < 0) | (first < cur)), first, cur)
+            self.owner[ncrows] = best
+        self.version += 1
+
+    def apply_core_rows_packed(self, rows: np.ndarray, pk: np.ndarray) -> None:
+        """``apply_core_rows`` on a *packed* hit block, never unpacked.
+
+        ``pk`` is the (len(rows), ceil(n/32)) uint32 bitmap of the same
+        rows ``apply_core_rows`` takes boolean.  The block goes through
+        the bipartite label-propagation program
+        (:func:`repro.kernels.label_prop.packed_connectivity`) and only
+        three small s32 vectors come back: per-column component
+        representative (the transitive closure of the per-row star
+        unions), per-column min core row (ownership offers), and
+        per-row min core column (non-core rows' own ownership).  The
+        union-find and owner updates they drive are identical to the
+        unpacked pass.
+        """
+        import jax
+
+        from ..kernels.label_prop import packed_connectivity
+
+        n = self.n
+        rows = np.asarray(rows, dtype=np.int64)
+        # alive masking happens in packed space (the _masked analog);
+        # the slice drops capacity-padding words a device slab may
+        # carry and the mask's own zero tail clears bits past n
+        pk = pk[:, : (n + 31) // 32] & pack_bitmap(self.alive[:n][None, :])
+        row_core = self.core[rows]
+        comp, owner, row_first, _ = jax.device_get(
+            packed_connectivity(pk, rows, row_core, self.core[:n])
+        )
+        big = np.iinfo(np.int32).max
+        # star-union each component (only columns adjacent to a core
+        # block row participate; everything else kept its own label)
+        sel = np.nonzero(self.core[:n] & (owner != big))[0]
+        if sel.size:
+            order = np.argsort(comp[sel], kind="stable")
+            sel = sel[order]
+            _, starts = np.unique(comp[sel], return_index=True)
+            for grp in np.split(sel, starts[1:]):
+                union_star(self.uf.parent, grp)
+        # ownership offers from the block's core rows
+        cand = (~self.core[:n]) & (owner != big)
+        if cand.any():
+            first = owner[cand].astype(np.int64)
+            cur = self.owner[:n][cand]
+            best = np.where((cur < 0) | (first < cur), first, cur)
+            self.owner[np.nonzero(cand)[0]] = best
+        # non-core rows pick up their own ownership
+        nc = ~row_core
+        if nc.any():
+            ncrows = rows[nc]
+            first = row_first[nc].astype(np.int64)
+            any_hit = first < big
             cur = self.owner[ncrows]
             best = np.where(any_hit & ((cur < 0) | (first < cur)), first, cur)
             self.owner[ncrows] = best

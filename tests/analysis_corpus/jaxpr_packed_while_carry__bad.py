@@ -1,0 +1,30 @@
+"""Corpus BAD: the packed slab rides the label-propagation while carry
+— the uint32 buffer is rebuilt (re-masked) every round instead of
+staying a loop-invariant operand of the round loop.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build():
+    def run(slab, labels):
+        def cond(state):
+            _, lab, it = state
+            return it < 4
+
+        def body(state):
+            bm, lab, it = state
+            counts = jnp.sum(jax.lax.population_count(bm), axis=1)
+            bm = bm & jnp.uint32(0xFFFFFFFE)  # per-round slab rewrite
+            return bm, jnp.minimum(lab, counts.astype(jnp.int32)), it + 1
+
+        _, lab, _ = jax.lax.while_loop(cond, body, (slab, labels, jnp.int32(0)))
+        return lab
+
+    return {
+        "jaxpr": jax.make_jaxpr(run)(
+            jnp.zeros((8, 4), jnp.uint32), jnp.zeros((8,), jnp.int32)
+        )
+    }

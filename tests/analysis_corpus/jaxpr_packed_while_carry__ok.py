@@ -1,0 +1,31 @@
+"""Corpus OK twin: the slab is masked once up front and closed over by
+the while body (a loop-invariant const); only s32 labels ride the
+carry.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build():
+    def run(slab, labels):
+        bm = slab & jnp.uint32(0xFFFFFFFE)  # masked once, outside the loop
+        counts = jnp.sum(jax.lax.population_count(bm), axis=1).astype(jnp.int32)
+
+        def cond(state):
+            _, it = state
+            return it < 4
+
+        def body(state):
+            lab, it = state
+            return jnp.minimum(lab, counts), it + 1
+
+        lab, _ = jax.lax.while_loop(cond, body, (labels, jnp.int32(0)))
+        return lab
+
+    return {
+        "jaxpr": jax.make_jaxpr(run)(
+            jnp.zeros((8, 4), jnp.uint32), jnp.zeros((8,), jnp.int32)
+        )
+    }

@@ -39,12 +39,12 @@ _AST_ONLY = {
 }
 
 
-def test_registry_loads_twelve_checks():
+def test_registry_loads_thirteen_checks():
     load_all_checks()
-    assert len(CHECKS) == 12
+    assert len(CHECKS) == 13
     codes = sorted(s.code for s in CHECKS.values())
     assert codes == [
-        "LAF101", "LAF102", "LAF103", "LAF104", "LAF105",
+        "LAF101", "LAF102", "LAF103", "LAF104", "LAF105", "LAF106",
         "LAF201", "LAF202", "LAF203",
         "LAF301", "LAF302", "LAF303", "LAF304",
     ]
@@ -57,7 +57,7 @@ def test_list_checks_is_jax_free():
         "import sys\n"
         "from repro.analysis import load_all_checks, CHECKS\n"
         "load_all_checks()\n"
-        "assert len(CHECKS) == 12\n"
+        "assert len(CHECKS) == 13\n"
         "assert 'jax' not in sys.modules, 'listing checks imported jax'\n"
         "print('JAXFREE-OK')\n"
     )

@@ -1,0 +1,335 @@
+"""One-launch device-resident clustering: kernel/ref parity for the
+rectangular + transposed label-prop kernels, exact-label parity of the
+packed cluster program against the host unpack→union-find oracle
+(single device and 4-forced-host-device mesh, ragged n, post-
+partial_fit capacity-padded operands), the streaming bipartite
+connectivity, and the one-device_get contract."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.core.laf_dbscan import laf_dbscan
+from repro.core.metrics import adjusted_rand_index
+from repro.core.range_query import pack_bitmap, range_counts
+from repro.core.union_find import UnionFind, union_star
+from repro.kernels.label_prop import packed_cluster_labels, packed_connectivity
+from repro.kernels.label_prop.kernel import col_reduce_pallas, label_prop_rect_pallas
+from repro.kernels.label_prop.ref import col_reduce_ref, label_prop_rect_ref
+
+BIG = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# kernel vs ref (interpret-mode parity, mirrors the hamming_filter suite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,w,row_tile,word_tile", [
+    (64, 4, 32, 2),       # multi-tile both axes
+    (32, 2, 32, 2),       # single tile
+    (128, 8, 64, 4),
+])
+def test_rect_kernel_matches_ref(r, w, row_tile, word_tile):
+    rng = np.random.default_rng(r * w)
+    bitmap = jnp.asarray(rng.integers(0, 2**32, (r, w), dtype=np.uint32))
+    col_labels = jnp.asarray(rng.permutation(w * 32).astype(np.int32))
+    # inactive rows carry BIG — the row-label side must pass through
+    row_labels = np.full(r, BIG, np.int32)
+    active = rng.random(r) < 0.5
+    row_labels[active] = rng.integers(0, w * 32, active.sum())
+    row_labels = jnp.asarray(row_labels)
+    got = label_prop_rect_pallas(
+        row_labels, col_labels, bitmap,
+        row_tile=row_tile, word_tile=word_tile, interpret=True,
+    )
+    ref = label_prop_rect_ref(row_labels, col_labels, bitmap, BIG)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("r,w,row_tile,word_tile", [
+    (64, 4, 32, 2),
+    (96, 6, 32, 2),
+])
+def test_col_reduce_kernel_matches_ref(r, w, row_tile, word_tile):
+    rng = np.random.default_rng(r + w)
+    bitmap = jnp.asarray(rng.integers(0, 2**32, (r, w), dtype=np.uint32))
+    # BIG row values model non-core rows; zero weights model padding
+    row_vals = np.where(rng.random(r) < 0.4, BIG, rng.integers(0, 10_000, r)).astype(np.int32)
+    row_weights = (rng.random(r) < 0.8).astype(np.int32)
+    cmin, csum = col_reduce_pallas(
+        bitmap, jnp.asarray(row_vals), jnp.asarray(row_weights),
+        row_tile=row_tile, word_tile=word_tile, interpret=True,
+    )
+    rmin, rsum = col_reduce_ref(bitmap, jnp.asarray(row_vals), jnp.asarray(row_weights), BIG)
+    np.testing.assert_array_equal(np.asarray(cmin), np.asarray(rmin))
+    np.testing.assert_array_equal(np.asarray(csum), np.asarray(rsum))
+
+
+# ---------------------------------------------------------------------------
+# packed cluster program vs the host union-find oracle
+# ---------------------------------------------------------------------------
+
+
+def _host_cluster_oracle(hit, rows, tau, n):
+    """The host pass the device program must reproduce bit-exactly."""
+    counts = hit.sum(axis=1)
+    core_rows = counts >= tau
+    core = np.zeros(n, bool)
+    core[rows[core_rows]] = True
+    uf = UnionFind(n)
+    owner = np.full(n, -1, np.int64)
+    for bi in np.nonzero(core_rows)[0]:
+        nb = np.nonzero(hit[bi] & core)[0]
+        union_star(uf.parent, nb)
+        noncore = np.nonzero(hit[bi] & ~core)[0]
+        r = rows[bi]
+        take = (owner[noncore] < 0) | (r < owner[noncore])
+        owner[noncore[take]] = r
+    rep = np.array([uf.find(j) if core[j] else BIG for j in range(n)])
+    return counts, core, rep, owner
+
+
+@pytest.mark.parametrize("n,ragged", [(96, False), (117, True), (45, True)])
+def test_packed_cluster_labels_exact_vs_union_find(n, ragged):
+    # ragged n exercises the tail-word mask and row/word padding (the
+    # pointer-jumping carry is exercised by whatever component diameters
+    # the random graphs produce; rounds < max_iters is asserted below)
+    rng = np.random.default_rng(n)
+    adj = rng.random((n, n)) < 0.08
+    adj = adj | adj.T
+    np.fill_diagonal(adj, True)
+    rows = np.sort(rng.choice(n, max(8, n - 7), replace=False))
+    hit = adj[rows]
+    tau = 5
+    # inactive (padding) rows ride along with sentinel >= n
+    rows_op = np.concatenate([rows, np.full(5, n)]).astype(np.int32)
+    slab = np.concatenate([pack_bitmap(hit), np.zeros((5, pack_bitmap(hit).shape[1]), np.uint32)])
+    labels, owner, col_sum, counts, rounds = jax.device_get(
+        packed_cluster_labels(jnp.asarray(slab), jnp.asarray(rows_op), tau,
+                              n=n, row_tile=64, word_tile=2, interpret=True)
+    )
+    h_counts, h_core, h_rep, h_owner = _host_cluster_oracle(hit, rows, tau, n)
+    np.testing.assert_array_equal(counts[: len(rows)], h_counts)
+    assert (counts[len(rows):] == 0).all()
+    # min-root union-find representative == min-label propagation result
+    np.testing.assert_array_equal(labels[:n][h_core], h_rep[h_core])
+    # border owner: min executed core row per column
+    dev_owner = np.where(owner[:n] == BIG, -1, owner[:n])
+    np.testing.assert_array_equal(dev_owner[~h_core], h_owner[~h_core])
+    # transposed partials: every valid row's bits, summed down columns
+    np.testing.assert_array_equal(col_sum[:n], hit.sum(axis=0))
+    assert 0 < rounds < 64
+
+
+def test_packed_cluster_chain_graph_pointer_jump():
+    """Path-graph core component (worst-case diameter): rounds must stay
+    logarithmic-ish, far under the trip cap — the pointer-jump carry."""
+    n = 200
+    adj = np.zeros((n, n), bool)
+    idx = np.arange(n - 1)
+    adj[idx, idx + 1] = True
+    adj = adj | adj.T
+    np.fill_diagonal(adj, True)
+    rows = np.arange(n, dtype=np.int32)
+    labels, _, _, counts, rounds = jax.device_get(
+        packed_cluster_labels(jnp.asarray(pack_bitmap(adj)), jnp.asarray(rows),
+                              2, n=n, row_tile=64, word_tile=2, interpret=True)
+    )
+    assert (labels[:n] == 0).all()          # one chain component, rep 0
+    assert rounds < 16                       # ~log2(200) with jumping
+
+
+def test_packed_connectivity_bipartite_vs_host():
+    """Streaming block shape: rows are NOT a superset of the core set,
+    so propagation must relay rows->cols->rows."""
+    rng = np.random.default_rng(11)
+    n = 150
+    adj = rng.random((n, n)) < 0.06
+    adj = adj | adj.T
+    np.fill_diagonal(adj, True)
+    core = rng.random(n) < 0.5
+    rows = np.sort(rng.choice(n, 40, replace=False))
+    hit = adj[rows]
+    comp, owner, row_first, rounds = jax.device_get(
+        packed_connectivity(jnp.asarray(pack_bitmap(hit)), jnp.asarray(rows),
+                            jnp.asarray(core[rows]), jnp.asarray(core),
+                            row_tile=32, word_tile=2, interpret=True)
+    )
+    # host oracle: per core row, star-union its core neighbors
+    uf = UnionFind(n)
+    for bi in np.nonzero(core[rows])[0]:
+        union_star(uf.parent, np.nonzero(hit[bi] & core)[0])
+    for j in np.nonzero(core)[0]:
+        grp = np.nonzero([core[k] and uf.find(k) == uf.find(j) for k in range(n)])[0]
+        if comp[j] != BIG:
+            assert comp[j] == grp.min()
+    # owner: min core row adjacent to each column
+    core_rows_hit = hit[core[rows]]
+    exp = np.where(core_rows_hit.any(axis=0),
+                   np.asarray(rows[core[rows]])[core_rows_hit.argmax(axis=0)], BIG)
+    np.testing.assert_array_equal(owner, exp)
+    # row_first: min core column per row
+    hc = hit & core[None, :]
+    expf = np.where(hc.any(axis=1), hc.argmax(axis=1), BIG)
+    np.testing.assert_array_equal(row_first[: len(rows)], expf)
+    assert rounds < 64
+
+
+# ---------------------------------------------------------------------------
+# laf_dbscan cluster_device parity (the end-to-end contract)
+# ---------------------------------------------------------------------------
+
+
+def _preds(data, eps, noisy_seed=None):
+    pred = np.asarray(range_counts(jnp.asarray(data), jnp.asarray(data), eps)).astype(float)
+    if noisy_seed is None:
+        return pred
+    rng = np.random.default_rng(noisy_seed)
+    return pred * rng.uniform(0.7, 1.3, len(pred))
+
+
+class TestClusterDeviceParity:
+    def test_forced_device_matches_host_exact_backend(self, tiny_clustered):
+        data, _ = tiny_clustered
+        eps, tau, alpha = 0.45, 4, 1.2
+        # noisy predictions force skips AND rescues through both paths
+        for seed in (None, 0):
+            pred = _preds(data, eps, seed)
+            host = laf_dbscan(data, eps, tau, alpha, pred, cluster_device=False)
+            dev = laf_dbscan(data, eps, tau, alpha, pred, cluster_device=True)
+            np.testing.assert_array_equal(host.labels, dev.labels)
+            np.testing.assert_array_equal(host.core, dev.core)
+            assert host.extras == dev.extras
+            assert adjusted_rand_index(host.labels, dev.labels) == 1.0
+
+    def test_native_backend_auto_routes_device_non_tile_multiple(self):
+        from repro.data.synthetic import make_angular_clusters
+        from repro.index.random_projection import RandomProjectionBackend
+
+        n = 389  # not a multiple of any tile/word shape
+        data, _ = make_angular_clusters(n, 16, 5, kappa=60, noise_frac=0.25, seed=7)
+        eps, tau, alpha = 0.45, 4, 1.2
+        pred = _preds(data, eps, 1)
+        bk = RandomProjectionBackend(
+            n_bits=128, seed=3, device=True, interpret=True,
+            chunk=64, q_tile=32, db_tile=128, verify="full",
+        ).fit(data)
+        assert bk.packs_natively
+        host = laf_dbscan(data, eps, tau, alpha, pred, backend=bk, cluster_device=False)
+        dev = laf_dbscan(data, eps, tau, alpha, pred, backend=bk, cluster_device="auto")
+        np.testing.assert_array_equal(host.labels, dev.labels)
+        assert host.extras == dev.extras
+
+    def test_single_device_get_per_clustering(self, tiny_clustered):
+        """The one-launch contract: oracle counts at alpha=1.0 leave no
+        rescue work, so the whole clustering syncs exactly once."""
+        from repro import obs
+        from repro.obs import metrics
+
+        data, _ = tiny_clustered
+        eps, tau = 0.45, 4
+        pred = _preds(data, eps)
+        was_metrics = obs.metrics_enabled()
+        obs.enable(trace=False, metrics_on=True)
+        try:
+            fetches = metrics.counter("laf.cluster.device_get")
+            rounds = metrics.counter("laf.cluster.rounds")
+            f0, r0 = fetches.value, rounds.value
+            res = laf_dbscan(data, eps, tau, 1.0, pred, cluster_device=True)
+            assert fetches.value - f0 == 1
+            assert rounds.value - r0 >= 1
+            assert res.extras["n_rescued"] == 0
+        finally:
+            if not was_metrics:
+                obs.disable()
+
+    @pytest.mark.slow
+    def test_mesh_parity_with_partial_fit(self, forced_device_run):
+        """4-device mesh: sharded one-launch clustering must match the
+        host oracle exactly, including after partial_fit leaves the
+        backend capacity-padded."""
+        out = forced_device_run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.laf_dbscan import laf_dbscan
+        from repro.core.range_query import range_counts
+        from repro.data.synthetic import make_angular_clusters
+        from repro.index.random_projection import RandomProjectionBackend
+
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        n = 389
+        data, _ = make_angular_clusters(n, 16, 5, kappa=60, noise_frac=0.25, seed=7)
+        eps, tau, alpha = 0.45, 4, 1.2
+
+        def preds(d, seed):
+            p = np.asarray(range_counts(jnp.asarray(d), jnp.asarray(d), eps)).astype(float)
+            return p * np.random.default_rng(seed).uniform(0.75, 1.25, len(p))
+
+        bk = RandomProjectionBackend(
+            mesh=mesh, n_bits=64, seed=3, device=True, interpret=True,
+            chunk=64, q_tile=32, db_tile=128, verify="full",
+        ).fit(data)
+        host = laf_dbscan(data, eps, tau, alpha, preds(data, 1), backend=bk,
+                          cluster_device=False)
+        dev = laf_dbscan(data, eps, tau, alpha, preds(data, 1), backend=bk,
+                         cluster_device="auto")
+        base_ok = bool(np.array_equal(host.labels, dev.labels)
+                       and host.extras == dev.extras)
+
+        extra, _ = make_angular_clusters(137, 16, 5, kappa=60, noise_frac=0.25, seed=11)
+        bk.partial_fit(extra)
+        full = np.concatenate([data, extra])
+        h2 = laf_dbscan(full, eps, tau, alpha, preds(full, 2), backend=bk,
+                        cluster_device=False)
+        d2 = laf_dbscan(full, eps, tau, alpha, preds(full, 2), backend=bk,
+                        cluster_device="auto")
+        grown_ok = bool(np.array_equal(h2.labels, d2.labels)
+                        and h2.extras == d2.extras)
+        print("RESULT:" + __import__("json").dumps(
+            {"base_ok": base_ok, "grown_ok": grown_ok,
+             "n_clusters": int(d2.labels.max() + 1)}))
+        """)
+        assert out["base_ok"] and out["grown_ok"]
+        assert out["n_clusters"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# streaming: packed connectivity replay parity
+# ---------------------------------------------------------------------------
+
+
+def test_stream_packed_apply_matches_host_path():
+    from repro.data.synthetic import make_angular_clusters
+    from repro.index.random_projection import RandomProjectionBackend
+    from repro.stream import StreamingLAF
+
+    data, _ = make_angular_clusters(600, 16, 5, kappa=60, noise_frac=0.25, seed=3)
+    eps, tau = 0.45, 4
+    # deterministic mixed predictions: some rows skip, later promote
+    est = lambda v: np.where(v[:, 0] > 0, 10.0 * tau, 0.0)
+    bk = RandomProjectionBackend(
+        n_bits=128, seed=3, device=True, interpret=True,
+        chunk=64, q_tile=32, db_tile=128, verify="full",
+    )
+    a = StreamingLAF(eps, tau, backend="exact", block_size=100,
+                     estimator=est, use_estimator=True)
+    b = StreamingLAF(eps, tau, backend=bk, block_size=100,
+                     estimator=est, use_estimator=True)
+    assert b.backend.packs_natively
+    promoted = 0
+    for start in range(0, 600, 150):
+        ra = a.partial_fit(data[start : start + 150])
+        rb = b.partial_fit(data[start : start + 150])
+        np.testing.assert_array_equal(a.labels(), b.labels())
+        np.testing.assert_array_equal(
+            a.state.owner[: a.state.n], b.state.owner[: b.state.n]
+        )
+        np.testing.assert_array_equal(
+            a.state.counts[: a.state.n], b.state.counts[: b.state.n]
+        )
+        assert (ra.n_promoted, ra.n_skipped) == (rb.n_promoted, rb.n_skipped)
+        promoted += ra.n_promoted
+    assert promoted > 0  # the packed promote path actually ran
