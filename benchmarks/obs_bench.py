@@ -42,7 +42,12 @@ def run(args) -> dict:
     from repro.data.synthetic import make_angular_clusters
     from repro.index import RandomProjectionBackend
 
-    obs.enable(trace=True, metrics_on=True)
+    # --cluster-device: the one-launch fused clustering config — device
+    # telemetry on, engine-backed index, cluster formation under a
+    # single lax.while_loop.  The fused interval (laf.label_prop) has no
+    # host-observable phase boundaries, so its coverage is restored by
+    # the synthetic per-round spans the telemetry harvest emits.
+    obs.enable(trace=True, metrics_on=True, telemetry=args.cluster_device)
     obs.clear_trace()
     obs.metrics.reset()
 
@@ -57,15 +62,19 @@ def run(args) -> dict:
         mesh = jax.make_mesh((args.mesh,), ("data",))
     backend = RandomProjectionBackend(
         n_bits=args.n_bits, seed=args.seed,
-        device=True if mesh is not None else "auto", mesh=mesh,
+        # cluster-device mode needs the engine's packed slabs on device
+        device=True if (mesh is not None or args.cluster_device) else "auto",
+        mesh=mesh,
     )
     pipe = LAFPipeline(
         eps_grid=(args.eps,), epochs=args.epochs, seed=args.seed,
         backend=backend,
     )
+    cluster_kw = {"cluster_device": True} if args.cluster_device else {}
     test = pipe.fit_split(data)  # estimator training is NOT the traced run
     obs.clear_trace()  # the artifact traces the clustering run only
-    out = pipe.cluster_laf_dbscan(test, args.eps, args.tau, args.alpha)
+    out = pipe.cluster_laf_dbscan(test, args.eps, args.tau, args.alpha,
+                                  **cluster_kw)
 
     records = obs.spans()
     root = next(r for r in reversed(records) if r.name == "laf.run")
@@ -74,6 +83,25 @@ def run(args) -> dict:
     cov_cluster = obs.coverage(cluster, records)
     run_kids = _phase_seconds(records, root.span_id)
     cluster_kids = _phase_seconds(records, cluster.span_id)
+    cov_label_prop = round_spans = None
+    if args.cluster_device:
+        # the fused one-launch interval: without the synthetic per-round
+        # telemetry spans its coverage is 0 (no host-observable phase
+        # boundaries inside a single lax.while_loop)
+        lp = next(
+            (r for r in reversed(records) if r.name == "laf.label_prop"), None
+        )
+        if lp is None:
+            raise SystemExit(
+                "--cluster-device run never entered the fused label-prop "
+                "pass (estimator predicted 0 core points at this operating "
+                "point — raise --n/--epochs or lower --tau)"
+            )
+        cov_label_prop = obs.coverage(lp, records)
+        round_spans = sum(
+            1 for r in records
+            if r.name == "laf.cluster.round" and r.parent_id == lp.span_id
+        )
 
     predict_s = run_kids.get("laf.predict", 0.0)
     sweep_s = cluster_kids.get("laf.pass1", 0.0)
@@ -100,16 +128,19 @@ def run(args) -> dict:
         def _pass():
             bk = RandomProjectionBackend(
                 n_bits=args.n_bits, seed=args.seed,
-                device=True if mesh is not None else "auto", mesh=mesh,
+                device=True if (mesh is not None or args.cluster_device)
+                else "auto",
+                mesh=mesh,
             )
             t0 = time.perf_counter()
             pipe.cluster_laf_dbscan(test, args.eps, args.tau, args.alpha,
-                                    backend=bk)
+                                    backend=bk, **cluster_kw)
             return time.perf_counter() - t0
 
         obs.disable()
         disabled_wall = _pass()
-        obs.enable(trace=True, metrics_on=True)
+        obs.enable(trace=True, metrics_on=True,
+                   telemetry=args.cluster_device)
         enabled_wall = _pass()
 
     payload = {
@@ -127,6 +158,7 @@ def run(args) -> dict:
             "postprocess_frac": post_s / wall if wall else 0.0,
         },
         "coverage": {"laf.run": cov_run, "laf.cluster": cov_cluster},
+        "span_coverage": cov_run,  # trajectory-gate key
         "recompiles": {
             "sweep": snap.get("sweep.recompiles", 0),
             "jax_backend_compiles": snap.get("jax.compile.events", 0),
@@ -150,6 +182,19 @@ def run(args) -> dict:
         "trace": trace_path,
         "spans_recorded": len(records),
     }
+    if args.cluster_device:
+        # ``snap`` was taken right after the traced run, before the
+        # overhead passes bumped the counters again
+        payload["cluster_device"] = {
+            "coverage_label_prop": cov_label_prop,
+            "round_spans": round_spans,
+            "rounds": snap.get("laf.cluster.rounds", 0),
+            "device_get": snap.get("laf.cluster.device_get", 0),
+            "telemetry_totals": {
+                k.rsplit(".", 1)[1]: v
+                for k, v in snap.items() if k.startswith("laf.telemetry.")
+            },
+        }
     if disabled_wall is not None:
         payload["obs_disabled_wall_s"] = disabled_wall
         payload["obs_enabled_wall_s"] = enabled_wall
@@ -164,10 +209,22 @@ def run(args) -> dict:
         f"skip_rate={payload['estimator_fast_path']['skip_rate']:.2f} "
         f"sweep_recompiles={payload['recompiles']['sweep']}"
     )
+    if cov_label_prop is not None:
+        print(
+            f"  cluster-device: label_prop coverage {cov_label_prop:.3f} "
+            f"({round_spans} synthetic round spans, "
+            f"{payload['cluster_device']['rounds']} rounds)", flush=True,
+        )
     if cov_run < args.min_coverage:
         raise SystemExit(
             f"span coverage {cov_run:.3f} below --min-coverage "
             f"{args.min_coverage} — an uninstrumented phase opened up"
+        )
+    if cov_label_prop is not None and cov_label_prop < args.min_coverage:
+        raise SystemExit(
+            f"fused label_prop coverage {cov_label_prop:.3f} below "
+            f"--min-coverage {args.min_coverage} — the synthetic per-round "
+            "telemetry spans stopped attributing the one-launch interval"
         )
     return payload
 
@@ -191,8 +248,15 @@ def main(argv=None):
                     help="write the payload here (BENCH_PR6.json in CI)")
     ap.add_argument("--trace", type=Path, default=None,
                     help="write the Chrome/Perfetto trace here")
+    ap.add_argument(
+        "--cluster-device", action="store_true",
+        help="trace the one-launch fused clustering (cluster_device=True) "
+        "with device telemetry on: the laf.label_prop coverage gate then "
+        "rides the synthetic per-round spans (BENCH_PR9 leg)",
+    )
     ap.add_argument("--min-coverage", type=float, default=0.95,
-                    help="fail if laf.run span coverage drops below this")
+                    help="fail if laf.run span coverage drops below this "
+                    "(under --cluster-device, also gates laf.label_prop)")
     ap.add_argument("--no-overhead-check", action="store_true",
                     help="skip the second (obs-disabled) clustering pass")
     args = ap.parse_args(argv)

@@ -1,0 +1,240 @@
+"""Bench-trajectory consolidation + drift gate.
+
+Every PR's benchmark steps emit JSON artifacts (``BENCH_PR*.json``, the
+``artifacts/benchmarks/*.json`` payloads).  Those are point-in-time
+snapshots; nothing so far remembered the *best the repo has ever
+measured*, so a silent 2x regression would pass CI as long as the run
+completed.  This module closes that loop:
+
+* ``update`` extracts the known metrics from a bench payload and folds
+  them into a checked-in history file
+  (``benchmarks/history/trajectory.json``): per ``label:metric`` the
+  best-known value, its direction, and the append-only history of
+  observations;
+* ``gate`` extracts the same metrics from a *fresh* payload and fails
+  (exit 1) when any falls more than ``--tolerance`` (default 20%)
+  behind best-known.  Timing-derived metrics (wall-clock speedups on a
+  shared CI runner) are compared under ``--noisy-tolerance`` (default
+  60%) — quality metrics (ARI, recall, precision, device_get, rounds)
+  get the tight bound, where even a small drop means a real defect.
+
+Labels keep comparisons like-for-like: the same bench command gates
+against its own lineage, never against a different config's numbers
+(``index_bench_sweep:one_launch_speedup`` at the CI point is a
+different quantity than the 40k single-device row in ``BENCH_PR5``).
+
+Usage (what CI runs)::
+
+    python benchmarks/trajectory.py update BENCH_PR9.json --label pr9_cluster
+    python benchmarks/trajectory.py gate BENCH_PR9.json --label pr9_cluster
+    python benchmarks/trajectory.py show
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+HISTORY = Path(__file__).resolve().parent / "history" / "trajectory.json"
+
+# metric name -> (direction, noisy).  direction: "higher" | "lower"
+# (which way is better).  noisy: wall-clock-derived, gated under the
+# loose tolerance.  Extraction walks the payload recursively, so these
+# match wherever the key appears (top-level summary or per-row).
+METRICS: Dict[str, Tuple[str, bool]] = {
+    # quality / invariants — tight gate
+    "worst_ari": ("higher", False),
+    "ari_sweep_vs_exact": ("higher", False),
+    "ari_one_launch_vs_host": ("higher", False),
+    "ari_rp_vs_exact": ("higher", False),
+    "recall": ("higher", False),
+    "precision": ("higher", False),
+    # NOT device_get/rounds: payloads mix host rows (0) with device rows
+    # (1, >0), so a min over the payload is vacuous and a payload without
+    # a host row would spuriously fail — the single-device_get invariant
+    # is enforced by the bench gate + obs.slo, not the trajectory
+    "max_device_get": ("lower", False),
+    # NOT telemetry_overhead: a warm-vs-warm ratio hovering around zero
+    # (negative on a quiet runner), so relative regression vs best-known
+    # is ill-conditioned — index_bench --max-telemetry-overhead enforces
+    # the absolute <5% bound instead
+    "span_coverage": ("higher", False),
+    # wall-clock-derived — loose gate (shared CI runner)
+    "best_one_launch_speedup": ("higher", True),
+    "best_pipelined_speedup": ("higher", True),
+    "best_cluster_speedup": ("higher", True),
+    "one_launch_speedup": ("higher", True),
+    "pipelined_speedup": ("higher", True),
+    "cluster_speedup": ("higher", True),
+    "sweep_speedup": ("higher", True),
+    "amortized_speedup": ("higher", True),
+}
+
+
+def _walk(node, out: Dict[str, List[float]]) -> None:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k in METRICS and isinstance(v, (int, float)) and not isinstance(v, bool):
+                out.setdefault(k, []).append(float(v))
+            else:
+                _walk(v, out)
+    elif isinstance(node, list):
+        for v in node:
+            _walk(v, out)
+
+
+def extract_metrics(payload) -> Dict[str, float]:
+    """Best value per known metric found anywhere in the payload (max
+    for higher-better, min for lower-better — one payload may hold
+    several rows/configs; the trajectory tracks its frontier)."""
+    found: Dict[str, List[float]] = {}
+    _walk(payload, found)
+    out = {}
+    for name, vals in found.items():
+        direction, _ = METRICS[name]
+        out[name] = max(vals) if direction == "higher" else min(vals)
+    return out
+
+
+def _better(direction: str, a: float, b: float) -> bool:
+    """a strictly better than b."""
+    return a > b if direction == "higher" else a < b
+
+
+def _regression(direction: str, value: float, best: float) -> float:
+    """Fractional regression of ``value`` vs ``best`` (0 = at or beyond
+    best).  Relative to |best|; a zero best (e.g. device_get) regresses
+    by the absolute gap."""
+    gap = (best - value) if direction == "higher" else (value - best)
+    if gap <= 0:
+        return 0.0
+    return gap / abs(best) if best else float("inf")
+
+
+def load_history(path: Path = HISTORY) -> dict:
+    if Path(path).exists():
+        return json.loads(Path(path).read_text())
+    return {"metrics": {}}
+
+
+def save_history(hist: dict, path: Path = HISTORY) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(hist, indent=2, sort_keys=True) + "\n")
+
+
+def update(
+    payload, label: str, hist: dict, *, source: str = "", note: str = ""
+) -> List[str]:
+    """Fold one payload's metrics into the history; returns the
+    ``label:metric`` keys whose best-known improved."""
+    improved = []
+    for name, value in extract_metrics(payload).items():
+        direction, noisy = METRICS[name]
+        key = f"{label}:{name}"
+        ent = hist["metrics"].setdefault(
+            key, {"direction": direction, "noisy": noisy, "best": None,
+                  "history": []},
+        )
+        obs = {"value": value}
+        if source:
+            obs["source"] = source
+        if note:
+            obs["note"] = note
+        ent["history"].append(obs)
+        if ent["best"] is None or _better(direction, value, ent["best"]):
+            ent["best"] = value
+            improved.append(key)
+    return improved
+
+
+def gate(
+    payload, label: str, hist: dict, *,
+    tolerance: float = 0.20, noisy_tolerance: float = 0.60,
+) -> List[str]:
+    """Compare one payload against best-known; returns failure lines
+    (empty = pass).  Metrics with no history are skipped (first
+    observation seeds them via ``update``)."""
+    failures = []
+    for name, value in extract_metrics(payload).items():
+        key = f"{label}:{name}"
+        ent = hist["metrics"].get(key)
+        if ent is None or ent.get("best") is None:
+            continue
+        direction, noisy = METRICS[name]
+        tol = noisy_tolerance if noisy else tolerance
+        reg = _regression(direction, value, ent["best"])
+        if reg > tol:
+            failures.append(
+                f"{key}: {value:.6g} vs best-known {ent['best']:.6g} "
+                f"({direction}-is-better) — {reg:.1%} regression "
+                f"exceeds {tol:.0%} tolerance"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    for cmd in ("update", "gate"):
+        p = sub.add_parser(cmd)
+        p.add_argument("bench", nargs="+", help="bench JSON payload(s)")
+        p.add_argument("--label", required=True,
+                       help="lineage key (same bench command across PRs)")
+        p.add_argument("--history", type=Path, default=HISTORY)
+        p.add_argument("--note", default="")
+        if cmd == "gate":
+            p.add_argument("--tolerance", type=float, default=0.20)
+            p.add_argument("--noisy-tolerance", type=float, default=0.60)
+            p.add_argument("--update", action="store_true",
+                           help="also fold the payload in after a pass")
+    p = sub.add_parser("show")
+    p.add_argument("--history", type=Path, default=HISTORY)
+    args = ap.parse_args(argv)
+
+    hist = load_history(args.history)
+    if args.cmd == "show":
+        for key in sorted(hist["metrics"]):
+            ent = hist["metrics"][key]
+            print(f"{key}: best={ent['best']:.6g} "
+                  f"({ent['direction']}, n={len(ent['history'])}"
+                  f"{', noisy' if ent.get('noisy') else ''})")
+        return 0
+
+    payloads = [(p, json.loads(Path(p).read_text())) for p in args.bench]
+    if args.cmd == "update":
+        for src, payload in payloads:
+            improved = update(payload, args.label, hist, source=Path(src).name,
+                              note=args.note)
+            print(f"{src}: {len(improved)} best-known improved"
+                  + (f" ({', '.join(improved)})" if improved else ""))
+        save_history(hist, args.history)
+        return 0
+
+    # gate
+    rc = 0
+    for src, payload in payloads:
+        failures = gate(payload, args.label, hist,
+                        tolerance=args.tolerance,
+                        noisy_tolerance=args.noisy_tolerance)
+        if failures:
+            rc = 1
+            print(f"TRAJECTORY GATE FAIL: {src}")
+            for line in failures:
+                print(f"  {line}")
+        else:
+            print(f"trajectory gate ok: {src} "
+                  f"({len(extract_metrics(payload))} metrics vs history)")
+            if args.update:
+                update(payload, args.label, hist, source=Path(src).name,
+                       note=args.note)
+    if args.cmd == "gate" and args.update and rc == 0:
+        save_history(hist, args.history)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,8 @@ Entry naming: ``<check id, dashes as underscores>__bad`` /
 * HLO checks — a ``.txt`` HLO fixture, optionally opening with a
   ``// byte_budget: N`` line (consumed by the fusion-budget check);
 * ``jaxpr-donation-alias`` / ``jaxpr-host-callback-in-loop`` /
-  ``jaxpr-packed-while-carry`` / ``jaxpr-shardmap-replication`` — a
+  ``jaxpr-packed-while-carry`` / ``jaxpr-telemetry-carry`` /
+  ``jaxpr-shardmap-replication`` — a
   ``.py`` module **imported and executed** (it builds a tiny traced/lowered program): it must expose
   ``build()`` returning ``{"jaxpr": ...}`` or
   ``{"lowered_text": str, "n_donated": int}``;
@@ -143,6 +144,8 @@ def _eval_entry(check_id: str, path: Path) -> List[Finding]:
         return jaxpr_checks.check_jaxpr_callbacks(jaxpr, label)
     if check_id == "jaxpr-packed-while-carry":
         return jaxpr_checks.check_jaxpr_packed_while_carry(jaxpr, label)
+    if check_id == "jaxpr-telemetry-carry":
+        return jaxpr_checks.check_jaxpr_telemetry_carry(jaxpr, label)
     if check_id == "jaxpr-shardmap-replication":
         return jaxpr_checks.check_jaxpr_shardmaps(jaxpr, label)
     raise ValueError(f"no corpus evaluator for {check_id!r}")

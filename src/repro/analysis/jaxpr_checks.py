@@ -400,6 +400,65 @@ def _check_packed_while_carry(ctx) -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# LAF107: telemetry carries are scalars / small vectors only
+# ---------------------------------------------------------------------------
+
+# a while carry slot may be 1-D up to this many elements (the label
+# vector at the standard config is (2048,), the telemetry vectors are
+# (64,)); anything 2-D+, or 1-D past this, is slab-sized state being
+# rebuilt every round instead of riding as a loop-invariant operand
+TELEMETRY_CARRY_MAX_ELEMS = 65536
+
+
+def check_jaxpr_telemetry_carry(jaxpr, label: str) -> List[Finding]:
+    findings = []
+    for eqn, _ in _walk_eqns(jaxpr):
+        if eqn.primitive.name != "while":
+            continue
+        cn = eqn.params.get("cond_nconsts", 0)
+        bn = eqn.params.get("body_nconsts", 0)
+        for k, v in enumerate(eqn.invars[cn + bn :]):
+            aval = getattr(v, "aval", None)
+            shape = getattr(aval, "shape", None)
+            if shape is None:
+                continue
+            ndim = len(shape)
+            elems = 1
+            for s in shape:
+                elems *= int(s)
+            if ndim >= 2 or elems > TELEMETRY_CARRY_MAX_ELEMS:
+                findings.append(
+                    Finding(
+                        "jaxpr-telemetry-carry", label, 0,
+                        f"while-loop carry slot {k} is "
+                        f"{getattr(aval, 'dtype', '?')}{tuple(shape)} — "
+                        f"telemetry/state riding the round loop must be "
+                        f"s32/f32 scalars or small vectors (<= "
+                        f"{TELEMETRY_CARRY_MAX_ELEMS} elems, 1-D), not a "
+                        f"matrix rebuilt every iteration",
+                        hint="accumulate per-round scalars into a "
+                        "(max_iters,) vector via dynamic_update_slice; "
+                        "O(n) slabs belong in the loop-invariant consts "
+                        "(or a fori_loop/scan accumulator outside the "
+                        "fixpoint)",
+                    )
+                )
+    return findings
+
+
+@register(
+    "jaxpr-telemetry-carry", family="jaxpr", code="LAF107",
+    description="while-loop carries are scalars or small 1-D vectors — "
+    "no matrices / O(n)-per-round arrays riding the fixpoint",
+)
+def _check_telemetry_carry(ctx) -> List[Finding]:
+    findings = []
+    for t in ctx.targets.all():
+        findings.extend(check_jaxpr_telemetry_carry(t.jaxpr, t.label))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # LAF104: shard_map replication safety (taint)
 # ---------------------------------------------------------------------------
 

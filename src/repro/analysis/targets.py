@@ -124,13 +124,16 @@ class Targets:
 
     # -- sweep engine -------------------------------------------------
 
-    def _sweep_args(self, *, bitmap: bool, nq: int, n_db: int, d: int = 64,
-                    sig_words: int = 2):
+    def _sweep_args(self, *, bitmap: bool, nq: int, n_db: int, chunk: int,
+                    d: int = 64, sig_words: int = 2):
         import jax.numpy as jnp
 
         outs = (_sds((nq,), jnp.int32),)
         if bitmap:
             outs += (_sds((nq, n_db // 32), jnp.uint32),)
+        # the per-chunk telemetry slab rides as the last donated output
+        # slab (one [accept, band, reject] row per chunk)
+        outs += (_sds((nq // chunk, 3), jnp.int32),)
         return outs + (
             _sds((), jnp.int32),              # start
             _sds((nq, d), jnp.float32),       # q
@@ -147,15 +150,19 @@ class Targets:
 
         from ..index import sweep as sw
 
-        static = dict(chunk=chunk, q_tile=128, db_tile=256, interpret=True)
+        # telemetry=True pins the *enlarged* carries/donation set — the
+        # shape the lint invariants must keep holding when the in-launch
+        # counters are on (telemetry=False is a strict subset program)
+        static = dict(chunk=chunk, q_tile=128, db_tile=256, interpret=True,
+                      telemetry=True)
         impl = sw._bitmap_launch_impl if bitmap else sw._counts_launch_impl
         jitted = sw._bitmap_launch_donated if bitmap else sw._counts_launch_donated
-        args = self._sweep_args(bitmap=bitmap, nq=nq, n_db=n_db)
+        args = self._sweep_args(bitmap=bitmap, nq=nq, n_db=n_db, chunk=chunk)
         jaxpr = jax.make_jaxpr(functools.partial(impl, **static))(*args)
         lowered = jitted.lower(*args, **static)
         return Target(
             name, jaxpr, lowered.as_text(), lowered.compile().as_text(),
-            n_donated=2 if bitmap else 1, byte_budget=BYTE_BUDGETS.get(name),
+            n_donated=3 if bitmap else 2, byte_budget=BYTE_BUDGETS.get(name),
         )
 
     def _build_sweep_engine_counts(self) -> Target:
@@ -244,9 +251,12 @@ class Targets:
         from ..launch.laf_cluster import build_one_launch_cluster
 
         mesh = _standard_mesh()
+        # telemetry=True pins the enlarged while carry (the four (64,)
+        # s32 per-round vectors) — LAF106/LAF107 and the donation check
+        # must hold on the telemetry-on program, not just the subset
         base = dataclasses.replace(
             make_reduced_config(), backend="random_projection",
-            index_device=True,
+            index_device=True, telemetry=True,
         )
         arch = dataclasses.replace(get_arch("laf_dbscan"), make_config=lambda: base)
         shape = ShapeSpec(
@@ -279,8 +289,9 @@ class Targets:
 
         # the smallest serving bucket: 200 candidates, 100-query block
         bucket, chunk = bucket_shape(200, 100, db_tile=256, chunk=256, q_tile=128)
-        static = dict(chunk=chunk, q_tile=128, db_tile=256, interpret=True)
-        args = self._sweep_args(bitmap=True, nq=chunk, n_db=bucket)
+        static = dict(chunk=chunk, q_tile=128, db_tile=256, interpret=True,
+                      telemetry=True)
+        args = self._sweep_args(bitmap=True, nq=chunk, n_db=bucket, chunk=chunk)
         jaxpr = jax.make_jaxpr(functools.partial(sw._bitmap_launch_impl, **static))(
             *args
         )
@@ -288,7 +299,7 @@ class Targets:
         return Target(
             "serve_assign", jaxpr, lowered.as_text(),
             lowered.compile().as_text(),
-            n_donated=2, byte_budget=BYTE_BUDGETS.get("serve_assign"),
+            n_donated=3, byte_budget=BYTE_BUDGETS.get("serve_assign"),
         )
 
 

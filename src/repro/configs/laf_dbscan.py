@@ -83,6 +83,13 @@ class LAFClusterConfig:
     # (packed blocks uploaded once — the parity mode); False forces the
     # host unpack -> union-find pass (the parity oracle).
     cluster_device: object = "auto"
+    # device-resident telemetry (repro.obs.device): "auto" follows the
+    # process-wide switch (obs.enable(telemetry=True) / REPRO_OBS=device)
+    # at build time; True/False pin it per config.  When on, the fused
+    # loops carry small s32 counter vectors (per-round frontier/changed/
+    # hops/shard-wins in the cluster fixpoint, per-chunk accept/band/
+    # reject in the sweep) harvested at the existing single device_get.
+    telemetry: object = "auto"
     # streaming subsystem (repro.stream): online ingest + serving knobs
     stream: StreamConfig = StreamConfig()
 

@@ -25,7 +25,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..obs import metrics as _metrics, span as _span
+from ..obs import device as _obs_device, metrics as _metrics, span as _span
 from .dbscan import NOISE, UNDEFINED, DBSCANResult
 from .postprocess import PartialNeighborMap, post_processing, update_partial_neighbors
 from .range_query import pack_bitmap, unpack_bitmap
@@ -190,19 +190,34 @@ def _cluster_pass_device(bk, eps, tau, exec_idx, n, native, block_size):
                     blocks.append(pack_bitmap(bk.query_hits(rows, eps)))
             slab = jnp.asarray(np.concatenate(blocks, axis=0))
             rows_op = exec_idx
-    with _span("laf.label_prop", rows=int(len(rows_op)), n=n):
+    telemetry = _obs_device.device_enabled()
+    # only the per-round cluster counters ride this launch: the bitmap
+    # sweep carries no occupancy slab (that statistic lives on the count
+    # sweeps — see index/sweep.py), so THE device_get fetches exactly
+    # the fixpoint outputs
+    lp_span = _span("laf.label_prop", rows=int(len(rows_op)), n=n,
+                    telemetry=telemetry)
+    with lp_span:
         if mesh is not None:
             from ..distributed.index_plane import sharded_cluster_labels
 
             outs = sharded_cluster_labels(
                 slab, rows_op, tau, mesh=mesh, axes=bk._plan.axes, n=n,
+                telemetry=telemetry,
             )
         else:
-            outs = packed_cluster_labels(slab, jnp.asarray(rows_op), tau, n=n)
-        # THE host sync: everything above dispatched asynchronously
-        rep, owner, col_sum, counts, rounds = jax.device_get(outs)
+            outs = packed_cluster_labels(
+                slab, jnp.asarray(rows_op), tau, n=n, telemetry=telemetry,
+            )
+        # THE host sync: everything above dispatched asynchronously —
+        # telemetry rides the same get, never a second one
+        outs_h = jax.device_get(outs)
         _metrics.counter("laf.cluster.device_get").inc()
+    rep, owner, col_sum, counts, rounds = outs_h[:5]
     _metrics.counter("laf.cluster.rounds").inc(int(rounds))
+    if telemetry and len(outs_h) > 5:
+        per_round = _obs_device.harvest_cluster_telemetry(outs_h[5], rounds)
+        _obs_device.emit_round_spans(getattr(lp_span, "_rec", None), per_round)
 
     exact_counts = np.zeros(n, dtype=np.int64)
     exact_counts[exec_idx] = np.asarray(counts[:n_exec], dtype=np.int64)

@@ -359,16 +359,25 @@ def _pipeline(local, combine, items, depth: int):
 @functools.lru_cache(maxsize=None)
 def _build_sweep_plane_fn(
     mesh: Mesh, axes, kind: str, chunk: int, q_tile: int, db_tile: int,
-    interpret: bool, depth: int,
+    interpret: bool, depth: int, telemetry: bool = False,
 ):
     """One-launch sharded sweep, cached per (mesh, axes, variant, tiles,
     chunk, pipeline depth).  The launch's query rows arrive stacked
     ``(cpl * chunk, ...)`` replicated; the db + signature table arrive
-    row-sharded (the plane arrays from ``shard_database``)."""
+    row-sharded (the plane arrays from ``shard_database``).
+
+    ``telemetry`` appends a replicated ``(cpl, 3)`` s32 output of
+    per-chunk ``[accept, band, reject]`` kernel-tile occupancy, psum'd
+    across shards per chunk (an s32 triple on the wire — it rides the
+    same double-buffered slot as the count psum, so the pipeline
+    overlap is unchanged)."""
     _metrics.counter("plane.builds").inc()
     rep = P(None, None)
     row_sharded = P(axes, None)
     kw = dict(q_tile=q_tile, db_tile=db_tile, interpret=interpret)
+
+    def _tile_sum(s):
+        return s.reshape(-1, 3).sum(axis=0).astype(I32)
 
     if kind == "count":
 
@@ -377,14 +386,24 @@ def _build_sweep_plane_fn(
             items = (q.reshape(cpl, chunk, -1), qs.reshape(cpl, chunk, -1))
 
             def local(xs):
-                return hamming_filter_count(
-                    xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0], **kw
+                out = hamming_filter_count(
+                    xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0],
+                    return_stats=telemetry, **kw
                 )
+                return (out[0], _tile_sum(out[1])) if telemetry else out
 
+            if telemetry:
+                outs, stats = _pipeline(
+                    local,
+                    lambda cs: (jax.lax.psum(cs[0], axes),
+                                jax.lax.psum(cs[1], axes)),
+                    items, depth,
+                )
+                return outs.reshape(cpl * chunk), stats
             outs = _pipeline(local, lambda c: jax.lax.psum(c, axes), items, depth)
             return outs.reshape(cpl * chunk)
 
-        out_specs = P(None)
+        out_specs = (P(None), P(None, None)) if telemetry else P(None)
     else:  # bitmap
 
         def body(q, qs, db, dbs, eps, band):
@@ -392,13 +411,30 @@ def _build_sweep_plane_fn(
             items = (q.reshape(cpl, chunk, -1), qs.reshape(cpl, chunk, -1))
 
             def local(xs):
-                return hamming_filter_bitmap(
-                    xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0], **kw
+                out = hamming_filter_bitmap(
+                    xs[0], db, xs[1], dbs, eps[0], band[1], t_lo=band[0],
+                    return_stats=telemetry, **kw
                 )
+                if telemetry:
+                    return out[0], out[1], _tile_sum(out[2])
+                return out
 
-            # only the per-chunk count psum crosses the network; the
+            # only the per-chunk count psum (and the s32 occupancy
+            # triple under telemetry) crosses the network; the
             # word-aligned bitmap blocks stay shard-local until the
             # out_specs gather at launch end
+            if telemetry:
+                outs_c, outs_bm, stats = _pipeline(
+                    local,
+                    lambda cbs: (jax.lax.psum(cbs[0], axes), cbs[1],
+                                 jax.lax.psum(cbs[2], axes)),
+                    items, depth,
+                )
+                return (
+                    outs_c.reshape(cpl * chunk),
+                    outs_bm.reshape(cpl * chunk, outs_bm.shape[-1]),
+                    stats,
+                )
             outs_c, outs_bm = _pipeline(
                 local, lambda cb: (jax.lax.psum(cb[0], axes), cb[1]), items, depth
             )
@@ -407,7 +443,11 @@ def _build_sweep_plane_fn(
                 outs_bm.reshape(cpl * chunk, outs_bm.shape[-1]),
             )
 
-        out_specs = (P(None), P(None, axes))
+        out_specs = (
+            (P(None), P(None, axes), P(None, None))
+            if telemetry
+            else (P(None), P(None, axes))
+        )
 
     # jit the shard_map'd sweep so the launch program (the whole chunk
     # scan) is traced once per shape and every later sweep is a single
@@ -441,16 +481,21 @@ def sharded_sweep_launch(
     interpret: bool = False,
     depth: int = 2,
     n: int,
+    telemetry: bool = False,
 ):
     """One launch of the device-resident sharded sweep (driven by
     :mod:`repro.index.sweep`): ``(result, n_pad)`` where ``n_pad`` is
     the plane's zero-row column slack the driver corrects once per
     sweep.  ``db``/``db_sig`` are the plane-sharded arrays; each shard's
     rows should be db-tile aligned (``shard_database(..., tile=)``) so
-    the scanned kernel calls never re-pad inside the loop."""
+    the scanned kernel calls never re-pad inside the loop.  With
+    ``telemetry`` the result tuple grows a trailing replicated
+    ``(cpl, 3)`` per-chunk occupancy array (count results become a
+    2-tuple)."""
     axes = data_axes(mesh) if axes is None else tuple(axes)
     f = _build_sweep_plane_fn(
-        mesh, axes, kind, chunk, q_tile, db_tile, interpret, depth
+        mesh, axes, kind, chunk, q_tile, db_tile, interpret, depth,
+        bool(telemetry),
     )
     _count_collectives(
         kind, q.shape[0], q.shape[0] // chunk, axis_size(mesh, axes),
@@ -582,11 +627,15 @@ def _build_sweep_marginals_fn(
 def _build_cluster_plane_fn(
     mesh: Mesh, axes, n: int, max_iters: int,
     row_tile: int, word_tile: int, interpret: bool,
+    telemetry: bool = False,
 ):
     """shard_map'd one-launch cluster pass, cached per (mesh, axes, n,
     tiles).  The slab arrives with its words sharded ``P(None, axes)``
     (the sweep plane's bitmap layout: shard k's words are the columns of
     shard k's database rows); ``rows`` and ``tau`` ride replicated.
+    With ``telemetry`` the fixpoint's four per-round s32 vectors come
+    back replicated (``P(None)``) — the shard-wins marginal is psum'd
+    inside the round, so the outputs are replication-clean (LAF104).
     """
     _metrics.counter("plane.builds").inc()
     from ..kernels.label_prop import packed_cluster_fixpoint
@@ -605,15 +654,18 @@ def _build_cluster_plane_fn(
             bitmap, rows, tau[0], idx * cap_loc,
             n=n, cap=cap_loc * n_shards, max_iters=max_iters,
             row_tile=row_tile, word_tile=word_tile, interpret=interpret,
-            axes=ax,
+            axes=ax, telemetry=telemetry,
         )
 
+    out_specs = (P(None), P(axes), P(axes), P(None), P(None))
+    if telemetry:
+        out_specs = out_specs + ((P(None),) * 4,)
     return jax.jit(
         shard_map(
             body,
             mesh=mesh,
             in_specs=(P(None, axes), P(None), P(None)),
-            out_specs=(P(None), P(axes), P(axes), P(None), P(None)),
+            out_specs=out_specs,
             check_rep=False,
         )
     )
@@ -631,6 +683,7 @@ def sharded_cluster_labels(
     row_tile: int = 256,
     word_tile: int = 64,
     interpret=None,
+    telemetry=None,
 ):
     """One-launch cluster pass over a column-sharded packed slab.
 
@@ -642,10 +695,15 @@ def sharded_cluster_labels(
     :func:`repro.kernels.label_prop.packed_cluster_labels`: returns
     device arrays ``(labels, owner, col_sum, counts, rounds)`` with no
     host sync; ``owner``/``col_sum`` come back column-sharded and
-    reassemble on fetch.
+    reassemble on fetch.  ``telemetry`` (default: the ``repro.obs``
+    device switch) appends the replicated per-round tuple.
     """
     if interpret is None:
         interpret = default_interpret()
+    if telemetry is None:
+        from ..obs import device_enabled
+
+        telemetry = device_enabled()
     axes = tuple(axes) if isinstance(axes, (tuple, list)) else (axes,)
     w_loc = bitmap.shape[1] // axis_size(mesh, axes)
     # tiles must divide the shard-local slab exactly — padding local
@@ -654,7 +712,8 @@ def sharded_cluster_labels(
     word_tile = math.gcd(w_loc, word_tile)
     _metrics.counter("labelprop.launches").inc()
     f = _build_cluster_plane_fn(
-        mesh, axes, n, max_iters, row_tile, word_tile, interpret
+        mesh, axes, n, max_iters, row_tile, word_tile, interpret,
+        bool(telemetry),
     )
     return f(
         bitmap,

@@ -701,7 +701,7 @@ class RandomProjectionBackend(RangeBackend):
 
 # ---------------------------------------------------------------------------
 # margin auto-tune: price candidate Hamming bands with the kernel's
-# per-tile occupancy stats (or the host Hamming sweep) and pick the
+# occupancy stats (or the host Hamming sweep) and pick the
 # widest band — best recall, ~Phi(margin) — the verify budget affords
 # ---------------------------------------------------------------------------
 
@@ -724,7 +724,7 @@ def suggest_margin(
     fraction stays under ``max_band_frac``" (default: the backend's own
     saturation threshold).  Occupancy is measured on a deterministic row
     sample: through ``hamming_filter_count(..., return_stats=True)``
-    (the kernel's per-tile [accept, band, reject] counters) when the
+    (the kernel's [accept, band, reject] occupancy counters) when the
     backend evaluates on device, through one host Hamming sweep
     otherwise.  Both thresholds are traced in the kernel, so sweeping
     candidate margins re-runs nothing but the popcount pass.
@@ -777,7 +777,7 @@ def suggest_margin(
                 q_tile=backend.q_tile, db_tile=backend.db_tile,
                 interpret=backend.interpret, return_stats=True,
             )
-            stats = np.asarray(stats, dtype=np.int64).sum(axis=(0, 1))
+            stats = np.asarray(stats, dtype=np.int64).reshape(-1, 3).sum(axis=0)
             acc, bnd = int(stats[0]), int(stats[1])
             if q_pad or db_pad:
                 # real q rows vs zero-padded db cols
@@ -835,7 +835,7 @@ def record_occupancy(
 
     Rides the :func:`suggest_margin` machinery with a single candidate
     (the backend's configured margin), so the device path uses the
-    kernel's ``return_stats=`` per-tile [accept, band, reject] counters
+    kernel's ``return_stats=`` [accept, band, reject] occupancy counters
     with the exact pad-row corrections — on any n, device and host
     measurements agree (the ``tests/test_obs.py`` parity assert).
     Returns the ``{margin, t_lo, t_hi, band_frac, accept_frac}`` row.

@@ -56,6 +56,7 @@ from ..kernels.hamming_filter.ops import (
     _tail_word_mask,
     default_interpret,
 )
+from ..obs import device as _obs_device
 from ..obs import metrics as _metrics, span as _span, watch_recompiles
 
 __all__ = [
@@ -112,57 +113,80 @@ def plan_sweep(
 
 
 def _counts_launch_impl(
-    out, start, q, q_sig, db, db_sig, eps, band, *, chunk, q_tile, db_tile, interpret
+    out, tele, start, q, q_sig, db, db_sig, eps, band,
+    *, chunk, q_tile, db_tile, interpret, telemetry=False,
 ):
     """One launch: ``cpl`` chunks of band-contract counts written into
-    the (donated) ``out`` slab at ``start``."""
+    the (donated) ``out`` slab at ``start``.
+
+    ``tele`` is the sweep-wide (n_chunks, 3) s32 per-chunk occupancy
+    slab (donated alongside ``out``); with ``telemetry`` each chunk's
+    kernel-tile ``[accept, band, reject]`` triple is written into row
+    ``start // chunk + k``, otherwise the slab passes through untouched
+    (the pass-through still aliases, so donation is unconditional)."""
     cpl = q.shape[0] // chunk
     qs = q.reshape(cpl, chunk, q.shape[1])
     qss = q_sig.reshape(cpl, chunk, q_sig.shape[1])
 
-    def body(k, acc):
+    def body(k, carry):
+        acc, tl = carry
         qk = jax.lax.dynamic_index_in_dim(qs, k, 0, keepdims=False)
         qsk = jax.lax.dynamic_index_in_dim(qss, k, 0, keepdims=False)
         c = hamming_filter_pallas(
             qk, db, qsk, db_sig, eps[0], band[0], band[1],
             q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            with_stats=telemetry,
         )
-        return jax.lax.dynamic_update_slice(acc, c, (start + k * chunk,))
+        if telemetry:
+            c, s = c
+            tl = jax.lax.dynamic_update_slice(
+                tl, _obs_device.sweep_stats_tile_sum(s)[None],
+                (start // chunk + k, 0),
+            )
+        acc = jax.lax.dynamic_update_slice(acc, c, (start + k * chunk,))
+        return acc, tl
 
-    return jax.lax.fori_loop(0, cpl, body, out)
+    return jax.lax.fori_loop(0, cpl, body, (out, tele))
 
 
 def _bitmap_launch_impl(
-    out, bm_out, start, q, q_sig, db, db_sig, eps, band,
-    *, chunk, q_tile, db_tile, interpret,
+    out, bm_out, tele, start, q, q_sig, db, db_sig, eps, band,
+    *, chunk, q_tile, db_tile, interpret, telemetry=False,
 ):
     cpl = q.shape[0] // chunk
     qs = q.reshape(cpl, chunk, q.shape[1])
     qss = q_sig.reshape(cpl, chunk, q_sig.shape[1])
 
     def body(k, carry):
-        acc, bm = carry
+        acc, bm, tl = carry
         qk = jax.lax.dynamic_index_in_dim(qs, k, 0, keepdims=False)
         qsk = jax.lax.dynamic_index_in_dim(qss, k, 0, keepdims=False)
-        c, w = hamming_filter_pallas(
+        outk = hamming_filter_pallas(
             qk, db, qsk, db_sig, eps[0], band[0], band[1],
-            q_tile=q_tile, db_tile=db_tile, interpret=interpret, with_bitmap=True,
+            q_tile=q_tile, db_tile=db_tile, interpret=interpret,
+            with_bitmap=True, with_stats=telemetry,
         )
+        c, w = outk[0], outk[1]
+        if telemetry:
+            tl = jax.lax.dynamic_update_slice(
+                tl, _obs_device.sweep_stats_tile_sum(outk[2])[None],
+                (start // chunk + k, 0),
+            )
         acc = jax.lax.dynamic_update_slice(acc, c, (start + k * chunk,))
         bm = jax.lax.dynamic_update_slice(bm, w, (start + k * chunk, 0))
-        return acc, bm
+        return acc, bm, tl
 
-    return jax.lax.fori_loop(0, cpl, body, (out, bm_out))
+    return jax.lax.fori_loop(0, cpl, body, (out, bm_out, tele))
 
 
-_STATIC = ("chunk", "q_tile", "db_tile", "interpret")
+_STATIC = ("chunk", "q_tile", "db_tile", "interpret", "telemetry")
 _counts_launch = jax.jit(_counts_launch_impl, static_argnames=_STATIC)
 _counts_launch_donated = jax.jit(
-    _counts_launch_impl, static_argnames=_STATIC, donate_argnums=(0,)
+    _counts_launch_impl, static_argnames=_STATIC, donate_argnums=(0, 1)
 )
 _bitmap_launch = jax.jit(_bitmap_launch_impl, static_argnames=_STATIC)
 _bitmap_launch_donated = jax.jit(
-    _bitmap_launch_impl, static_argnames=_STATIC, donate_argnums=(0, 1)
+    _bitmap_launch_impl, static_argnames=_STATIC, donate_argnums=(0, 1, 2)
 )
 
 
@@ -255,6 +279,15 @@ def _sweep(
         _metrics.counter("sweep.launches").inc(plan.n_launches)
         q, q_sig = _pad_q(q, q_sig, plan.nq_padded)
         bitmap = kind == "bitmap"
+        # per-chunk occupancy telemetry rides the COUNT sweeps only (the
+        # engine's scan behind query_counts / serve / stream).  The bitmap
+        # sweeps feed the one-launch cluster pass, whose band occupancy is
+        # the *same* statistic the count path and the auto-tuner's
+        # record_occupancy already measure — and on interpret-mode backends
+        # the per-tile stats ops cost real wall time per chunk, so the
+        # clustering hot path keeps only its own per-round counters.
+        telemetry = _obs_device.device_enabled() and not bitmap
+        tele = None
         if mesh is not None:
             from ..distributed.index_plane import sharded_sweep_launch
 
@@ -270,24 +303,29 @@ def _sweep(
                         kind, q[sl], q_sig[sl], db, db_sig, eps_op, band_op,
                         mesh=mesh, axes=axes, chunk=plan.chunk, q_tile=q_tile,
                         db_tile=db_tile, interpret=interpret, depth=depth, n=n,
+                        telemetry=telemetry,
                     )
-                parts.append(part if bitmap else (part,))
+                parts.append(part if isinstance(part, tuple) else (part,))
             outs = tuple(
                 jnp.concatenate(p) if len(p) > 1 else p[0] for p in zip(*parts)
             )
+            if telemetry:
+                outs, tele = outs[:-1], outs[-1]
         else:
             db, db_sig = _pad_db(db, db_sig, db_tile)
             n_pad = db.shape[0] - n
             donated = _resolve_donate(donate)
+            tele0 = jnp.zeros((plan.n_launches * plan.cpl, 3), jnp.int32)
             if bitmap:
                 launch = _bitmap_launch_donated if donated else _bitmap_launch
                 outs = (
                     jnp.zeros((plan.nq_padded,), jnp.int32),
                     jnp.zeros((plan.nq_padded, db.shape[0] // 32), jnp.uint32),
+                    tele0,
                 )
             else:
                 launch = _counts_launch_donated if donated else _counts_launch
-                outs = (jnp.zeros((plan.nq_padded,), jnp.int32),)
+                outs = (jnp.zeros((plan.nq_padded,), jnp.int32), tele0)
             # donated-slab accounting: one fresh allocation per sweep;
             # every launch past the first threads (or copies) the slab
             _metrics.counter("sweep.slab_alloc").inc()
@@ -306,23 +344,32 @@ def _sweep(
                         *outs, jnp.int32(L * plan.rows_per_launch), q[sl], q_sig[sl],
                         db, db_sig, eps_op, band_op,
                         chunk=plan.chunk, q_tile=q_tile, db_tile=db_tile,
-                        interpret=interpret,
+                        interpret=interpret, telemetry=telemetry,
                     )
                 recompiles.delta()
-                if not bitmap:
-                    outs = (outs,)
+            if telemetry:
+                outs, tele = outs[:-1], outs[-1]
+            else:
+                outs = outs[:-1]
         out = outs[0]
         words_needed = -(-n // 32)
         if n_pad:
             out = out - _count_correction(q_sig, eps_op, band_op, n_pad)
         if not bitmap:
-            return np.asarray(jax.device_get(out)[:nq]).astype(np.int64)
+            # THE sweep sync: counts (and the telemetry slab) in one get
+            host = jax.device_get((out, tele) if telemetry else (out,))
+            if telemetry:
+                _obs_device.harvest_sweep_telemetry(host[1])
+            return np.asarray(host[0][:nq]).astype(np.int64)
         bm_out = outs[1]
         if n_pad:
             bm_out = (
                 bm_out[:, :words_needed] & _tail_word_mask(words_needed, n)[None, :]
             )
-        counts, bm = jax.device_get((out, bm_out))
+        # bitmap kind: telemetry is scoped off above, so the single sync
+        # fetches exactly the PR 8 pair
+        host = jax.device_get((out, bm_out))
+        counts, bm = host[0], host[1]
         return (
             np.asarray(counts)[:nq].astype(np.int64),
             np.ascontiguousarray(np.asarray(bm)[:nq, :words_needed]),
@@ -376,6 +423,12 @@ def sweep_bitmap_device(
         _metrics.counter("sweep.sweeps").inc()
         _metrics.counter("sweep.launches").inc(plan.n_launches)
         q, q_sig = _pad_q(q, q_sig, plan.nq_padded)
+        # no occupancy telemetry on this path (see _sweep): the bitmap
+        # feeds the one-launch cluster pass, which carries its own
+        # per-round counters — the band-occupancy statistic is already
+        # measured by the count sweeps and record_occupancy, and keeping
+        # the stats ops out of the interpreted kernel keeps the fused
+        # clustering's telemetry-on build within the SLO of the plain one
         if mesh is not None:
             from ..distributed.index_plane import sharded_sweep_launch
 
@@ -399,6 +452,10 @@ def sweep_bitmap_device(
             outs = (
                 jnp.zeros((plan.nq_padded,), jnp.int32),
                 jnp.zeros((plan.nq_padded, db.shape[0] // 32), jnp.uint32),
+                # stats placeholder: the launch signature always carries a
+                # telemetry slab (so the donated aliasing is unconditional);
+                # with telemetry off it passes through untouched
+                jnp.zeros((plan.n_launches * plan.cpl, 3), jnp.int32),
             )
             _metrics.counter("sweep.slab_alloc").inc()
             _metrics.counter(

@@ -110,7 +110,22 @@ def _tile_stats(accept, band):
     n_acc = jnp.sum(accept, dtype=jnp.int32)
     n_band = jnp.sum(band, dtype=jnp.int32)
     total = jnp.int32(accept.shape[0] * accept.shape[1])
-    return jnp.stack([n_acc, n_band, total - n_acc - n_band]).reshape(1, 1, 3)
+    return jnp.stack([n_acc, n_band, total - n_acc - n_band]).reshape(1, 3)
+
+
+def _accumulate_stats(stats_ref, accept, band):
+    """Fold one tile's occupancy into the single whole-call (1, 3)
+    stats block (revisited on every grid step, counts-style): cheaper
+    than a per-tile output — one small accumulate per tile instead of
+    a (q_tiles, db_tiles, 3) slab write, which is what keeps the
+    telemetry build of the sweep near the plain build's cost."""
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        stats_ref[...] = jnp.zeros_like(stats_ref)
+
+    stats_ref[...] += _tile_stats(accept, band)
 
 
 def _filter_count_stats_kernel(
@@ -123,7 +138,7 @@ def _filter_count_stats_kernel(
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
     accept, band = _tile_masks(qs_ref, dbs_ref, band_ref)
-    stats_ref[...] = _tile_stats(accept, band)
+    _accumulate_stats(stats_ref, accept, band)
     counts_ref[...] += jnp.sum(accept, axis=1, dtype=jnp.int32)
 
     @pl.when(jnp.any(band))
@@ -142,7 +157,7 @@ def _filter_count_bitmap_stats_kernel(
         counts_ref[...] = jnp.zeros_like(counts_ref)
 
     accept, band = _tile_masks(qs_ref, dbs_ref, band_ref)
-    stats_ref[...] = _tile_stats(accept, band)
+    _accumulate_stats(stats_ref, accept, band)
     any_band = jnp.any(band)
 
     @pl.when(any_band)
@@ -183,11 +198,13 @@ def hamming_filter_pallas(
     ``(t_lo, t_hi)`` is the Hamming band (``t_lo = -1`` = full verify).
     Both thresholds are traced, so sweeping eps never recompiles.
 
-    ``with_stats`` appends a (nq/q_tile, nd/db_tile, 3) int32 per-tile
-    occupancy output: [sure-accepts, band candidates, rejects] over the
-    tile's ``q_tile * db_tile`` pairs (padded rows included — the
-    caller sees raw tile occupancy, which is what decides whether the
-    tile's verify matmul ran).
+    ``with_stats`` appends a (1, 3) int32 whole-call occupancy output:
+    [sure-accepts, band candidates, rejects] summed over every tile's
+    ``q_tile * db_tile`` pairs (padded rows included — the caller sees
+    raw pair occupancy, which is what decides how many verify matmuls
+    ran).  Accumulated in-kernel across the sequential grid, so the
+    telemetry build adds one small block to the launch instead of a
+    per-tile slab.
     """
     nq, d = q.shape
     nd = db.shape[0]
@@ -206,8 +223,8 @@ def hamming_filter_pallas(
     dbs_spec = pl.BlockSpec((db_tile, w), lambda i, j: (j, 0))
     scalar_spec = pl.BlockSpec(memory_space=pl.ANY)
     counts_spec = pl.BlockSpec((q_tile,), lambda i, j: (i,))
-    stats_spec = pl.BlockSpec((1, 1, 3), lambda i, j: (i, j, 0))
-    stats_shape = jax.ShapeDtypeStruct((grid[0], grid[1], 3), jnp.int32)
+    stats_spec = pl.BlockSpec((1, 3), lambda i, j: (0, 0))
+    stats_shape = jax.ShapeDtypeStruct((1, 3), jnp.int32)
     in_specs = [q_spec, db_spec, qs_spec, dbs_spec, scalar_spec, scalar_spec]
     operands = (q, db, q_sig, db_sig, thresh, band_t)
 

@@ -86,10 +86,10 @@ def hamming_filter_count(
     the padded-row hits exactly.  ``t_lo=-1`` is full-verify mode.
 
     ``return_stats=True`` returns ``(counts, stats)`` where stats is the
-    kernel's raw (q_tiles, db_tiles, 3) per-tile occupancy —
-    [sure-accepts, band candidates, rejects] over the *padded* tile
-    grid (see ``hamming_filter_pallas``); the margin auto-tuner reads
-    the band column to price the verify matmuls a margin would cost.
+    kernel's raw (1, 3) whole-call occupancy — [sure-accepts, band
+    candidates, rejects] summed over the *padded* tile grid (see
+    ``hamming_filter_pallas``); the margin auto-tuner reads the band
+    column to price the verify matmuls a margin would cost.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -128,7 +128,7 @@ def hamming_filter_bitmap(
 ):
     """(counts, packed adjacency) with padded bits cleared; the bitmap
     covers ceil(nd/32) words.  ``t_lo=-1`` is full-verify mode.
-    ``return_stats=True`` appends the raw per-tile occupancy triple
+    ``return_stats=True`` appends the raw (1, 3) occupancy triple
     (see ``hamming_filter_count``)."""
     if interpret is None:
         interpret = default_interpret()

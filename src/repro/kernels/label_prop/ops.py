@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..hamming_filter.ops import _tail_word_mask, default_interpret
+from ...obs import device as _obs_device
 from ...obs import metrics as _metrics
 from .kernel import (
     DEFAULT_ROW_TILE,
@@ -132,6 +133,7 @@ def packed_cluster_fixpoint(
     word_tile: int = DEFAULT_WORD_TILE,
     interpret: bool = False,
     axes=None,
+    telemetry: bool = False,
 ):
     """Traceable core of the one-launch cluster pass.
 
@@ -150,13 +152,20 @@ def packed_cluster_fixpoint(
       n / cap: live points / total column capacity (static).
       axes: mesh axis name(s); per round only the (R,) s32 row minima
         ride a ``lax.pmin`` — packed words never enter a collective.
+      telemetry: ride four ``(max_iters,)`` s32 per-round vectors in
+        the while carry (frontier size, labels changed, pointer-jump
+        hops, psum'd shard gather wins) and return them as a sixth
+        output — small s32 vectors only, so the carry stays inside the
+        LAF106/LAF107 contract and the collective stays s32 (LAF202).
 
     Returns ``(labels (cap,), owner (cap,), col_sum (cap_local,),
     counts (R,), rounds)`` — labels[j] = min core index of j's core
     component (INT32_MAX on non-core columns), owner[j] = min executed
     core row adjacent to column j (border rule), col_sum = transposed
     partial-count sums for this shard's columns, counts = exact
-    neighbor counts per slab row.
+    neighbor counts per slab row.  With ``telemetry=True`` a trailing
+    ``tele`` tuple (4 × (max_iters,) s32, replicated under ``axes=``)
+    is appended.
     """
     r, w_loc = bitmap.shape
     cap_loc = w_loc * 32
@@ -175,11 +184,11 @@ def packed_cluster_fixpoint(
     big_rows = jnp.full((r,), BIG, jnp.int32)
 
     def cond(state):
-        _, changed, it = state
+        changed, it = state[1], state[2]
         return changed & (it < max_iters)
 
     def body(state):
-        lab, _, it = state
+        lab, _, it = state[0], state[1], state[2]
         # gather: per core row, the min label over its set bits —
         # shard-local slice of the replicated label vector, then an s32
         # min-reduce across shards
@@ -188,6 +197,12 @@ def packed_cluster_fixpoint(
             big_rows, lab_loc, bitmap,
             row_tile=row_tile, word_tile=word_tile, interpret=interpret,
         )
+        if telemetry:
+            # shard marginal: rows whose *local* gather already beats
+            # the incoming label — recorded shard-local here and psum'd
+            # once after the loop (a per-round collective would add a
+            # rendezvous to every round; the deferred vector psum is one)
+            wins = jnp.sum(core_r & (m < lab[safe_rows]), dtype=jnp.int32)
         if axes is not None:
             m = jax.lax.pmin(m, axes)
         new_r = jnp.where(core_r, jnp.minimum(lab[safe_rows], m), BIG)
@@ -196,12 +211,22 @@ def packed_cluster_fixpoint(
         new = lab.at[safe_rows].min(new_r)
         # pointer jumping: label <- label of my label
         jump = jnp.where(new < cap, new, 0)
-        new = jnp.where(new < cap, jnp.minimum(new, new[jump]), new)
-        return new, jnp.any(new != lab), it + 1
+        jumped = jnp.where(new < cap, jnp.minimum(new, new[jump]), new)
+        if not telemetry:
+            return jumped, jnp.any(jumped != lab), it + 1
+        front = jnp.sum(core_r & (new_r < lab[safe_rows]), dtype=jnp.int32)
+        hops = jnp.sum(jumped < new, dtype=jnp.int32)
+        chg = jnp.sum(jumped != lab, dtype=jnp.int32)
+        tele = _obs_device.cluster_telemetry_record(
+            state[3], it, front, chg, hops, wins
+        )
+        return jumped, chg > 0, it + 1, tele
 
-    labels, _, rounds = jax.lax.while_loop(
-        cond, body, (init, jnp.bool_(True), jnp.int32(0))
-    )
+    state0 = (init, jnp.bool_(True), jnp.int32(0))
+    if telemetry:
+        state0 = state0 + (_obs_device.cluster_telemetry_init(max_iters),)
+    final = jax.lax.while_loop(cond, body, state0)
+    labels, rounds = final[0], final[2]
     # border owner (min executed-core-row index per column) + transposed
     # partial-count sums, one launch, loop-invariant so outside the loop
     owner_loc, col_sum = col_reduce_pallas(
@@ -210,15 +235,27 @@ def packed_cluster_fixpoint(
         valid_r.astype(jnp.int32),
         row_tile=row_tile, word_tile=word_tile, interpret=interpret,
     )
-    return labels, owner_loc, col_sum, counts, rounds
+    outs = (labels, owner_loc, col_sum, counts, rounds)
+    if not telemetry:
+        return outs
+    tele = final[3]
+    if axes is not None:
+        # sum the shard-local gather wins across the mesh in ONE vector
+        # collective (frontier/changed/hops are computed from post-pmin
+        # quantities, replica-identical by construction)
+        tele = tele[:3] + (jax.lax.psum(tele[3], axes),)
+    return outs + (tele,)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n", "max_iters", "row_tile", "word_tile", "interpret"),
+    static_argnames=(
+        "n", "max_iters", "row_tile", "word_tile", "interpret", "telemetry"
+    ),
 )
 def _packed_cluster_jit(
-    bitmap, rows, tau, *, n, max_iters, row_tile, word_tile, interpret
+    bitmap, rows, tau, *, n, max_iters, row_tile, word_tile, interpret,
+    telemetry=False,
 ):
     r, w = bitmap.shape
     bitmap = bitmap & _tail_word_mask(w, n)[None, :]
@@ -228,12 +265,15 @@ def _packed_cluster_jit(
         bitmap = jnp.pad(bitmap, ((0, r_pad), (0, w_pad)))
         rows = jnp.pad(rows.astype(jnp.int32), (0, r_pad), constant_values=n)
     cap = (w + w_pad) * 32
-    labels, owner, col_sum, counts, rounds = packed_cluster_fixpoint(
+    outs = packed_cluster_fixpoint(
         bitmap, rows, tau, jnp.int32(0),
         n=n, cap=cap, max_iters=max_iters,
         row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+        telemetry=telemetry,
     )
-    return labels, owner, col_sum, counts[:r], rounds
+    labels, owner, col_sum, counts, rounds = outs[:5]
+    head = (labels, owner, col_sum, counts[:r], rounds)
+    return head + outs[5:]
 
 
 def packed_cluster_labels(
@@ -246,6 +286,7 @@ def packed_cluster_labels(
     row_tile: int = DEFAULT_ROW_TILE,
     word_tile: int = DEFAULT_WORD_TILE,
     interpret=None,
+    telemetry=None,
 ):
     """One-launch single-device cluster pass over a packed sweep slab.
 
@@ -255,9 +296,13 @@ def packed_cluster_labels(
     represent.  Returns device arrays
     ``(labels, owner, col_sum, counts, rounds)`` — see
     :func:`packed_cluster_fixpoint`; nothing syncs to the host.
+    ``telemetry`` (default: the ``repro.obs`` device switch) appends
+    the per-round telemetry tuple as a sixth output.
     """
     if interpret is None:
         interpret = default_interpret()
+    if telemetry is None:
+        telemetry = _obs_device.device_enabled()
     row_tile = min(row_tile, max(bitmap.shape[0], 1))
     word_tile = min(word_tile, max(bitmap.shape[1], 1))
     _metrics.counter("labelprop.launches").inc()
@@ -265,6 +310,7 @@ def packed_cluster_labels(
         bitmap, jnp.asarray(rows, jnp.int32), tau,
         n=n, max_iters=max_iters,
         row_tile=row_tile, word_tile=word_tile, interpret=interpret,
+        telemetry=bool(telemetry),
     )
 
 

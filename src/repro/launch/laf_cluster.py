@@ -274,6 +274,12 @@ def build_one_launch_cluster(
     row_tile = math.gcd(frontier, 256)
     word_tile = math.gcd(w // n_shards, 64)
     interpret = default_interpret()
+    if base.telemetry == "auto":
+        from ..obs import device_enabled
+
+        tele_on = device_enabled()
+    else:
+        tele_on = bool(base.telemetry)
 
     def cluster_one_launch(bitmap, rows, tau):
         cap_loc = bitmap.shape[1] * 32
@@ -283,14 +289,18 @@ def build_one_launch_cluster(
         return packed_cluster_fixpoint(
             bitmap, rows, tau[0], idx * cap_loc,
             n=n, cap=cap, row_tile=row_tile, word_tile=word_tile,
-            interpret=interpret, axes=axes,
+            interpret=interpret, axes=axes, telemetry=tele_on,
         )
 
+    out_specs = (P(None), P(axes), P(axes), P(None), P(None))
+    if tele_on:
+        # per-round telemetry vectors: psum'd in-loop, replicated out
+        out_specs = out_specs + ((P(None),) * 4,)
     step = shard_map(
         cluster_one_launch,
         mesh=mesh,
         in_specs=(P(None, axes), P(None), P(None)),
-        out_specs=(P(None), P(axes), P(axes), P(None), P(None)),
+        out_specs=out_specs,
         check_rep=False,
     )
     args = (
@@ -306,10 +316,12 @@ def build_one_launch_cluster(
         replicated(mesh),      # counts (R,) — aliases the donated rows
         replicated(mesh),      # rounds
     )
+    if tele_on:
+        out_sh = out_sh + (tuple(replicated(mesh) for _ in range(4)),)
     meta = {
         "kind": "one_launch_cluster", "n_points": n, "cap": cap,
         "frontier": frontier, "index_axes": axes, "n_shards": n_shards,
-        "row_tile": row_tile, "word_tile": word_tile,
+        "row_tile": row_tile, "word_tile": word_tile, "telemetry": tele_on,
         # rows (R,) i32 -> counts (R,) i32: same shape/dtype/sharding
         "donate_argnums": (1,),
     }

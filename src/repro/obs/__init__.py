@@ -32,7 +32,10 @@ from __future__ import annotations
 import os
 from typing import Optional
 
+from . import device as device_telemetry
 from . import metrics
+from . import slo
+from .device import device_enabled, disable_device, enable_device
 from .log import configure as configure_logging
 from .log import get_logger, log_event, rate_limited_warn
 from .trace import (
@@ -50,6 +53,10 @@ __all__ = [
     "disable",
     "trace_enabled",
     "metrics_enabled",
+    "device_telemetry",
+    "device_enabled",
+    "enable_device",
+    "disable_device",
     "span",
     "spans",
     "clear_trace",
@@ -57,6 +64,7 @@ __all__ = [
     "export_chrome_trace",
     "SpanRecord",
     "metrics",
+    "slo",
     "get_logger",
     "log_event",
     "rate_limited_warn",
@@ -115,6 +123,7 @@ def enable(
     metrics_on: Optional[bool] = None,
     *,
     jax_annotations: bool = False,
+    telemetry: Optional[bool] = None,
 ) -> None:
     """Turn observability on.
 
@@ -122,7 +131,12 @@ def enable(
     ``metrics_on`` (default: same as ``trace``... both on when called
     bare) — counters/gauges/histograms record; ``jax_annotations`` —
     additionally wrap every span in ``jax.profiler.TraceAnnotation`` so
-    span names land inside XLA profiler captures.
+    span names land inside XLA profiler captures; ``telemetry`` —
+    device-resident in-launch counters (per-round cluster vectors,
+    per-chunk sweep occupancy) riding the fused loop carries, harvested
+    at the existing single ``device_get``.  ``telemetry=None`` leaves
+    the device switch as-is (so a bare re-``enable()`` never toggles
+    compiled program shapes under a caller's feet).
     """
     if metrics_on is None:
         metrics_on = True
@@ -133,12 +147,15 @@ def enable(
         _register_jax_monitor()
     else:
         metrics.disable()
+    if telemetry is not None:
+        (enable_device if telemetry else disable_device)()
 
 
 def disable() -> None:
     _trace_state.trace = False
     _trace_state.jax_annotations = False
     metrics.disable()
+    disable_device()
 
 
 def trace_enabled() -> bool:
@@ -153,7 +170,9 @@ def enable_from_env(environ=None) -> bool:
     """Apply the ``REPRO_OBS`` knob; returns whether anything enabled.
 
     ``1``/``true``/``both`` — trace + metrics; ``trace`` / ``metrics``
-    — just that half; unset/``0`` — leave everything off.
+    — just that half; ``device`` — trace + metrics + device-resident
+    telemetry (the in-launch counters); unset/``0`` — leave everything
+    off.
     """
     val = (environ if environ is not None else os.environ).get("REPRO_OBS", "")
     val = val.strip().lower()
@@ -163,6 +182,8 @@ def enable_from_env(environ=None) -> bool:
         enable(trace=True, metrics_on=False)
     elif val == "metrics":
         enable(trace=False, metrics_on=True)
+    elif val == "device":
+        enable(trace=True, metrics_on=True, telemetry=True)
     else:
         return False
     return True

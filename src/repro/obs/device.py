@@ -1,0 +1,225 @@
+"""Device-resident telemetry: in-launch counters riding the fused loops.
+
+PR 8 fused the entire clustering into one jitted ``lax.while_loop``
+with exactly one ``device_get`` — which made the host-span layer
+structurally blind inside the launch: a Perfetto trace shows one
+opaque ``laf.label_prop`` interval where the per-round dynamics
+(frontier collapse, pointer-jump savings, shard balance) actually
+live.  This module restores that visibility without adding a single
+host sync:
+
+* a small **s32 telemetry pytree** rides the carry of every fused
+  loop — per-round ``(max_iters,)`` vectors in
+  ``packed_cluster_fixpoint`` (frontier size, labels changed,
+  pointer-jump hops, psum'd shard gather wins), per-chunk
+  ``[accept, band, reject]`` occupancy triples in the *count*-sweep
+  engine's chunk loop (from the kernel's ``with_stats=`` counters —
+  the bitmap sweep feeding the cluster pass skips them: same
+  statistic, and interpret-mode stats ops would tax the hot path);
+* the vectors are **harvested at the existing single** ``device_get``
+  (the one-launch discipline is untouched — ``laf.cluster.device_get``
+  stays 1 with telemetry on) and folded into the metrics registry;
+* per-round values become **synthetic child spans** under the
+  measured ``laf.label_prop`` interval, so Perfetto shows the round
+  structure of the fused program and ``coverage()`` of the one-launch
+  cluster pass stays attributable.
+
+Everything is **off by default** (``_state.on``): with device
+telemetry disabled the fused programs compile without the extra carry
+slots and outputs — byte-identical to the PR 8 lowerings.  Enable via
+``obs.enable(telemetry=True)`` or ``REPRO_OBS=device``.
+
+The carry contract the laf-lint LAF107 check pins: telemetry carries
+are s32/f32 **scalars or small fixed-size vectors** only — never
+packed words (LAF106 territory), never O(n)-per-round matrices.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from . import metrics as _metrics
+from . import trace as _trace
+
+__all__ = [
+    "enable_device",
+    "disable_device",
+    "device_enabled",
+    "MAX_ROUNDS",
+    "SWEEP_STAT_FIELDS",
+    "CLUSTER_ROUND_FIELDS",
+    "cluster_telemetry_init",
+    "cluster_telemetry_record",
+    "sweep_stats_tile_sum",
+    "harvest_cluster_telemetry",
+    "harvest_sweep_telemetry",
+    "emit_round_spans",
+    "last_sweep_stats",
+]
+
+# default round budget of the cluster fixpoint (mirrors the
+# ``max_iters=64`` default of ``packed_cluster_fixpoint``) — the
+# telemetry vectors are sized to it, so they stay "small vectors"
+# under the LAF107 carry contract regardless of n
+MAX_ROUNDS = 64
+
+SWEEP_STAT_FIELDS = ("accept", "band", "reject")
+CLUSTER_ROUND_FIELDS = ("frontier", "changed", "hops", "shard_wins")
+
+
+class _State:
+    on: bool = False
+
+
+_state = _State()
+_lock = threading.Lock()
+# last harvested per-chunk sweep occupancy (host ndarray (n_chunks, 3))
+# — the bench/auto-tuner read side of the in-launch counters
+_last_sweep_stats = None
+
+
+def enable_device() -> None:
+    _state.on = True
+
+
+def disable_device() -> None:
+    _state.on = False
+
+
+def device_enabled() -> bool:
+    return _state.on
+
+
+# ---------------------------------------------------------------------------
+# traced side: init + per-round record (called from inside fused loops)
+# ---------------------------------------------------------------------------
+
+
+def cluster_telemetry_init(max_iters: int = MAX_ROUNDS):
+    """Fresh per-round telemetry pytree for one cluster fixpoint: a
+    tuple of four ``(max_iters,)`` s32 vectors, one slot per round, in
+    ``CLUSTER_ROUND_FIELDS`` order.  Lives in the ``while`` carry —
+    s32 small vectors only (the LAF106/LAF107 carry contract)."""
+    import jax.numpy as jnp
+
+    return tuple(
+        jnp.zeros((max_iters,), jnp.int32) for _ in CLUSTER_ROUND_FIELDS
+    )
+
+
+def cluster_telemetry_record(tele, it, frontier, changed, hops, shard_wins):
+    """Write one round's scalars into slot ``it`` of each vector
+    (traced; ``it`` is the loop counter riding the same carry)."""
+    import jax
+    import jax.numpy as jnp
+
+    vals = (frontier, changed, hops, shard_wins)
+    return tuple(
+        jax.lax.dynamic_update_slice(
+            vec, jnp.asarray(v, jnp.int32)[None], (it,)
+        )
+        for vec, v in zip(tele, vals)
+    )
+
+
+def sweep_stats_tile_sum(stats):
+    """Reduce the kernel's raw ``(..., 3)`` occupancy output (a (1, 3)
+    whole-call block since the in-kernel grid accumulation) to one
+    ``(3,)`` s32 triple for the chunk (traced)."""
+    import jax.numpy as jnp
+
+    return stats.reshape(-1, 3).sum(axis=0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# host side: harvest at the single device_get, fold into metrics/spans
+# ---------------------------------------------------------------------------
+
+
+def harvest_cluster_telemetry(tele_host, rounds: int) -> Dict[str, List[int]]:
+    """Fold fetched per-round vectors into the metrics registry.
+
+    ``tele_host`` is the host-side tuple (the fixpoint's telemetry
+    output after the caller's ``device_get`` — this function never
+    syncs).  Returns ``{field: [per-round values]}`` trimmed to the
+    executed ``rounds``; counters ``laf.telemetry.<field>`` accumulate
+    the per-run totals.
+    """
+    rounds = int(rounds)
+    out: Dict[str, List[int]] = {}
+    for name, vec in zip(CLUSTER_ROUND_FIELDS, tele_host):
+        vals = [int(v) for v in list(vec)[:rounds]]
+        out[name] = vals
+        _metrics.counter(f"laf.telemetry.{name}").inc(sum(vals))
+    return out
+
+
+def harvest_sweep_telemetry(stats_host) -> Optional[Dict[str, int]]:
+    """Fold the fetched per-chunk ``(n_chunks, 3)`` occupancy slab
+    into ``sweep.tele.{accept,band,reject}`` counters (raw kernel-grid
+    values — pad tiles included, same convention as the auto-tuner's
+    ``record_occupancy``).  Keeps the slab for :func:`last_sweep_stats`.
+    """
+    global _last_sweep_stats
+    if stats_host is None:
+        return None
+    import numpy as np
+
+    arr = np.asarray(stats_host)
+    with _lock:
+        _last_sweep_stats = arr
+    totals = arr.sum(axis=0)
+    out = {}
+    for i, name in enumerate(SWEEP_STAT_FIELDS):
+        out[name] = int(totals[i])
+        _metrics.counter(f"sweep.tele.{name}").inc(int(totals[i]))
+    return out
+
+
+def last_sweep_stats():
+    """Most recent harvested per-chunk occupancy slab (host ndarray
+    ``(n_chunks, 3)``) or None."""
+    with _lock:
+        return _last_sweep_stats
+
+
+def emit_round_spans(
+    parent: Optional["_trace.SpanRecord"],
+    per_round: Dict[str, List[int]],
+    name: str = "laf.cluster.round",
+) -> List["_trace.SpanRecord"]:
+    """Synthesize per-round child spans under a measured parent span.
+
+    The fused loop's rounds have no host-observable boundaries — the
+    parent interval (the ``laf.label_prop`` span, which closes at the
+    single ``device_get``) is subdivided into ``rounds`` equal slices,
+    each carrying that round's telemetry as attributes.  The records
+    ride the normal trace buffer, so ``export_chrome_trace`` shows
+    them nested under the parent in Perfetto and ``coverage(parent)``
+    sees the fused interval fully attributed.
+    """
+    if parent is None or not _trace._state.trace:
+        return []
+    rounds = len(next(iter(per_round.values()), []))
+    if rounds <= 0 or parent.dur <= 0:
+        return []
+    slice_dur = parent.dur / rounds
+    recs = []
+    for i in range(rounds):
+        rec = _trace.SpanRecord(
+            name,
+            t0=parent.t0 + i * slice_dur,
+            dur=slice_dur,
+            span_id=next(_trace._ids),
+            parent_id=parent.span_id,
+            tid=parent.tid,
+            attrs=dict(
+                {f: vals[i] for f, vals in per_round.items()},
+                round=i, synthetic=True,
+            ),
+        )
+        recs.append(rec)
+    with _trace._lock:
+        _trace._records.extend(recs)
+    return recs

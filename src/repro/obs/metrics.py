@@ -121,11 +121,17 @@ def default_buckets(
 class Histogram:
     """Fixed log-bucket histogram with interpolated quantiles.
 
-    Values below the first bound land in bucket 0, above the last in
-    the overflow bucket; quantile() interpolates geometrically inside
-    the landing bucket (log-uniform within-bucket assumption — the
-    natural prior for latencies), so against exact percentiles the
-    error is bounded by one bucket ratio (~12% at the default layout).
+    Values at or below the first bound — including the exact zeros a
+    sub-clock-resolution duration measures to on fast assigns — are
+    **clamped to the first bound** and land in bucket 0: a log-bucket
+    layout has no bucket for 0, and letting raw zeros drive ``_min``
+    used to drag the geometric interpolation toward 1e-12, skewing p50
+    far below anything that was ever observed.  Values above the last
+    bound land in the overflow bucket.  quantile() interpolates
+    geometrically inside the landing bucket (log-uniform within-bucket
+    assumption — the natural prior for latencies), so against exact
+    percentiles the error is bounded by one bucket ratio (~12% at the
+    default layout).
     """
 
     __slots__ = ("name", "help", "bounds", "_counts", "_n", "_sum", "_min", "_max", "_lk")
@@ -144,7 +150,14 @@ class Histogram:
         if not _state.on:
             return
         v = float(v)
-        i = bisect_right(self.bounds, v)
+        if v <= self.bounds[0]:
+            # clock-resolution artifact (0.0 from perf_counter pairs on
+            # a fast path, or any sub-resolution duration): clamp into
+            # the first bucket so min/quantiles stay on the bucket grid
+            v = self.bounds[0]
+            i = 0
+        else:
+            i = bisect_right(self.bounds, v)
         with self._lk:
             self._counts[i] += 1
             self._n += 1

@@ -34,7 +34,7 @@ import numpy as np
 from ..configs.laf_dbscan import StreamConfig
 from ..core.range_query import pack_bitmap, unpack_bitmap
 from ..index import make_backend
-from ..obs import metrics as _metrics, span as _span
+from ..obs import metrics as _metrics, slo as _slo, span as _span
 from .state import StreamingClusterState
 
 __all__ = ["StreamingLAF", "IngestReport"]
@@ -169,6 +169,13 @@ class StreamingLAF:
         # (or rebuild) changes the database the report describes
         rep.n_points = self.state.n
         rep.n_clusters = self.state.n_clusters
+        if _metrics.enabled():
+            # per-batch SLO sweep with the batch's derived skip rate —
+            # violations surface as rate-limited slo.violation lines
+            _slo.check_and_alert(
+                _slo.INGEST_SLOS,
+                values={"ingest.skip_rate": rep.n_skipped / max(rep.n_new, 1)},
+            )
         return rep
 
     def _absorb(self, batch: np.ndarray) -> IngestReport:

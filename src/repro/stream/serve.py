@@ -35,7 +35,7 @@ from typing import Optional
 import numpy as np
 
 from ..index.signatures import band_hits, hamming_numpy, sign_signatures
-from ..obs import metrics as _metrics, span as _span
+from ..obs import metrics as _metrics, slo as _slo, span as _span
 
 __all__ = ["AssignResult", "ClusterIndex", "bucket_shape"]
 
@@ -169,9 +169,14 @@ class ClusterIndex:
             _metrics.histogram(
                 "serve.assign.latency_s", "assign() wall seconds per call"
             ).observe(time.perf_counter() - t0)
-            _metrics.counter("serve.assign.calls").inc()
+            calls = _metrics.counter("serve.assign.calls")
+            calls.inc()
             _metrics.counter("serve.assign.queries").inc(queries.shape[0])
             _metrics.gauge("serve.shortlist").set(min(shortlist, self.n_clusters))
+            # periodic SLO sweep: the p99 rule fires (rate-limited) as a
+            # structured slo.violation line, never an exception
+            if calls.value % _slo.EVAL_EVERY_CALLS == 0:
+                _slo.check_and_alert(_slo.SERVE_SLOS)
         return res
 
     def _assign(

@@ -1,0 +1,36 @@
+"""Corpus BAD: a 2-D per-round telemetry matrix rides the fixpoint's
+while carry — an O(rounds x n) buffer rebuilt every iteration where the
+carry contract allows only scalars and small 1-D vectors.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build():
+    def run(labels, per_point):
+        def cond(state):
+            _, _, it = state
+            return it < 4
+
+        def body(state):
+            lab, tele, it = state
+            new = jnp.minimum(lab, jnp.roll(lab, 1))
+            # per-round *per-point* deltas: a (rounds, n) matrix in the
+            # carry — slab-sized state riding the round loop
+            tele = jax.lax.dynamic_update_slice(
+                tele, (new != lab).astype(jnp.int32)[None, :], (it, 0)
+            )
+            return new, tele, it + 1
+
+        lab, tele, _ = jax.lax.while_loop(
+            cond, body, (labels, per_point, jnp.int32(0))
+        )
+        return lab, tele
+
+    return {
+        "jaxpr": jax.make_jaxpr(run)(
+            jnp.zeros((256,), jnp.int32), jnp.zeros((8, 256), jnp.int32)
+        )
+    }

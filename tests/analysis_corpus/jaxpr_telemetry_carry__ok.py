@@ -1,0 +1,33 @@
+"""Corpus OK twin: the telemetry carry contract done right — the label
+vector (1-D, well under the size ceiling) plus per-round s32 *scalar*
+counters accumulated into a small (max_iters,) vector.
+
+Imported and executed by the corpus runner via build().
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build():
+    def run(labels, tele):
+        def cond(state):
+            _, _, it = state
+            return it < 4
+
+        def body(state):
+            lab, tl, it = state
+            new = jnp.minimum(lab, jnp.roll(lab, 1))
+            changed = jnp.sum(new != lab, dtype=jnp.int32)
+            tl = jax.lax.dynamic_update_slice(tl, changed[None], (it,))
+            return new, tl, it + 1
+
+        lab, tl, _ = jax.lax.while_loop(
+            cond, body, (labels, tele, jnp.int32(0))
+        )
+        return lab, tl
+
+    return {
+        "jaxpr": jax.make_jaxpr(run)(
+            jnp.zeros((2048,), jnp.int32), jnp.zeros((64,), jnp.int32)
+        )
+    }

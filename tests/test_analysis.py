@@ -39,12 +39,13 @@ _AST_ONLY = {
 }
 
 
-def test_registry_loads_thirteen_checks():
+def test_registry_loads_fourteen_checks():
     load_all_checks()
-    assert len(CHECKS) == 13
+    assert len(CHECKS) == 14
     codes = sorted(s.code for s in CHECKS.values())
     assert codes == [
         "LAF101", "LAF102", "LAF103", "LAF104", "LAF105", "LAF106",
+        "LAF107",
         "LAF201", "LAF202", "LAF203",
         "LAF301", "LAF302", "LAF303", "LAF304",
     ]
@@ -57,7 +58,7 @@ def test_list_checks_is_jax_free():
         "import sys\n"
         "from repro.analysis import load_all_checks, CHECKS\n"
         "load_all_checks()\n"
-        "assert len(CHECKS) == 13\n"
+        "assert len(CHECKS) == 14\n"
         "assert 'jax' not in sys.modules, 'listing checks imported jax'\n"
         "print('JAXFREE-OK')\n"
     )
@@ -177,6 +178,7 @@ def test_serve_assign_target_donation_survives():
     from repro.analysis.targets import Targets
 
     t = Targets().get("serve_assign")
-    assert t.n_donated == 2
+    # counts + bitmap + telemetry slabs (the target pins telemetry=True)
+    assert t.n_donated == 3
     assert check_donation_text(t.lowered_text, t.n_donated, t.label) == []
     assert check_hlo_text(t.hlo, t.label, byte_budget=t.byte_budget) == []
