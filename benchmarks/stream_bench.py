@@ -13,9 +13,19 @@ Quality is checked by ARI between the streamed labels and the refit
 labels.  Serving latency is measured per single-query ``assign`` call
 (p50/p95 over ``--queries`` calls) against the final snapshot.
 
+``--failover`` instead benchmarks the durable plane
+(``repro.stream.durability``): the same traffic rides a
+``DurableStream`` (WAL per batch + periodic snapshots), the primary
+"dies" with a snapshot lag and an un-rotated WAL tail, and a replica is
+recovered from disk.  Reported: snapshot overhead (durable vs plain
+ingest p50), recovery time, WAL replay throughput, and the ARI of the
+recovered labels vs the uninterrupted run (the kill-restore parity
+acceptance — 1.0 means the replica is label-identical).
+
   PYTHONPATH=src python -m benchmarks.stream_bench                    # 20k -> 40k, d=768
   PYTHONPATH=src python -m benchmarks.stream_bench --n0 2000 --n 4000 --d 64 --n-bits 128
   PYTHONPATH=src python -m benchmarks.stream_bench --json BENCH_PR4.json   # CI artifact
+  PYTHONPATH=src python -m benchmarks.stream_bench --failover --json BENCH_PR10.json
 """
 
 from __future__ import annotations
@@ -138,6 +148,83 @@ def run(args) -> dict:
     )
 
 
+def run_failover(args) -> dict:
+    import tempfile
+    import time
+
+    from repro.core.metrics import adjusted_rand_index
+    from repro.stream import DurableStream
+
+    data = _dataset(args.n, args.d, seed=0)
+    step = -(-args.n // args.batches)
+    batches = [data[i : i + step] for i in range(0, args.n, step)]
+    fsync = not args.no_fsync
+
+    # -- plain ingest baseline: per-batch p50 + reference labels -----------
+    bare = _fresh_stream(args)
+    bare_s = [bare.partial_fit(b).elapsed_s for b in batches]
+    ingest_p50 = float(np.median(bare_s))
+    ref_labels = bare.labels()
+
+    with tempfile.TemporaryDirectory() as root:
+        # -- durable primary: WAL per batch + periodic snapshots -----------
+        primary = DurableStream(
+            _fresh_stream(args), root,
+            snapshot_every=args.snapshot_every, fsync=fsync,
+        )
+        dur_s = []
+        for b in batches:
+            t0 = time.perf_counter()
+            primary.partial_fit(b)
+            dur_s.append(time.perf_counter() - t0)
+        durable_p50 = float(np.median(dur_s))
+        # the primary dies here: no close(), the WAL tail past the last
+        # snapshot is what recovery must replay
+        replica = DurableStream.recover(
+            root, lambda: _fresh_stream(args), fsync=fsync
+        )
+        info = dict(replica.recovery_info)
+        ari = adjusted_rand_index(replica.labels(), ref_labels)
+        replica.close()
+        primary.close()
+
+    replay_rate = info["wal_rows"] / max(info["replay_s"], 1e-9)
+    overhead = durable_p50 / max(ingest_p50, 1e-9) - 1.0
+    print(
+        f"failover: {args.n} rows / {args.batches} batches, snapshot every "
+        f"{args.snapshot_every} (fsync={fsync})\n"
+        f"  ingest p50 {ingest_p50 * 1e3:.1f} ms -> durable p50 "
+        f"{durable_p50 * 1e3:.1f} ms (snapshot overhead {overhead:+.1%})\n"
+        f"  recovery {info['recovery_s']:.3f}s = restore {info['restore_s']:.3f}s "
+        f"(snapshot step {info['snapshot_step']}) + replay "
+        f"{info['replay_s']:.3f}s ({info['wal_records']} records, "
+        f"{info['wal_rows']} rows, {replay_rate:,.0f} rows/s)\n"
+        f"  ARI recovered-vs-uninterrupted: {ari:.4f}"
+    )
+
+    return dict(
+        mode="failover",
+        n=args.n, d=args.d, n_bits=args.n_bits, eps=args.eps, tau=args.tau,
+        device=args.device, n_batches=args.batches,
+        failover=dict(
+            snapshot_every=args.snapshot_every,
+            fsync=fsync,
+            ingest_p50_s=ingest_p50,
+            durable_p50_s=durable_p50,
+            snapshot_overhead=overhead,
+            recovery_s=float(info["recovery_s"]),
+            restore_s=float(info["restore_s"]),
+            replay_s=float(info["replay_s"]),
+            snapshot_step=int(info["snapshot_step"]),
+            seq=int(info["seq"]),
+            wal_records=int(info["wal_records"]),
+            wal_rows=int(info["wal_rows"]),
+            wal_replay_rows_per_s=float(replay_rate),
+            ari_recovered=float(ari),
+        ),
+    )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--n0", type=int, default=20000, help="warm database size")
@@ -149,10 +236,18 @@ def main():
     ap.add_argument("--tau", type=int, default=5)
     ap.add_argument("--device", default="auto")
     ap.add_argument("--queries", type=int, default=200)
+    ap.add_argument("--failover", action="store_true",
+                    help="benchmark the durable plane: snapshot overhead, "
+                    "recovery time, WAL replay throughput, recovered-ARI")
+    ap.add_argument("--snapshot-every", type=int, default=3,
+                    help="failover: batches between snapshots (a non-divisor "
+                    "of --batches leaves a WAL tail for recovery to replay)")
+    ap.add_argument("--no-fsync", action="store_true",
+                    help="failover: skip per-append fsync (CI-runner mode)")
     ap.add_argument("--json", type=Path, default=None)
     args = ap.parse_args()
 
-    payload = run(args)
+    payload = run_failover(args) if args.failover else run(args)
     if args.json:
         args.json.write_text(json.dumps(payload, indent=2))
         print(f"wrote {args.json}")

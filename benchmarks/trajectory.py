@@ -62,7 +62,10 @@ METRICS: Dict[str, Tuple[str, bool]] = {
     # is ill-conditioned — index_bench --max-telemetry-overhead enforces
     # the absolute <5% bound instead
     "span_coverage": ("higher", False),
+    "ari_recovered": ("higher", False),
     # wall-clock-derived — loose gate (shared CI runner)
+    "recovery_s": ("lower", True),
+    "wal_replay_rows_per_s": ("higher", True),
     "best_one_launch_speedup": ("higher", True),
     "best_pipelined_speedup": ("higher", True),
     "best_cluster_speedup": ("higher", True),

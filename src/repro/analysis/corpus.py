@@ -23,6 +23,11 @@ Entry naming: ``<check id, dashes as underscores>__bad`` /
   ``signatures(n) -> hashable`` (the compile signature for input size
   ``n``) and ``bound(n_max) -> int``; the runner counts distinct
   signatures over ``1..n_max`` against the bound.
+* ``jaxpr-restore-replica`` — a ``.py`` module whose ``build()``
+  returns ``{"pre_signatures": [...], "post_signatures": [...]}`` (the
+  compile signatures a replica observed before the crash and after its
+  restore); the runner flags any post-restore signature absent from
+  the pre-crash set.
 """
 
 from __future__ import annotations
@@ -118,6 +123,12 @@ def _eval_entry(check_id: str, path: Path) -> List[Finding]:
             return [Finding(check_id, str(path), 0, "corpus entry failed to parse")]
         return ast_lint.filter_inline_suppressed(
             jaxpr_checks.check_file_donation_reuse(path, tree, str(path)), lines
+        )
+    if check_id == "jaxpr-restore-replica":
+        mod = _load_module(path)
+        built = mod.build()
+        return jaxpr_checks.check_restore_signatures(
+            built["pre_signatures"], built["post_signatures"], label
         )
     if check_id == "jaxpr-recompile-lattice":
         mod = _load_module(path)

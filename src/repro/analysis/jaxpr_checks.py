@@ -39,6 +39,14 @@ entry points (the standard targets in :mod:`.targets`).
   ``bucket_shape`` image over any traffic, and (dynamic, probed with
   metrics on) the ``obs.PAIRED_COUNTERS`` contract that sweep
   recompiles move 1:1 with capacity doublings.
+* ``jaxpr-restore-replica`` (LAF108) — a replica restored from a
+  snapshot reuses the pre-crash compile signatures: ``state_import``
+  must reproduce the *capacity-shaped* device operands (including
+  post-``partial_fit`` append slack), so re-running the same query
+  shapes after a restore adds zero new entries to the recompile
+  lattice.  A restore that trims buffers to the exact row count
+  compiles a fresh signature on the very first post-recovery sweep —
+  recovery time then includes a silent engine recompile.
 
 jax imports are deferred to call time so ``--list-checks`` stays
 jax-free.
@@ -65,6 +73,7 @@ __all__ = [
     "check_jaxpr_callbacks",
     "check_jaxpr_packed_while_carry",
     "check_jaxpr_shardmaps",
+    "check_restore_signatures",
     "taint_shard_map_outputs",
 ]
 
@@ -759,3 +768,107 @@ def _check_recompile_lattice(ctx) -> List[Finding]:
     if getattr(ctx, "dynamic", True):
         findings.extend(_paired_counter_findings())
     return findings
+
+
+# ---------------------------------------------------------------------------
+# LAF108: restored replicas reuse pre-crash compile signatures
+# ---------------------------------------------------------------------------
+
+
+def check_restore_signatures(pre, post, label: str) -> List[Finding]:
+    """The restore contract as a pure predicate: every compile signature
+    observed after a restore must already exist in the pre-crash set.
+
+    ``pre`` / ``post`` are iterables of hashable signatures (operand
+    shape tuples, or whatever the caller quantizes compiles by).  The
+    corpus twins feed this directly; the dynamic probe asserts the same
+    thing through the live ``sweep.recompiles`` counter.
+    """
+    pre_set = set(pre)
+    fresh = sorted({s for s in post if s not in pre_set}, key=repr)
+    if fresh:
+        return [
+            Finding(
+                "jaxpr-restore-replica", label, 0,
+                f"restore introduced {len(fresh)} compile signature(s) "
+                f"absent before the crash: {fresh[:3]!r} — the restored "
+                f"replica pays an engine recompile on its first query",
+                hint="state_import must rebuild the capacity-shaped "
+                "buffers (append slack included), not trim to the exact "
+                "row count",
+            )
+        ]
+    return []
+
+
+def _restore_probe_findings() -> List[Finding]:
+    """Dynamic probe: warm the sweep compile lattice on a backend with
+    post-``partial_fit`` append slack, export/import its state into a
+    fresh instance, re-run the same query shapes, and require zero new
+    ``sweep.recompiles`` (the jitted launches are module-level, so a
+    faithful restore hits the pre-crash executable cache)."""
+    import numpy as np
+
+    from .. import obs
+    from ..data.synthetic import make_angular_clusters
+    from ..index import RandomProjectionBackend
+    from ..obs import metrics
+
+    # geometry deliberately disjoint from the LAF105 probe / test_obs
+    # workload (d=48, n_bits=128): this probe also runs in-process from
+    # tier-1, and sharing operand shapes with the recompile-lattice
+    # workload would pre-warm the module-level jit caches it measures
+    kw = dict(
+        device=True, interpret=True, sweep=True,
+        n_bits=128, margin=3.0, seed=3, chunk=64, q_tile=32, db_tile=64,
+    )
+    was_trace, was_metrics = obs.trace_enabled(), obs.metrics_enabled()
+    obs.enable(trace=False, metrics_on=True)
+    findings: List[Finding] = []
+    try:
+        data, _ = make_angular_clusters(
+            400, 48, 8, kappa=120, noise_frac=0.3, seed=5
+        )
+        bk = RandomProjectionBackend(**kw)
+        bk.fit(data[:256])
+        bk.partial_fit(data[256:])  # capacity doubles: append slack on board
+        rows = np.arange(48)
+        bk.query_counts(rows, 0.55)  # warm the lattice at this query shape
+        bk.query_hits(rows, 0.55)
+        state = bk.state_export()
+
+        pre = metrics.counter("sweep.recompiles").value
+        bk2 = RandomProjectionBackend(**kw).state_import(state)
+        bk2.query_counts(rows, 0.55)
+        bk2.query_hits(rows, 0.55)
+        delta = metrics.counter("sweep.recompiles").value - pre
+        if delta:
+            findings.append(
+                Finding(
+                    "jaxpr-restore-replica", "src/repro/index/random_projection.py",
+                    0,
+                    f"restored replica compiled {delta} new sweep "
+                    f"signature(s) re-running the pre-crash query shapes "
+                    f"— state_import does not reproduce the capacity-"
+                    f"shaped operands",
+                    hint="export/import the full capacity buffers "
+                    "(_data_buf/_sigs_buf), not the n-row views",
+                )
+            )
+    finally:
+        if was_trace or was_metrics:
+            obs.enable(trace=was_trace, metrics_on=was_metrics)
+        else:
+            obs.disable()
+    return findings
+
+
+@register(
+    "jaxpr-restore-replica", family="jaxpr", code="LAF108",
+    description="snapshot restore reuses pre-crash compile signatures "
+    "(recompile-free recovery)",
+)
+def _check_restore_replica(ctx) -> List[Finding]:
+    if getattr(ctx, "dynamic", True):
+        return _restore_probe_findings()
+    return []

@@ -34,6 +34,7 @@ class StreamConfig:
     shortlist: int = 8           # serve: centroid clusters expanded per query
     min_hits: int = 1            # serve: eps-neighbors required to assign
     max_dead_frac: float = 0.25  # eviction: tombstone fraction forcing rebuild
+    snapshot_every: int = 8      # durability: WAL batches between snapshots
 
 
 @dataclass(frozen=True)

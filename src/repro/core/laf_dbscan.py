@@ -25,7 +25,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..obs import device as _obs_device, metrics as _metrics, span as _span
+from ..obs import device as _obs_device, get_logger, metrics as _metrics, rate_limited_warn, span as _span
+from ..testing import faults as _faults
 from .dbscan import NOISE, UNDEFINED, DBSCANResult
 from .postprocess import PartialNeighborMap, post_processing, update_partial_neighbors
 from .range_query import pack_bitmap, unpack_bitmap
@@ -117,6 +118,7 @@ def laf_dbscan(
     backend="exact",
     device="auto",
     cluster_device="auto",
+    on_device_fault: str = "degrade",
 ) -> DBSCANResult:
     """Batch-parallel LAF-DBSCAN engine.
 
@@ -139,6 +141,10 @@ def laf_dbscan(
         ``True`` forces the device program even for host backends (the
         packed blocks are uploaded once — the exact-backend parity
         mode); ``False`` forces the host pass.
+      on_device_fault: ``"degrade"`` (default) falls back to the
+        bit-exact host unpack → union-find pass when the device cluster
+        launch fails (recording ``stream.degraded.cluster`` and an
+        ``slo.violation``); ``"raise"`` surfaces the failure.
     """
     from ..index import as_fitted
 
@@ -150,7 +156,7 @@ def laf_dbscan(
         return _laf_dbscan_body(
             data, eps, tau, alpha, predicted_counts, as_fitted,
             block_size=block_size, seed=seed, backend=backend, device=device,
-            cluster_device=cluster_device,
+            cluster_device=cluster_device, on_device_fault=on_device_fault,
         )
     finally:
         cluster_span.__exit__(None, None, None)
@@ -170,6 +176,7 @@ def _cluster_pass_device(bk, eps, tau, exec_idx, n, native, block_size):
 
     from ..kernels.label_prop import packed_cluster_labels
 
+    _faults.maybe_fail("cluster.launch", n=int(n), n_exec=int(len(exec_idx)))
     n_exec = len(exec_idx)
     mesh = getattr(bk, "mesh", None) if native else None
     with _span("laf.pass1", n=n, n_exec=int(n_exec), block_size=block_size,
@@ -241,6 +248,7 @@ def _cluster_pass_device(bk, eps, tau, exec_idx, n, native, block_size):
 def _laf_dbscan_body(
     data, eps, tau, alpha, predicted_counts, as_fitted,
     *, block_size, seed, backend, device, cluster_device="auto",
+    on_device_fault="degrade",
 ):
     n = data.shape[0]
     with _span("laf.fit_index", backend=str(backend)):
@@ -259,14 +267,29 @@ def _laf_dbscan_body(
     )
     if use_device_cluster and n_exec:
         # ---- device-resident pass 1 + pass 2: one host sync ------------
-        labels, core, exact_counts, partial_counts = _cluster_pass_device(
-            bk, eps, tau, exec_idx, n, native, block_size
-        )
-        partial_counts[predicted_core] = 0  # 𝓔 keys: predicted-stop only
-        return _rescue_and_finish(
-            bk, eps, tau, seed, block_size, n, exec_idx, predicted_core,
-            labels, core, partial_counts,
-        )
+        try:
+            labels, core, exact_counts, partial_counts = _cluster_pass_device(
+                bk, eps, tau, exec_idx, n, native, block_size
+            )
+        except (RuntimeError, OSError) as exc:
+            if on_device_fault != "degrade":
+                raise
+            # fall through to the bit-exact host unpack -> union-find pass
+            from ..obs import slo as _slo
+
+            _metrics.counter("stream.degraded.events").inc()
+            _metrics.counter("stream.degraded.cluster").inc()
+            rate_limited_warn(
+                get_logger("cluster"), "degraded", "cluster_degraded",
+                error=type(exc).__name__, n=int(n), n_exec=int(n_exec),
+            )
+            _slo.check_and_alert(_slo.DEGRADED_SLOS)
+        else:
+            partial_counts[predicted_core] = 0  # 𝓔 keys: predicted-stop only
+            return _rescue_and_finish(
+                bk, eps, tau, seed, block_size, n, exec_idx, predicted_core,
+                labels, core, partial_counts,
+            )
 
     exact_counts = np.zeros(n, dtype=np.int64)
     partial_counts = np.zeros(n, dtype=np.int64)  # |𝓔(q)| for predicted-stop q

@@ -103,6 +103,25 @@ class RangeBackend:
             counts[start : start + len(sub)] = self.query_hits(sub, eps).sum(axis=1)
         return counts
 
+    # -- durability --------------------------------------------------------
+    def state_export(self) -> Dict[str, np.ndarray]:
+        """Snapshot the fitted state as a flat dict of host arrays.
+
+        The contract is **capacity-faithful**: backends that keep
+        capacity-padded append buffers (amortized-doubling slabs whose
+        shapes key the jit compile-signature lattice) export the *full*
+        buffers plus the live row count, so ``state_import`` on a fresh
+        instance reproduces identical operand shapes and a restored
+        replica re-enters the pre-crash compile cache — restore is
+        recompile-free by construction, not by luck.
+        """
+        raise NotImplementedError(f"{self.name!r} backend does not export state")
+
+    def state_import(self, state: Dict[str, np.ndarray]) -> "RangeBackend":
+        """Rebuild fitted state from a ``state_export`` dict (see its
+        capacity contract).  Returns self."""
+        raise NotImplementedError(f"{self.name!r} backend does not import state")
+
     # -- conveniences ------------------------------------------------------
     def neighbor_lists(self, eps: float, block_size: int = 2048) -> List[np.ndarray]:
         """Per-point sorted neighbor index arrays for the whole database."""

@@ -54,6 +54,20 @@ class ExactBackend(RangeBackend):
         self._data = self._buf[: n + b]
         return self
 
+    def state_export(self):
+        assert self._data is not None, "call fit() first"
+        # export the full doubling buffer (capacity contract: restored
+        # shapes == pre-crash shapes), falling back to the exact-n array
+        # when no append has happened yet
+        buf = self._buf if self._buf is not None else self._data
+        return {"n": np.int64(self._data.shape[0]), "buf": np.ascontiguousarray(buf)}
+
+    def state_import(self, state) -> "ExactBackend":
+        n = int(state["n"])
+        self._buf = np.ascontiguousarray(state["buf"], dtype=np.float32)
+        self._data = self._buf[:n]
+        return self
+
     def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
         assert self._data is not None, "call fit() first"
         return (self._data[rows] @ self._data.T) > (1.0 - eps)

@@ -72,6 +72,8 @@ from ..kernels.hamming_filter.ops import (
     hamming_filter_count,
 )
 from ..obs import get_logger, metrics as _metrics, rate_limited_warn
+from ..testing import faults as _faults
+from ..train.fault_tolerance import GuardedStep
 from .base import RangeBackend, register_backend
 from .signatures import (
     hamming_band,
@@ -117,11 +119,18 @@ class RandomProjectionBackend(RangeBackend):
         chunks_per_launch: int = DEFAULT_CHUNKS_PER_LAUNCH,
         pipeline_depth: int = 2,
         donate="auto",
+        on_device_fault: str = "degrade",
+        fault_retries: int = 2,
+        fault_backoff_s: float = 0.02,
     ):
         if verify not in ("band", "full"):
             raise ValueError(f"verify must be 'band' or 'full', got {verify!r}")
         if device not in (True, False, "auto"):
             raise ValueError(f"device must be True, False, or 'auto', got {device!r}")
+        if on_device_fault not in ("degrade", "raise"):
+            raise ValueError(
+                f"on_device_fault must be 'degrade' or 'raise', got {on_device_fault!r}"
+            )
         self.n_bits = n_bits
         self.margin = margin
         self.seed = seed
@@ -144,6 +153,17 @@ class RandomProjectionBackend(RangeBackend):
         self.chunks_per_launch = int(chunks_per_launch)
         self.pipeline_depth = int(pipeline_depth)
         self.donate = donate
+        # device-fault policy: "degrade" falls back to the bit-exact
+        # host oracle after ``fault_retries`` exponential-backoff
+        # retries; "raise" surfaces the failure to the caller.  Three
+        # consecutive degraded queries trip the sticky device-loss
+        # breaker (``_device_disabled``) — further queries go straight
+        # to host with no retry latency until the breaker is reset.
+        self.on_device_fault = on_device_fault
+        self.fault_retries = int(fault_retries)
+        self.fault_backoff_s = float(fault_backoff_s)
+        self._fault_streak = 0
+        self._device_disabled = False
         self._data: Optional[np.ndarray] = None
         self._sigs: Optional[np.ndarray] = None
         # append buffers: ``_data``/``_sigs`` are row views into these;
@@ -171,9 +191,70 @@ class RandomProjectionBackend(RangeBackend):
     @property
     def use_device(self) -> bool:
         """Whether queries run through the fused Pallas tile."""
+        if self._device_disabled:
+            return False
         if self.device == "auto":
             return not default_interpret()
         return bool(self.device)
+
+    @property
+    def _launch_site(self) -> str:
+        """Fault-injection site name for this backend's device dispatch."""
+        if self.mesh is not None:
+            return "plane.launch"
+        return "sweep.launch" if self.sweep else "chunk.launch"
+
+    def reset_device(self) -> None:
+        """Re-arm the device path after a sticky device-loss degrade."""
+        self._device_disabled = False
+        self._fault_streak = 0
+
+    def _guard_device(self, op: str, device_fn, host_fn):
+        """Run ``device_fn`` under retry-with-backoff; on exhaustion
+        degrade to ``host_fn`` (the bit-exact host oracle) per the
+        ``on_device_fault`` policy.  All degradation evidence flows
+        through the obs plane: ``stream.degraded.*`` counters, a
+        rate-limited structured warn, and an ``slo.violation`` event via
+        the degraded-SLO sweep."""
+        if self._device_disabled:
+            return host_fn()
+        step = GuardedStep(
+            device_fn,
+            max_retries=self.fault_retries,
+            retryable=(RuntimeError, OSError),
+            backoff_s=self.fault_backoff_s,
+        )
+        try:
+            res = step()
+        except (RuntimeError, OSError) as e:
+            if self.on_device_fault != "degrade":
+                raise
+            _metrics.counter("stream.degraded.events").inc()
+            _metrics.counter(f"stream.degraded.{op}").inc()
+            if len(step.failures) > 1:
+                _metrics.counter("stream.degraded.retries").inc(len(step.failures) - 1)
+            self._fault_streak += 1
+            rate_limited_warn(
+                get_logger("index"), "degraded", "device_degraded",
+                op=op, error=type(e).__name__, streak=self._fault_streak,
+            )
+            if self._fault_streak >= 3 and not self._device_disabled:
+                # device loss: every query is failing through all its
+                # retries — stop paying retry latency and pin to host
+                self._device_disabled = True
+                _metrics.counter("stream.degraded.device_disabled").inc()
+                rate_limited_warn(
+                    get_logger("index"), "device_loss", "device_disabled",
+                    op=op, streak=self._fault_streak,
+                )
+            from ..obs import slo as _slo
+
+            _slo.check_and_alert(_slo.DEGRADED_SLOS)
+            return host_fn()
+        if res.attempts > 1:
+            _metrics.counter("stream.degraded.retries").inc(res.attempts - 1)
+        self._fault_streak = 0
+        return res.value
 
     # -- index build -------------------------------------------------------
     def fit(self, data: np.ndarray) -> "RandomProjectionBackend":
@@ -267,6 +348,51 @@ class RandomProjectionBackend(RangeBackend):
         self._db_plane, self._sig_plane, self._plan = shard_database(
             self.mesh, self._data, self._sigs, self.mesh_axes, tile=self.db_tile
         )
+
+    # -- durability --------------------------------------------------------
+    def state_export(self):
+        """Capacity-faithful snapshot: the *full* doubling buffers (rows
+        + packed signatures, append slack included) plus the live row
+        count and the projection.  Importing on a fresh instance
+        reproduces identical operand shapes, so a restored replica
+        re-enters the pre-crash jit compile caches — restore is
+        recompile-free (the laf-lint restored-replica target pins this).
+        """
+        assert self._data is not None, "call fit() first"
+        return {
+            "n": np.int64(self._data.shape[0]),
+            "data_buf": np.ascontiguousarray(self._data_buf),
+            "sigs_buf": np.ascontiguousarray(self._sigs_buf),
+            "projection": np.ascontiguousarray(self.projection),
+            # config echo: a restore onto a differently-configured
+            # instance would silently change signatures / tile shapes
+            "n_bits": np.int64(self.n_bits),
+            "seed": np.int64(self.seed),
+            "db_tile": np.int64(self.db_tile),
+        }
+
+    def state_import(self, state) -> "RandomProjectionBackend":
+        if int(state["n_bits"]) != self.n_bits:
+            raise ValueError(
+                f"snapshot n_bits={int(state['n_bits'])} != backend n_bits={self.n_bits}"
+            )
+        if int(state["db_tile"]) != self.db_tile:
+            raise ValueError(
+                f"snapshot db_tile={int(state['db_tile'])} != backend db_tile={self.db_tile}"
+            )
+        n = int(state["n"])
+        self._data_buf = np.ascontiguousarray(state["data_buf"], dtype=np.float32)
+        self._sigs_buf = np.ascontiguousarray(state["sigs_buf"], dtype=np.uint32)
+        self._data = self._data_buf[:n]
+        self._sigs = self._sigs_buf[:n]
+        self.projection = np.ascontiguousarray(state["projection"], dtype=np.float32)
+        self.seed = int(state["seed"])
+        self._sigs_dev = None
+        self._data_dev = None
+        self._sweep_dev = None
+        self._host_sigs_dev = None
+        self._reshard()
+        return self
 
     @property
     def signatures(self) -> np.ndarray:
@@ -437,6 +563,7 @@ class RandomProjectionBackend(RangeBackend):
         return unpack_bitmap(bitmap, self._data.shape[0])
 
     def _sweep_hits_packed(self, rows: np.ndarray, eps: float):
+        _faults.maybe_fail(self._launch_site, op="hits")
         t_lo, t_hi = self.band(eps)
         q, q_sig = self._sweep_q(rows)
         n = self._data.shape[0]
@@ -475,6 +602,7 @@ class RandomProjectionBackend(RangeBackend):
         )
 
     def _sweep_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        _faults.maybe_fail(self._launch_site, op="counts")
         t_lo, t_hi = self.band(eps)
         q, q_sig = self._sweep_q(rows)
         n = self._data.shape[0]
@@ -503,6 +631,7 @@ class RandomProjectionBackend(RangeBackend):
         column side."""
         from ..core.range_query import unpack_bitmap
 
+        _faults.maybe_fail("chunk.launch", op="hits")
         t_lo, t_hi = self.band(eps)
         _, bitmap = hamming_filter_bitmap(
             q, db, q_sig, db_sig, eps, t_hi, t_lo=t_lo,
@@ -511,6 +640,7 @@ class RandomProjectionBackend(RangeBackend):
         return unpack_bitmap(np.asarray(bitmap), nd)
 
     def _device_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        _faults.maybe_fail("chunk.launch", op="counts")
         t_lo, t_hi = self.band(eps)
         q, q_sig = self._q_block(rows)
         counts = hamming_filter_count(
@@ -533,6 +663,7 @@ class RandomProjectionBackend(RangeBackend):
         from ..core.range_query import unpack_bitmap
         from ..distributed.index_plane import sharded_hamming_bitmap
 
+        _faults.maybe_fail("plane.launch", op="hits")
         t_lo, t_hi = self.band(eps)
         q, q_sig = self._q_block(rows)
         _, bitmap = sharded_hamming_bitmap(
@@ -545,6 +676,7 @@ class RandomProjectionBackend(RangeBackend):
     def _plane_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
         from ..distributed.index_plane import sharded_hamming_count
 
+        _faults.maybe_fail("plane.launch", op="counts")
         t_lo, t_hi = self.band(eps)
         q, q_sig = self._q_block(rows)
         counts = sharded_hamming_count(
@@ -570,37 +702,55 @@ class RandomProjectionBackend(RangeBackend):
             padded[: len(sub)] = sub
             yield start, sub, padded
 
-    def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
-        assert self._data is not None, "call fit() first"
-        rows = np.asarray(rows, dtype=np.int64)
+    def _host_query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        """The host oracle path (also the degraded-mode fallback)."""
         n = self._data.shape[0]
-        dev = self.use_device
-        if dev and self.sweep:
-            return self._sweep_hits(rows, eps)
         hit = np.zeros((len(rows), n), dtype=bool)
-        plane = dev and self.mesh is not None
-        if not dev:
-            sigs = self._host_sigs()
+        sigs = self._host_sigs()
+        for start, sub, padded in self._padded_chunks(rows):
+            ham = np.asarray(_hamming_sweep(sigs[padded], sigs))[: len(sub), :n]
+            hit[start : start + len(sub)] = self._tile_hits(sub, None, ham, eps)
+        return hit
+
+    def _dev_query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        if self.sweep:
+            return self._sweep_hits(rows, eps)
+        n = self._data.shape[0]
+        hit = np.zeros((len(rows), n), dtype=bool)
+        plane = self.mesh is not None
         for start, sub, padded in self._padded_chunks(rows):
             if plane:
                 hit[start : start + len(sub)] = self._plane_hits(padded, eps)[
                     : len(sub)
                 ]
                 continue
-            if dev:
-                q, q_sig = self._q_block(padded)
-                # nd=n truncates the capacity-pad columns off the bitmap
-                hit[start : start + len(sub)] = self._device_hits(
-                    q, q_sig, self._device_data(), self._device_sigs(), n, eps
-                )[: len(sub)]
-                continue
-            ham = np.asarray(_hamming_sweep(sigs[padded], sigs))[: len(sub), :n]
-            hit[start : start + len(sub)] = self._tile_hits(sub, None, ham, eps)
+            q, q_sig = self._q_block(padded)
+            # nd=n truncates the capacity-pad columns off the bitmap
+            hit[start : start + len(sub)] = self._device_hits(
+                q, q_sig, self._device_data(), self._device_sigs(), n, eps
+            )[: len(sub)]
         return hit
+
+    def query_hits(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        assert self._data is not None, "call fit() first"
+        rows = np.asarray(rows, dtype=np.int64)
+        if self.use_device:
+            return self._guard_device(
+                "hits",
+                lambda: self._dev_query_hits(rows, eps),
+                lambda: self._host_query_hits(rows, eps),
+            )
+        return self._host_query_hits(rows, eps)
 
     @property
     def packs_natively(self) -> bool:
         return self.use_device and self.sweep
+
+    def _host_query_hits_packed(self, rows: np.ndarray, eps: float):
+        from ..core.range_query import pack_bitmap
+
+        hit = self._host_query_hits(rows, eps)
+        return hit.sum(axis=1, dtype=np.int64), pack_bitmap(hit)
 
     def query_hits_packed(self, rows: np.ndarray, eps: float):
         """(counts, packed bitmap) — the sweep engine's native output;
@@ -610,46 +760,51 @@ class RandomProjectionBackend(RangeBackend):
         assert self._data is not None, "call fit() first"
         rows = np.asarray(rows, dtype=np.int64)
         if self.packs_natively:
-            return self._sweep_hits_packed(rows, eps)
+            return self._guard_device(
+                "packed",
+                lambda: self._sweep_hits_packed(rows, eps),
+                lambda: self._host_query_hits_packed(rows, eps),
+            )
         return super().query_hits_packed(rows, eps)
 
-    def query_hits_subset(
+    def _dev_query_hits_subset(
         self, rows: np.ndarray, cols: np.ndarray, eps: float
     ) -> np.ndarray:
-        assert self._data is not None and self._sigs is not None
-        rows = np.asarray(rows, dtype=np.int64)
-        cols = np.asarray(cols, dtype=np.int64)
-        if self.use_device:
-            # gather the column side once, not per row chunk; subset
-            # queries stay single-device even under mesh= (the gathered
-            # column side is small, the row-sharded plane only pays off
-            # on whole-database sweeps)
-            if self.mesh is not None:
-                db, db_sig = jnp.asarray(self._data[cols]), jnp.asarray(self._sigs[cols])
-            elif self.sweep:
-                sdb, sdbs = self._sweep_db()
-                cidx = jnp.asarray(cols)
-                db, db_sig = sdb[cidx], sdbs[cidx]
-            else:
-                cidx = jnp.asarray(cols)
-                db, db_sig = self._device_data()[cidx], self._device_sigs()[cidx]
-            if self.sweep:
-                from ..core.range_query import unpack_bitmap
+        # gather the column side once, not per row chunk; subset
+        # queries stay single-device even under mesh= (the gathered
+        # column side is small, the row-sharded plane only pays off
+        # on whole-database sweeps)
+        if self.mesh is not None:
+            db, db_sig = jnp.asarray(self._data[cols]), jnp.asarray(self._sigs[cols])
+        elif self.sweep:
+            sdb, sdbs = self._sweep_db()
+            cidx = jnp.asarray(cols)
+            db, db_sig = sdb[cidx], sdbs[cidx]
+        else:
+            cidx = jnp.asarray(cols)
+            db, db_sig = self._device_data()[cidx], self._device_sigs()[cidx]
+        if self.sweep:
+            from ..core.range_query import unpack_bitmap
 
-                t_lo, t_hi = self.band(eps)
-                q, q_sig = self._sweep_q(rows)
-                _, bitmap = sweep_bitmap(
-                    q, q_sig, db, db_sig, len(cols), eps, t_lo, t_hi,
-                    **self._sweep_kw(),
-                )
-                return unpack_bitmap(bitmap, len(cols))
-            hit = np.zeros((len(rows), len(cols)), dtype=bool)
-            for start, sub, padded in self._padded_chunks(rows):
-                q, q_sig = self._q_block(padded)
-                hit[start : start + len(sub)] = self._device_hits(
-                    q, q_sig, db, db_sig, len(cols), eps
-                )[: len(sub)]
-            return hit
+            _faults.maybe_fail(self._launch_site, op="subset")
+            t_lo, t_hi = self.band(eps)
+            q, q_sig = self._sweep_q(rows)
+            _, bitmap = sweep_bitmap(
+                q, q_sig, db, db_sig, len(cols), eps, t_lo, t_hi,
+                **self._sweep_kw(),
+            )
+            return unpack_bitmap(bitmap, len(cols))
+        hit = np.zeros((len(rows), len(cols)), dtype=bool)
+        for start, sub, padded in self._padded_chunks(rows):
+            q, q_sig = self._q_block(padded)
+            hit[start : start + len(sub)] = self._device_hits(
+                q, q_sig, db, db_sig, len(cols), eps
+            )[: len(sub)]
+        return hit
+
+    def _host_query_hits_subset(
+        self, rows: np.ndarray, cols: np.ndarray, eps: float
+    ) -> np.ndarray:
         # tile both axes: the host popcount materializes a
         # (rows, cols, words) XOR tensor, so keep tiles bounded even
         # when cols is a large core set
@@ -665,6 +820,20 @@ class RandomProjectionBackend(RangeBackend):
                 )
         return hit
 
+    def query_hits_subset(
+        self, rows: np.ndarray, cols: np.ndarray, eps: float
+    ) -> np.ndarray:
+        assert self._data is not None and self._sigs is not None
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        if self.use_device:
+            return self._guard_device(
+                "subset",
+                lambda: self._dev_query_hits_subset(rows, cols, eps),
+                lambda: self._host_query_hits_subset(rows, cols, eps),
+            )
+        return self._host_query_hits_subset(rows, cols, eps)
+
     def query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
         """Counts fast-path: never materializes a (block, n) hit matrix.
 
@@ -674,24 +843,34 @@ class RandomProjectionBackend(RangeBackend):
         """
         assert self._data is not None, "call fit() first"
         rows = np.asarray(rows, dtype=np.int64)
-        dev = self.use_device
-        if dev and self.sweep:
+        if self.use_device:
+            return self._guard_device(
+                "counts",
+                lambda: self._dev_query_counts(rows, eps),
+                lambda: self._host_query_counts(rows, eps),
+            )
+        return self._host_query_counts(rows, eps)
+
+    def _dev_query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        if self.sweep:
             return self._sweep_counts(rows, eps)
         counts = np.zeros(len(rows), dtype=np.int64)
-        plane = dev and self.mesh is not None
-        if not dev:
-            sigs = self._host_sigs()
+        plane = self.mesh is not None
         for start, sub, padded in self._padded_chunks(rows):
             if plane:
                 counts[start : start + len(sub)] = self._plane_counts(padded, eps)[
                     : len(sub)
                 ]
                 continue
-            if dev:
-                counts[start : start + len(sub)] = self._device_counts(padded, eps)[
-                    : len(sub)
-                ]
-                continue
+            counts[start : start + len(sub)] = self._device_counts(padded, eps)[
+                : len(sub)
+            ]
+        return counts
+
+    def _host_query_counts(self, rows: np.ndarray, eps: float) -> np.ndarray:
+        counts = np.zeros(len(rows), dtype=np.int64)
+        sigs = self._host_sigs()
+        for start, sub, padded in self._padded_chunks(rows):
             ham = np.asarray(_hamming_sweep(sigs[padded], sigs))[
                 : len(sub), : self._data.shape[0]
             ]

@@ -28,6 +28,7 @@ import jax
 from .hlo_analysis import analyze_hlo
 from ..configs.registry import get_arch, list_archs
 from ..obs import configure_logging, get_logger, log_event
+from ..testing import faults as _faults
 from .mesh import make_production_mesh
 from .steps import build_cell
 
@@ -125,7 +126,11 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool, out_dir: Path,
         "arch": arch_name, "shape": shape_name, "mesh": mesh_name,
         "n_devices": 512 if multi_pod else 256,
     }
+    plan = _faults.active()
+    if plan is not None:
+        record["fault_plan"] = plan.summary()
     try:
+        _faults.maybe_fail("dryrun.cell", arch=arch_name, shape=shape_name)
         mesh = make_production_mesh(multi_pod=multi_pod)
         cell = build_cell(arch_name, shape_name, mesh, variant=variant)
         with mesh:
@@ -229,10 +234,17 @@ def main():
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="install a seeded fault plan for this run, e.g. "
+                    "'seed=7,dryrun.cell=0.5' (same grammar as REPRO_FAULTS); "
+                    "injected cells are recorded as status=error with the "
+                    "plan summary in each record")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress per-cell progress lines (warnings still shown)")
     args = ap.parse_args()
     configure_logging(quiet=args.quiet)
+    if args.faults:
+        _faults.install(_faults.FaultPlan.parse(args.faults))
     out_dir = Path(args.out)
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[
         "multi" if args.multi_pod else args.mesh

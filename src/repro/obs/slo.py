@@ -37,6 +37,7 @@ __all__ = [
     "SERVE_SLOS",
     "INGEST_SLOS",
     "CLUSTER_SLOS",
+    "DEGRADED_SLOS",
     "EVAL_EVERY_CALLS",
     "set_slos",
     "resolve_metric",
@@ -109,6 +110,13 @@ CLUSTER_SLOS: List[SLO] = [
     SLO("cluster-ari", "cluster.ari", ">=", 0.99, "parity vs the host oracle"),
 ]
 
+DEGRADED_SLOS: List[SLO] = [
+    SLO(
+        "stream-degraded", "stream.degraded.events", "<=", 0.0,
+        "device query paths degraded to the host oracle (fault fallback)",
+    ),
+]
+
 # serve evaluates its rules every N assign() calls — cheap enough to
 # leave on in production, frequent enough to catch a latency regression
 # within one traffic burst
@@ -118,8 +126,14 @@ _lock = threading.Lock()
 
 
 def set_slos(kind: str, slos: Sequence[SLO]) -> None:
-    """Replace a default rule set ("serve" | "ingest" | "cluster")."""
-    target = {"serve": SERVE_SLOS, "ingest": INGEST_SLOS, "cluster": CLUSTER_SLOS}[kind]
+    """Replace a default rule set ("serve" | "ingest" | "cluster" |
+    "degraded")."""
+    target = {
+        "serve": SERVE_SLOS,
+        "ingest": INGEST_SLOS,
+        "cluster": CLUSTER_SLOS,
+        "degraded": DEGRADED_SLOS,
+    }[kind]
     with _lock:
         target[:] = list(slos)
 

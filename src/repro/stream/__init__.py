@@ -9,8 +9,11 @@ maintenance, and a serving-grade assignment API.
   mask, growable union-find, and the min-core-neighbor border rule.
 * :class:`~repro.stream.serve.ClusterIndex` — the immutable serving
   snapshot (centroid shortlist + band-verified assignment).
+* :class:`~repro.stream.durability.DurableStream` — snapshot/WAL crash
+  recovery and replica failover around a ``StreamingLAF``.
 """
 
+from .durability import DurableStream, clone_replica, export_replica, import_replica  # noqa: F401
 from .ingest import IngestReport, StreamingLAF  # noqa: F401
 from .serve import AssignResult, ClusterIndex  # noqa: F401
 from .state import StreamingClusterState  # noqa: F401

@@ -34,7 +34,7 @@ import numpy as np
 from ..configs.laf_dbscan import StreamConfig
 from ..core.range_query import pack_bitmap, unpack_bitmap
 from ..index import make_backend
-from ..obs import metrics as _metrics, slo as _slo, span as _span
+from ..obs import get_logger, metrics as _metrics, rate_limited_warn, slo as _slo, span as _span
 from .state import StreamingClusterState
 
 __all__ = ["StreamingLAF", "IngestReport"]
@@ -277,16 +277,26 @@ class StreamingLAF:
         need = self.state.evict(idx, hit)
         state = self.state
         if need or state.n_dead > self.max_dead_frac * max(state.n, 1):
-            self.rebuild()
+            self.rebuild(reason="core_death" if need else "tombstone_frac")
             return True
         self._serve = None
         return False
 
-    def rebuild(self) -> None:
+    def rebuild(self, reason: str = "manual") -> None:
         """Compact tombstones away: refit the backend on the live rows
         and replay them through the exact ingest path in one batch.
         O(n_live^2) — the price of deletions in density clustering; the
-        driver amortizes it behind ``max_dead_frac``."""
+        driver amortizes it behind ``max_dead_frac``.  Every rebuild is
+        visible: ``stream.rebuilds`` counts them and a rate-limited
+        structured warn records why (a rebuild storm is exactly the
+        degradation ROADMAP item 2b's decremental connectivity fixes)."""
+        _metrics.counter("stream.rebuilds").inc()
+        _metrics.counter(f"stream.rebuilds.{reason}").inc()
+        rate_limited_warn(
+            get_logger("stream"), "stream.rebuild", "stream.rebuild",
+            reason=reason, n=self.state.n, n_dead=self.state.n_dead,
+            version=self.state.version,
+        )
         live = np.nonzero(self.state.alive[: self.state.n])[0]
         data = np.ascontiguousarray(self.backend.data[live])
         self.backend.fit(data)

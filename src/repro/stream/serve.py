@@ -84,6 +84,7 @@ class ClusterIndex:
         version: int = 0,
         device="auto",
         sweep_kw: Optional[dict] = None,
+        centroids: Optional[np.ndarray] = None,
     ):
         if device not in (True, False, "auto"):
             raise ValueError(f"device must be True, False, or 'auto', got {device!r}")
@@ -106,17 +107,22 @@ class ClusterIndex:
         order = np.argsort(labels[idx], kind="stable")
         self._members = idx[order]
         self._offsets = np.searchsorted(labels[idx][order], np.arange(self.n_clusters + 1))
-        cents = np.zeros((self.n_clusters, data.shape[1]), dtype=np.float32)
-        for c in range(self.n_clusters):
-            cents[c] = data[self.members(c)].mean(axis=0)
-        norms = np.linalg.norm(cents, axis=1, keepdims=True)
-        self.centroids = cents / np.maximum(norms, 1e-12)
+        if centroids is not None and centroids.shape[0] == self.n_clusters:
+            # snapshot restore hands the saved centroids back so a
+            # replica skips the per-cluster mean pass at build time
+            self.centroids = np.ascontiguousarray(centroids, dtype=np.float32)
+        else:
+            cents = np.zeros((self.n_clusters, data.shape[1]), dtype=np.float32)
+            for c in range(self.n_clusters):
+                cents[c] = data[self.members(c)].mean(axis=0)
+            norms = np.linalg.norm(cents, axis=1, keepdims=True)
+            self.centroids = cents / np.maximum(norms, 1e-12)
         # candidate-bucket shapes this snapshot has launched (each new
         # power-of-two bucket is one engine compile — O(log n) total)
         self._seen_buckets: set = set()
 
     @classmethod
-    def from_stream(cls, stream) -> "ClusterIndex":
+    def from_stream(cls, stream, centroids: Optional[np.ndarray] = None) -> "ClusterIndex":
         bk = stream.backend
         sweep_kw = {
             k: getattr(bk, a)
@@ -137,6 +143,7 @@ class ClusterIndex:
             version=stream.state.version,
             device=getattr(bk, "device", "auto"),
             sweep_kw=sweep_kw,
+            centroids=centroids,
         )
 
     def members(self, c: int) -> np.ndarray:

@@ -298,6 +298,43 @@ class StreamingClusterState:
     def n_dead(self) -> int:
         return int(self.n - self.alive[: self.n].sum())
 
+    # -- durability --------------------------------------------------------
+    def export_arrays(self) -> dict:
+        """Snapshot as a flat dict of host arrays (capacity-faithful:
+        the doubling-grown state arrays and the union-find's parent/size
+        are exported whole, so a restored replica re-enters the same
+        amortized-growth schedule it crashed out of)."""
+        return {
+            "eps": np.float64(self.eps),
+            "tau": np.int64(self.tau),
+            "n": np.int64(self.n),
+            "version": np.int64(self.version),
+            "counts": self.counts.copy(),
+            "core": self.core.copy(),
+            "alive": self.alive.copy(),
+            "queried": self.queried.copy(),
+            "owner": self.owner.copy(),
+            "uf_parent": self.uf.parent[: self.n].copy(),
+            "uf_size": self.uf.size[: self.n].copy(),
+        }
+
+    @classmethod
+    def import_arrays(cls, state: dict) -> "StreamingClusterState":
+        """Rebuild from an ``export_arrays`` dict (bit-identical labels/
+        owners/counts — the kill-restore parity contract)."""
+        self = cls(float(state["eps"]), int(state["tau"]))
+        self.n = int(state["n"])
+        self.version = int(state["version"])
+        self.counts = np.ascontiguousarray(state["counts"], dtype=np.int64)
+        self.core = np.ascontiguousarray(state["core"], dtype=bool)
+        self.alive = np.ascontiguousarray(state["alive"], dtype=bool)
+        self.queried = np.ascontiguousarray(state["queried"], dtype=bool)
+        self.owner = np.ascontiguousarray(state["owner"], dtype=np.int64)
+        self.uf = UnionFind(self.n)
+        self.uf.parent[: self.n] = state["uf_parent"]
+        self.uf.size[: self.n] = state["uf_size"]
+        return self
+
     # -- extraction --------------------------------------------------------
     def labels(self) -> np.ndarray:
         """(n,) labels: -1 noise/dead, clusters 0..k-1 (compacted by

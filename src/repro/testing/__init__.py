@@ -1,0 +1,32 @@
+"""``repro.testing`` — deterministic fault injection for the launch
+surface (``repro.testing.faults``) plus checkpoint/WAL corruption
+helpers.  Test-and-CI infrastructure: everything here is a no-op unless
+a fault plan is explicitly installed (or ``REPRO_FAULTS`` is set)."""
+
+from .faults import (
+    FaultPlan,
+    FaultRule,
+    InjectedFault,
+    active,
+    clear,
+    corrupt_file,
+    inject,
+    install,
+    install_from_env,
+    maybe_fail,
+    truncate_file,
+)
+
+__all__ = [
+    "FaultPlan",
+    "FaultRule",
+    "InjectedFault",
+    "active",
+    "clear",
+    "corrupt_file",
+    "inject",
+    "install",
+    "install_from_env",
+    "maybe_fail",
+    "truncate_file",
+]

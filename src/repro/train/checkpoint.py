@@ -1,14 +1,25 @@
 """Sharded, atomic, async checkpointing with elastic resharding.
 
 Layout (one directory per step):
-    <root>/step_<N>.tmp/            written first
+    <root>/tmp-step_<N>/            written + fsynced first
         manifest.json               pytree structure + per-leaf metadata
+                                    (incl. per-array crc32 checksums)
         shard_<i>.npz               leaf arrays (flat index -> array)
     <root>/step_<N>/                atomic rename on completion
 
 Fault-tolerance properties:
-  * atomic: readers never see partial checkpoints (rename-commit);
-    an interrupted writer leaves only a .tmp dir that GC removes.
+  * atomic: readers never see partial checkpoints (rename-commit); the
+    temp dir carries a ``tmp-`` *prefix* so no ``step_*`` glob or
+    prefix check can ever pick a partial dir up, and an interrupted
+    writer leaves only a ``tmp-`` dir that GC removes.
+  * durable: every shard + the manifest are fsynced before the rename,
+    and the parent directory is fsynced after it, so a crash right
+    after ``save_checkpoint`` returns cannot lose the commit.
+  * verified: the manifest records one crc32 per leaf array;
+    ``restore_checkpoint`` re-checksums on read (``verify=False`` opts
+    out) and raises :class:`CheckpointCorruptError` on any mismatch or
+    truncated shard — callers fall back to an earlier step instead of
+    serving silently corrupt state.
   * keep-k GC with never-delete-newest-complete.
   * async: ``AsyncCheckpointer`` snapshots device arrays to host, then
     writes on a background thread — the train loop blocks only on the
@@ -24,16 +35,31 @@ Fault-tolerance properties:
 from __future__ import annotations
 
 import json
+import os
 import shutil
 import threading
 import time
+import zlib
 from pathlib import Path
 from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "AsyncCheckpointer", "gc_checkpoints"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "list_steps",
+    "AsyncCheckpointer",
+    "gc_checkpoints",
+    "CheckpointCorruptError",
+]
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed its read-back integrity check (missing or
+    truncated shard, checksum mismatch, unreadable manifest)."""
 
 
 def _flatten_with_paths(tree):
@@ -45,11 +71,39 @@ def _flatten_with_paths(tree):
     return flat, paths, treedef
 
 
-def save_checkpoint(root: str | Path, step: int, tree: Any, *, shard_size: int = 64) -> Path:
-    """Write one checkpoint atomically.  Returns the final directory."""
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+def _fsync_file(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: Path) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save_checkpoint(
+    root: str | Path, step: int, tree: Any, *, shard_size: int = 64,
+    fsync: bool = True,
+) -> Path:
+    """Write one checkpoint atomically + durably.  Returns the final
+    directory.  ``fsync=False`` skips the physical syncs (tests,
+    throwaway scratch dirs) — atomicity is kept either way."""
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
-    tmp = root / f"step_{step:012d}.tmp"
+    tmp = root / f"tmp-step_{step:012d}"
     final = root / f"step_{step:012d}"
     if tmp.exists():
         shutil.rmtree(tmp)
@@ -62,6 +116,7 @@ def save_checkpoint(root: str | Path, step: int, tree: Any, *, shard_size: int =
         "paths": paths,
         "dtypes": [str(a.dtype) for a in arrays],
         "shapes": [list(a.shape) for a in arrays],
+        "checksums": [_crc(a) for a in arrays],
         "shards": [],
         "written_at": time.time(),
     }
@@ -69,25 +124,40 @@ def save_checkpoint(root: str | Path, step: int, tree: Any, *, shard_size: int =
         idx = list(range(start, min(start + shard_size, len(arrays))))
         fname = f"shard_{start // shard_size:06d}.npz"
         np.savez(tmp / fname, **{f"leaf_{i}": arrays[i] for i in idx})
+        if fsync:
+            _fsync_file(tmp / fname)
         manifest["shards"].append({"file": fname, "leaves": idx})
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    mpath = tmp / "manifest.json"
+    mpath.write_text(json.dumps(manifest))
+    if fsync:
+        _fsync_file(mpath)
+        _fsync_dir(tmp)
     if final.exists():
         shutil.rmtree(final)
     tmp.rename(final)  # atomic commit
+    if fsync:
+        _fsync_dir(root)  # the rename itself must survive a crash
     return final
 
 
-def latest_step(root: str | Path) -> Optional[int]:
+def list_steps(root: str | Path) -> List[int]:
+    """Complete checkpoint steps under ``root``, ascending.  Partial
+    dirs (``tmp-`` prefixed, legacy ``.tmp`` suffixed, or missing their
+    manifest) never appear."""
     root = Path(root)
     if not root.exists():
-        return None
-    steps = [
+        return []
+    return sorted(
         int(p.name.split("_")[1])
         for p in root.iterdir()
         if p.is_dir() and p.name.startswith("step_") and not p.name.endswith(".tmp")
         and (p / "manifest.json").exists()
-    ]
-    return max(steps) if steps else None
+    )
+
+
+def latest_step(root: str | Path) -> Optional[int]:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(
@@ -96,21 +166,43 @@ def restore_checkpoint(
     *,
     template: Any = None,
     shardings: Any = None,
+    verify: bool = True,
 ):
     """Restore a checkpoint; lays arrays out for ``shardings`` if given
-    (elastic restore onto a different mesh)."""
+    (elastic restore onto a different mesh).  ``verify=True`` (default)
+    re-checksums every leaf against the manifest and raises
+    :class:`CheckpointCorruptError` on mismatch or a short read."""
     root = Path(root)
     if step is None:
         step = latest_step(root)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {root}")
     d = root / f"step_{step:012d}"
-    manifest = json.loads((d / "manifest.json").read_text())
+    try:
+        manifest = json.loads((d / "manifest.json").read_text())
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(f"{d}: unreadable manifest ({e})") from e
     leaves: List[Optional[np.ndarray]] = [None] * manifest["n_leaves"]
+    checksums = manifest.get("checksums")  # absent on pre-durability dirs
     for shard in manifest["shards"]:
-        with np.load(d / shard["file"]) as z:
-            for i in shard["leaves"]:
-                leaves[i] = z[f"leaf_{i}"]
+        try:
+            with np.load(d / shard["file"]) as z:
+                for i in shard["leaves"]:
+                    leaves[i] = z[f"leaf_{i}"]
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"{d}: shard {shard['file']} unreadable ({type(e).__name__}: {e})"
+            ) from e
+    if any(leaf is None for leaf in leaves):
+        raise CheckpointCorruptError(f"{d}: manifest shards do not cover all leaves")
+    if verify and checksums is not None:
+        for i, (leaf, want) in enumerate(zip(leaves, checksums)):
+            got = _crc(leaf)
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf {i} ({manifest['paths'][i]}) checksum mismatch "
+                    f"(crc32 {got:#010x} != manifest {want:#010x})"
+                )
     if template is not None:
         treedef = jax.tree_util.tree_structure(template)
     else:
@@ -125,16 +217,23 @@ def restore_checkpoint(
 
 def gc_checkpoints(root: str | Path, keep: int = 3) -> List[Path]:
     """Delete all but the newest ``keep`` complete checkpoints + any
-    orphaned .tmp dirs.  Returns deleted paths."""
+    orphaned partial dirs (``tmp-`` prefixed, legacy ``.tmp`` suffixed,
+    or manifest-less step dirs).  Returns deleted paths."""
     root = Path(root)
     if not root.exists():
         return []
     deleted = []
-    for p in root.glob("step_*.tmp"):
+    for p in list(root.glob("tmp-step_*")) + list(root.glob("step_*.tmp")):
         shutil.rmtree(p)
         deleted.append(p)
+    # a crash can also leave a committed-looking dir without a manifest
+    # (pre-durability writers): treat manifest-less step dirs as partial
+    for p in root.glob("step_*"):
+        if p.is_dir() and not (p / "manifest.json").exists():
+            shutil.rmtree(p)
+            deleted.append(p)
     complete = sorted(
-        (p for p in root.iterdir() if p.is_dir() and not p.name.endswith(".tmp")
+        (p for p in root.iterdir() if p.is_dir() and p.name.startswith("step_")
          and (p / "manifest.json").exists()),
         key=lambda p: p.name,
     )

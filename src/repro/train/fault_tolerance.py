@@ -44,11 +44,17 @@ class GuardedStep:
         max_retries: int = 2,
         on_restore: Optional[Callable[[], Any]] = None,
         retryable: Tuple[type, ...] = (RuntimeError, OSError),
+        backoff_s: float = 0.0,
+        backoff_mult: float = 2.0,
+        sleep: Callable[[float], None] = time.sleep,
     ):
         self.step_fn = step_fn
         self.max_retries = max_retries
         self.on_restore = on_restore
         self.retryable = retryable
+        self.backoff_s = backoff_s
+        self.backoff_mult = backoff_mult
+        self._sleep = sleep
         self.last_heartbeat = time.time()
         self.failures: List[str] = []
 
@@ -56,6 +62,7 @@ class GuardedStep:
         t0 = time.time()
         attempts = 0
         recovered = False
+        delay = self.backoff_s
         while True:
             attempts += 1
             self.last_heartbeat = time.time()
@@ -69,8 +76,12 @@ class GuardedStep:
                         self.on_restore()
                         recovered = True
                         attempts = 0
+                        delay = self.backoff_s
                         continue
                     raise
+                if delay > 0:
+                    self._sleep(delay)
+                    delay *= self.backoff_mult
 
 
 @dataclass

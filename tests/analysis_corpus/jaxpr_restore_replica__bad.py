@@ -1,0 +1,32 @@
+"""Corpus BAD: state_import trims the buffers to the exact row count —
+the restored replica's first sweep sees a fresh operand shape and pays
+an engine recompile that the pre-crash process never compiled.
+
+Imported (pure python) by the corpus runner: build() returns the
+compile signatures observed before the crash and after the restore.
+A compile signature here is what the jit cache keys the launch on:
+(capacity rows, signature words, db_tile) — the query-side shapes are
+identical in both runs, so only the database operands matter.
+"""
+
+DB_TILE = 64
+WORDS = 2  # 64-bit signatures -> 2 uint32 words
+
+
+def _capacity(n):
+    # amortized doubling: fit(256) then partial_fit to n=400 -> 512
+    cap = 256
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+def build():
+    n = 400
+    cap = _capacity(n)  # 512: what the pre-crash process compiled for
+    pre = [("sweep", cap, WORDS, DB_TILE)]
+    # the buggy restore: np.ascontiguousarray(state["buf"][:n]) — drops
+    # the append slack, so the post-restore operand is n-shaped
+    restored_rows = n
+    post = [("sweep", restored_rows, WORDS, DB_TILE)]
+    return {"pre_signatures": pre, "post_signatures": post}

@@ -1,0 +1,25 @@
+"""Corpus OK twin: state_import restores the full capacity buffers
+(append slack included), so the restored replica's sweep operands are
+bit-for-bit the pre-crash shapes — the first post-recovery query hits
+the existing executable cache and compiles nothing.
+"""
+
+DB_TILE = 64
+WORDS = 2
+
+
+def _capacity(n):
+    cap = 256
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+def build():
+    n = 400
+    cap = _capacity(n)
+    pre = [("sweep", cap, WORDS, DB_TILE)]
+    # capacity-faithful restore: the exported buffer keeps its full
+    # capacity shape, so the post-restore signature is identical
+    post = [("sweep", cap, WORDS, DB_TILE)]
+    return {"pre_signatures": pre, "post_signatures": post}

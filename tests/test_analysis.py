@@ -39,13 +39,13 @@ _AST_ONLY = {
 }
 
 
-def test_registry_loads_fourteen_checks():
+def test_registry_loads_fifteen_checks():
     load_all_checks()
-    assert len(CHECKS) == 14
+    assert len(CHECKS) == 15
     codes = sorted(s.code for s in CHECKS.values())
     assert codes == [
         "LAF101", "LAF102", "LAF103", "LAF104", "LAF105", "LAF106",
-        "LAF107",
+        "LAF107", "LAF108",
         "LAF201", "LAF202", "LAF203",
         "LAF301", "LAF302", "LAF303", "LAF304",
     ]
@@ -58,7 +58,7 @@ def test_list_checks_is_jax_free():
         "import sys\n"
         "from repro.analysis import load_all_checks, CHECKS\n"
         "load_all_checks()\n"
-        "assert len(CHECKS) == 14\n"
+        "assert len(CHECKS) == 15\n"
         "assert 'jax' not in sys.modules, 'listing checks imported jax'\n"
         "print('JAXFREE-OK')\n"
     )

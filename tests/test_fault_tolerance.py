@@ -1,0 +1,154 @@
+"""train.fault_tolerance: GuardedStep retry/backoff, straggler EWMA
+deadlines, elastic re-mesh planning."""
+
+import pytest
+
+from repro.train.fault_tolerance import (
+    GuardedStep,
+    StragglerPolicy,
+    plan_elastic_remesh,
+)
+
+
+class Flaky:
+    """Fails the first ``n_failures`` calls, then returns ``value``."""
+
+    def __init__(self, n_failures, value=42, exc=RuntimeError):
+        self.n_failures = n_failures
+        self.value = value
+        self.exc = exc
+        self.calls = 0
+
+    def __call__(self):
+        self.calls += 1
+        if self.calls <= self.n_failures:
+            raise self.exc(f"transient #{self.calls}")
+        return self.value
+
+
+class TestGuardedStep:
+    def test_clean_step_single_attempt(self):
+        step = GuardedStep(lambda: 7)
+        res = step()
+        assert res.value == 7
+        assert res.attempts == 1
+        assert not res.recovered
+        assert step.failures == []
+
+    def test_retries_transient_failures(self):
+        fn = Flaky(2)
+        res = GuardedStep(fn, max_retries=2)()
+        assert res.value == 42
+        assert res.attempts == 3
+        assert fn.calls == 3
+        assert not res.recovered
+
+    def test_exhausted_retries_raise_without_restore(self):
+        fn = Flaky(10)
+        step = GuardedStep(fn, max_retries=2)
+        with pytest.raises(RuntimeError):
+            step()
+        assert fn.calls == 3  # initial + 2 retries
+        assert len(step.failures) == 3
+
+    def test_restore_escalation_resets_attempts(self):
+        fn = Flaky(4)  # needs more than max_retries+1 calls
+        restores = []
+        res = GuardedStep(fn, max_retries=2, on_restore=lambda: restores.append(1))()
+        assert res.value == 42
+        assert res.recovered
+        assert restores == [1]
+
+    def test_non_retryable_surfaces_immediately(self):
+        fn = Flaky(1, exc=ValueError)
+        step = GuardedStep(fn, max_retries=5)
+        with pytest.raises(ValueError):
+            step()
+        assert fn.calls == 1
+        assert step.failures == []
+
+    def test_exponential_backoff_schedule(self):
+        sleeps = []
+        fn = Flaky(3)
+        res = GuardedStep(
+            fn, max_retries=3, backoff_s=0.1, backoff_mult=2.0,
+            sleep=sleeps.append,
+        )()
+        assert res.value == 42
+        assert sleeps == [0.1, 0.2, 0.4]
+
+    def test_backoff_resets_after_restore(self):
+        sleeps = []
+        fn = Flaky(4)
+        GuardedStep(
+            fn, max_retries=1, backoff_s=0.1, sleep=sleeps.append,
+            on_restore=lambda: None,
+        )()
+        # attempts 1,2 fail -> one backoff sleep between; attempt 3 fails
+        # (> max_retries) -> restore, delay resets; then 4 fails -> 0.1 again
+        assert sleeps[0] == pytest.approx(0.1)
+        assert 0.1 in sleeps[1:]  # the post-restore delay restarted
+
+    def test_zero_backoff_never_sleeps(self):
+        sleeps = []
+        GuardedStep(Flaky(2), max_retries=2, sleep=sleeps.append)()
+        assert sleeps == []
+
+
+class TestStragglerPolicy:
+    def test_first_observation_seeds_ewma(self):
+        p = StragglerPolicy()
+        out = p.observe(1.0)
+        assert not out["slow"]
+        assert out["ewma_s"] == pytest.approx(1.0)
+
+    def test_slow_step_flagged_and_not_folded_into_ewma(self):
+        p = StragglerPolicy(tolerance=2.0)
+        p.observe(1.0)
+        out = p.observe(5.0)  # > 2 * ewma
+        assert out["slow"]
+        assert p.ewma_s == pytest.approx(1.0)  # outlier excluded
+        assert p.slow_steps == [2]
+
+    def test_fast_steps_update_ewma(self):
+        p = StragglerPolicy(ewma_alpha=0.5)
+        p.observe(1.0)
+        p.observe(2.0)  # under 2x deadline -> folds in
+        assert p.ewma_s == pytest.approx(1.5)
+
+    def test_eject_after_consecutive_violations(self):
+        p = StragglerPolicy(tolerance=2.0, eject_after=3)
+        p.observe(1.0)
+        outs = [p.observe(10.0) for _ in range(3)]
+        assert [o["recommend_eject"] for o in outs] == [False, False, True]
+
+    def test_fast_step_resets_consecutive_count(self):
+        p = StragglerPolicy(tolerance=2.0, eject_after=2)
+        p.observe(1.0)
+        p.observe(10.0)
+        p.observe(1.0)  # resets
+        out = p.observe(10.0)
+        assert not out["recommend_eject"]
+
+
+class TestElasticRemesh:
+    def test_full_pod_keeps_preferred_model_axis(self):
+        (data, model), plan = plan_elastic_remesh(256, prefer_model=16)
+        assert (data, model) == (16, 16)
+        assert plan["devices_idle"] == 0
+
+    def test_device_loss_shrinks_data_axis_first(self):
+        (data, model), plan = plan_elastic_remesh(255, prefer_model=16)
+        assert model == 16
+        assert data == 15
+        assert plan["devices_used"] == 240
+        assert plan["devices_idle"] == 15
+
+    def test_model_axis_shrinks_only_below_one_replica(self):
+        (data, model), _ = plan_elastic_remesh(12, prefer_model=16, min_model=4)
+        assert model == 8
+        assert data == 1
+
+    def test_too_few_devices_raises(self):
+        with pytest.raises(ValueError):
+            plan_elastic_remesh(2, prefer_model=16, min_model=4)
